@@ -1,0 +1,61 @@
+//! Optimizer race: Addax vs MeZO vs IP-SGD vs SGD vs Adam vs the hybrid
+//! ZO-FO baseline on one task, printing a live convergence comparison —
+//! the Figure 11 experiment as an interactive example.
+//!
+//! ```sh
+//! cargo run --release --example optimizer_race [model] [task] [steps]
+//! ```
+
+use addax::coordinator::{train, TrainConfig};
+use addax::data::{opt_task, Dataset};
+use addax::optim::{Adam, Addax, HybridZoFo, IpSgd, MeZo, Optimizer, Sgd};
+use addax::runtime::manifest::default_artifacts_dir;
+use addax::runtime::XlaExec;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "tiny".to_string());
+    let task_name = std::env::args().nth(2).unwrap_or_else(|| "sst2".to_string());
+    let steps: usize =
+        std::env::args().nth(3).and_then(|s| s.parse().ok()).unwrap_or(400);
+
+    let mut exec = XlaExec::new(&default_artifacts_dir(), &model)?;
+    let entry = exec.entry().clone();
+    let task = opt_task(&task_name).expect("task");
+    let ds = Dataset::generate(task, entry.vocab, Some(entry.max_len), 0, 1000, 300, 500);
+
+    // MeZO gets 10x the steps (App. D.5: 20k vs 1k at paper scale).
+    let racers: Vec<(Box<dyn Optimizer>, usize)> = vec![
+        (Box::new(Addax::new(7e-2, 1e-3, 0.03, 6, 4)), steps),
+        (Box::new(IpSgd::new(7e-2, 4)), steps),
+        (Box::new(Sgd::new(7e-2, 16, Some(1.0))), steps),
+        (Box::new(Adam::new(5e-3, 8)), steps),
+        (Box::new(HybridZoFo::new(7e-2, 1e-4, 1e-3, 4, 0.5)), steps),
+        (Box::new(MeZo::new(1e-4, 1e-3, 16)), steps * 10),
+    ];
+
+    println!(
+        "== race: model={model} task={task_name} ({} steps; MeZO x10) ==\n",
+        steps
+    );
+    println!(
+        "{:<14} {:>6} {:>9} {:>9} {:>11} {:>10}",
+        "optimizer", "steps", "best_val", "test_acc", "t_best(s)", "total(s)"
+    );
+    for (mut opt, s) in racers {
+        let mut params = exec.load_initial_params()?;
+        let cfg = TrainConfig {
+            steps: s,
+            eval_every: (s / 20).max(1),
+            seed: 0,
+            eval_examples: 120,
+            log_path: None,
+            verbose: false,
+        };
+        let r = train(&mut exec, &mut params, &mut *opt, &ds, usize::MAX, &cfg)?;
+        println!(
+            "{:<14} {:>6} {:>9.3} {:>9.3} {:>11.1} {:>10.1}",
+            r.optimizer, s, r.best_val_acc, r.test_acc, r.time_to_best_secs, r.total_secs
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,206 @@
+"""AOT pipeline: lower the L2 model to HLO-text artifacts + manifest.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE, here; the rust binary is self-contained afterwards.
+
+Outputs (in ``--out-dir``, default ``../artifacts``):
+  manifest.json             — models, param order/shapes, artifact table
+  params_<model>.bin        — deterministic initial params, f32 LE, in
+                              ``param_specs`` order
+  <model>_{fwd,grad}_b{B}_l{L}.hlo.txt
+
+Usage:
+  python -m compile.aot [--out-dir DIR] [--models tiny,small,...]
+                        [--quick] [--vmem-report]
+
+Model keys: a bare preset name uses the Pallas kernels; ``<preset>-ref``
+uses the pure-jnp reference ops (numerically identical — asserted by the
+pytest suite — but faster under the CPU backend; used for the larger
+end-to-end runs, see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# (seq-len buckets, fwd batch, grad batch) per preset. The long-tail bucket
+# of each preset intentionally matches the task length distributions in
+# rust/src/data (Fig. 6): MultiRC-like tasks need the largest bucket.
+DEFAULT_BUCKETS: dict[str, list[int]] = {
+    "tiny": [32, 64, 128],
+    "small": [32, 64, 128, 256],
+    "base": [64, 128, 256, 512],
+    "opt125m": [128],
+    "mlm": [32, 64, 128],
+}
+DEFAULT_BATCH = 8
+
+#: Models built by a bare `make artifacts`. tiny/small/mlm exercise the
+#: Pallas path end-to-end; base-ref backs the larger e2e/figure runs.
+DEFAULT_MODELS = ["tiny", "tiny-ref", "small", "base-ref", "mlm"]
+
+
+def parse_model_key(key: str) -> tuple[M.ModelConfig, bool]:
+    """'small' -> (cfg, use_pallas=True); 'base-ref' -> (cfg, False)."""
+    use_pallas = True
+    preset = key
+    if key.endswith("-ref"):
+        use_pallas = False
+        preset = key[: -len("-ref")]
+    if preset not in M.PRESETS:
+        raise SystemExit(f"unknown preset {preset!r}; have {sorted(M.PRESETS)}")
+    return M.PRESETS[preset], use_pallas
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(cfg, use_pallas: bool, kind: str, batch: int, seq: int) -> str:
+    param_args = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in M.param_specs(cfg)
+    ]
+    ids = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    labels = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if kind == "forward":
+        fn = M.make_forward_fn(cfg, use_pallas=use_pallas)
+    elif kind == "grads":
+        fn = M.make_grads_fn(cfg, use_pallas=use_pallas)
+    else:
+        raise ValueError(kind)
+    lowered = jax.jit(fn).lower(*param_args, ids, labels)
+    return to_hlo_text(lowered)
+
+
+def dump_params(cfg, out: Path, seed: int = 0) -> int:
+    params = M.init_params(cfg, seed)
+    with out.open("wb") as f:
+        for name, _ in M.param_specs(cfg):
+            f.write(np.ascontiguousarray(params[name], np.float32).tobytes())
+    return out.stat().st_size
+
+
+def vmem_report(cfg) -> dict:
+    """Static VMEM-footprint estimate for the attention kernel's BlockSpec.
+
+    interpret=True gives CPU-numpy timings only, so TPU viability is judged
+    from the schedule geometry: per grid instance the kernel holds one
+    q-tile, streamed k/v tiles, and the f32 accumulator (DESIGN.md §8).
+    """
+    d = cfg.d_head
+    block = 128
+    f32 = 4
+    q_tile = block * d * f32
+    kv_tiles = 2 * block * d * f32
+    acc = block * d * f32 + 2 * block * f32  # acc + (m, l) carries
+    scores = block * block * f32
+    total = q_tile + kv_tiles + acc + scores
+    return {
+        "model": cfg.name,
+        "block": block,
+        "d_head": d,
+        "attn_vmem_bytes_per_instance": total,
+        "vmem_budget_bytes": 16 * 2**20,
+        "fits": total < 16 * 2**20,
+        # MXU utilization proxy: fraction of kernel FLOPs that are matmul.
+        "matmul_flops_per_tile": 2 * block * block * d * 2,
+        "softmax_flops_per_tile": 6 * block * block,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS))
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument(
+        "--quick", action="store_true", help="smallest bucket of each model only"
+    )
+    ap.add_argument("--vmem-report", action="store_true")
+    args = ap.parse_args()
+
+    model_keys = [m.strip() for m in args.models.split(",") if m.strip()]
+    if args.vmem_report:
+        for key in model_keys:
+            cfg, _ = parse_model_key(key)
+            print(json.dumps(vmem_report(cfg)))
+        return
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {"format_version": 1, "models": {}}
+
+    for key in model_keys:
+        cfg, use_pallas = parse_model_key(key)
+        buckets = DEFAULT_BUCKETS[cfg.name]
+        if args.quick:
+            buckets = buckets[:1]
+        entry = {
+            "impl": "pallas" if use_pallas else "ref",
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "max_len": cfg.max_len,
+            "causal": cfg.causal,
+            "n_params": cfg.n_params(),
+            "init_seed": 0,
+            "params_file": f"params_{cfg.name}.bin",
+            "params": [
+                {"name": n, "shape": list(s)} for n, s in M.param_specs(cfg)
+            ],
+            "artifacts": [],
+        }
+        pfile = out_dir / entry["params_file"]
+        if not pfile.exists():
+            nbytes = dump_params(cfg, pfile)
+            print(f"[aot] wrote {pfile.name} ({nbytes/1e6:.1f} MB)")
+
+        for seq in buckets:
+            for kind, tag in (("forward", "fwd"), ("grads", "grad")):
+                fname = f"{key}_{tag}_b{args.batch}_l{seq}.hlo.txt"
+                fpath = out_dir / fname
+                t0 = time.time()
+                if not fpath.exists():
+                    text = lower_artifact(cfg, use_pallas, kind, args.batch, seq)
+                    fpath.write_text(text)
+                    print(
+                        f"[aot] {fname}: {len(text)/1e6:.2f} MB "
+                        f"in {time.time()-t0:.1f}s"
+                    )
+                entry["artifacts"].append(
+                    {
+                        "kind": kind,
+                        "batch": args.batch,
+                        "seq_len": seq,
+                        "file": fname,
+                    }
+                )
+        manifest["models"][key] = entry
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"[aot] wrote manifest with {len(manifest['models'])} models")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for the Addax reproduction.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); each has a pure-jnp oracle in :mod:`ref`.
+"""
+
+from .attention import flash_attention
+from .layernorm import layernorm
+from .softmax_xent import softmax_xent
+
+__all__ = ["flash_attention", "layernorm", "softmax_xent"]

@@ -1,0 +1,299 @@
+"""Tiled flash-attention Pallas kernel (forward + backward).
+
+This is the L1 compute hot-spot of the Addax reproduction: the paper's
+memory observation (activation memory grows fast with sequence length for
+the backward path, Figure 4) is exactly the quantity this kernel's
+HBM<->VMEM schedule controls.
+
+Hardware adaptation (paper targets A100 fp16 / CUDA threadblocks):
+  * the grid is (batch*heads, q-blocks) — the TPU analogue of a
+    threadblock per (head, q-tile);
+  * K/V are streamed block-by-block from the kernel's HBM-resident refs
+    into VMEM tiles via ``pl.dynamic_slice`` inside a ``fori_loop``
+    (online-softmax recurrence), instead of CUDA shared-memory staging;
+  * tiles are sized for the 128x128 MXU (``block=128`` default, f32
+    accumulation), see DESIGN.md §Hardware-Adaptation / §8.
+
+Executed with ``interpret=True`` everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so real-TPU lowering is a compile-only target and
+numerics are validated through the interpret path against ``ref.py``.
+
+The backward pass is the standard flash-attention recomputation scheme:
+the forward saves per-row log-sum-exp (``lse``); the backward recomputes
+the score tiles and produces (dq, dk, dv) with two kernels (one gridded
+over q-blocks, one over kv-blocks).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+DEFAULT_BLOCK = 128
+
+
+def _choose_block(seq_len: int, block: int) -> int:
+    """Largest divisor of ``seq_len`` that is <= ``block``."""
+    b = min(block, seq_len)
+    while seq_len % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(
+    q_ref, k_ref, v_ref, mask_ref, o_ref, lse_ref, *, scale, causal, block, seq_len
+):
+    qb = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)  # [B, D]
+    bq, d = q.shape
+    nk = seq_len // block
+
+    q_rows = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block), 0)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k_tile = k_ref[0, pl.ds(j * block, block), :].astype(jnp.float32)
+        v_tile = v_ref[0, pl.ds(j * block, block), :].astype(jnp.float32)
+        msk = mask_ref[0, pl.ds(j * block, block)].astype(jnp.float32)
+        s = jnp.dot(q, k_tile.T, preferred_element_type=jnp.float32) * scale
+        s = s + (1.0 - msk)[None, :] * NEG_INF
+        if causal:
+            k_cols = j * block + jax.lax.broadcasted_iota(jnp.int32, (bq, block), 1)
+            s = jnp.where(k_cols <= q_rows, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            p, v_tile, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    # Causal: kv blocks strictly above the diagonal block contribute nothing.
+    hi = jnp.minimum(nk, qb + 1) if causal else nk
+    m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, acc0))
+    l_safe = jnp.maximum(l, 1e-30)  # fully-masked (padded) query rows
+    o_ref[0] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+    lse_ref[0] = (m + jnp.log(l_safe)).astype(lse_ref.dtype)
+
+
+def _fwd(q, k, v, kv_mask, *, scale, causal, block):
+    bh, l, d = q.shape
+    b = _choose_block(l, block)
+    nq = l // b
+    grid = (bh, nq)
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, block=b, seq_len=l
+    )
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, b, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, l, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, l, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, l), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, b), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, l, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, l), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, kv_mask)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels
+# ---------------------------------------------------------------------------
+
+
+def _dq_kernel(
+    q_ref, k_ref, v_ref, mask_ref, do_ref, lse_ref, delta_ref, dq_ref,
+    *, scale, causal, block, seq_len,
+):
+    qb = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0].astype(jnp.float32)
+    delta = delta_ref[0].astype(jnp.float32)
+    bq, d = q.shape
+    nk = seq_len // block
+    q_rows = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block), 0)
+
+    def body(j, dq):
+        k_tile = k_ref[0, pl.ds(j * block, block), :].astype(jnp.float32)
+        v_tile = v_ref[0, pl.ds(j * block, block), :].astype(jnp.float32)
+        msk = mask_ref[0, pl.ds(j * block, block)].astype(jnp.float32)
+        s = jnp.dot(q, k_tile.T, preferred_element_type=jnp.float32) * scale
+        s = s + (1.0 - msk)[None, :] * NEG_INF
+        if causal:
+            k_cols = j * block + jax.lax.broadcasted_iota(jnp.int32, (bq, block), 1)
+            s = jnp.where(k_cols <= q_rows, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = jnp.dot(do, v_tile.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        return dq + jnp.dot(ds, k_tile, preferred_element_type=jnp.float32)
+
+    hi = jnp.minimum(nk, qb + 1) if causal else nk
+    dq = jax.lax.fori_loop(0, hi, body, jnp.zeros((bq, d), jnp.float32))
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+
+
+def _dkv_kernel(
+    q_ref, k_ref, v_ref, mask_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
+    *, scale, causal, block, seq_len,
+):
+    kb = pl.program_id(1)
+    k_blk = k_ref[0].astype(jnp.float32)  # [B, D]
+    v_blk = v_ref[0].astype(jnp.float32)
+    msk = mask_ref[0].astype(jnp.float32)
+    bk, d = k_blk.shape
+    nq = seq_len // block
+    k_cols = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (block, bk), 1)
+
+    def body(j, carry):
+        dk, dv = carry
+        q_tile = q_ref[0, pl.ds(j * block, block), :].astype(jnp.float32)
+        do_tile = do_ref[0, pl.ds(j * block, block), :].astype(jnp.float32)
+        lse_tile = lse_ref[0, pl.ds(j * block, block)].astype(jnp.float32)
+        delta_tile = delta_ref[0, pl.ds(j * block, block)].astype(jnp.float32)
+        s = jnp.dot(q_tile, k_blk.T, preferred_element_type=jnp.float32) * scale
+        s = s + (1.0 - msk)[None, :] * NEG_INF
+        if causal:
+            q_rows = j * block + jax.lax.broadcasted_iota(jnp.int32, (block, bk), 0)
+            s = jnp.where(k_cols <= q_rows, s, NEG_INF)
+        p = jnp.exp(s - lse_tile[:, None])
+        dv_new = dv + jnp.dot(p.T, do_tile, preferred_element_type=jnp.float32)
+        dp = jnp.dot(do_tile, v_blk.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_tile[:, None]) * scale
+        dk_new = dk + jnp.dot(ds.T, q_tile, preferred_element_type=jnp.float32)
+        return dk_new, dv_new
+
+    # Causal: q blocks strictly below the diagonal block contribute nothing.
+    lo = jnp.minimum(kb, nq) if causal else 0
+    dk0 = jnp.zeros((bk, d), jnp.float32)
+    dv0 = jnp.zeros((bk, d), jnp.float32)
+    dk, dv = jax.lax.fori_loop(lo, nq, body, (dk0, dv0))
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _bwd(q, k, v, kv_mask, o, lse, do, *, scale, causal, block):
+    bh, l, d = q.shape
+    b = _choose_block(l, block)
+    n = l // b
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    dq_kernel = functools.partial(
+        _dq_kernel, scale=scale, causal=causal, block=b, seq_len=l
+    )
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid=(bh, n),
+        in_specs=[
+            pl.BlockSpec((1, b, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, l, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, l, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, b, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, b), lambda i, j: (i, j)),
+            pl.BlockSpec((1, b), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, b, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, l, d), q.dtype),
+        interpret=True,
+    )(q, k, v, kv_mask, do, lse, delta)
+
+    dkv_kernel = functools.partial(
+        _dkv_kernel, scale=scale, causal=causal, block=b, seq_len=l
+    )
+    dk, dv = pl.pallas_call(
+        dkv_kernel,
+        grid=(bh, n),
+        in_specs=[
+            pl.BlockSpec((1, l, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, b, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, b, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, b), lambda i, j: (i, j)),
+            pl.BlockSpec((1, l, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, l), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, b, d), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, l, d), k.dtype),
+            jax.ShapeDtypeStruct((bh, l, d), v.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, kv_mask, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash_attention(scale: float, causal: bool, block: int):
+    @jax.custom_vjp
+    def attn(q, k, v, kv_mask):
+        o, _ = _fwd(q, k, v, kv_mask, scale=scale, causal=causal, block=block)
+        return o
+
+    def attn_fwd(q, k, v, kv_mask):
+        o, lse = _fwd(q, k, v, kv_mask, scale=scale, causal=causal, block=block)
+        return o, (q, k, v, kv_mask, o, lse)
+
+    def attn_bwd(res, do):
+        q, k, v, kv_mask, o, lse = res
+        dq, dk, dv = _bwd(
+            q, k, v, kv_mask, o, lse, do, scale=scale, causal=causal, block=block
+        )
+        return dq, dk, dv, jnp.zeros_like(kv_mask)
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    kv_mask: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block: int = DEFAULT_BLOCK,
+) -> jax.Array:
+    """Flash attention over ``[BH, L, D]`` inputs with a ``[BH, L]`` key mask.
+
+    Differentiable (custom VJP with flash-style recomputation). Matches
+    :func:`ref.attention_ref` to float32 tolerance.
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    return _make_flash_attention(float(scale), bool(causal), int(block))(
+        q, k, v, kv_mask
+    )

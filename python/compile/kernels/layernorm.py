@@ -1,0 +1,149 @@
+"""Fused layer-normalization Pallas kernel (forward + backward).
+
+Mean/variance/normalize/scale-shift fused into one VMEM-resident pass per
+row block; the backward recomputes ``xhat`` from saved (mu, rstd) and emits
+per-block partial reductions for (dgamma, dbeta) that are summed outside
+the kernel (the TPU analogue of a two-stage grid reduction).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 8
+
+
+def _choose_block(n: int, block: int) -> int:
+    b = min(block, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _fwd_kernel(x_ref, gamma_ref, beta_ref, y_ref, mu_ref, rstd_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)  # [BN, D]
+    gamma = gamma_ref[...].astype(jnp.float32)
+    beta = beta_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=1)
+    xc = x - mu[:, None]
+    var = jnp.mean(xc * xc, axis=1)
+    rstd = jax.lax.rsqrt(var + eps)
+    y = xc * rstd[:, None] * gamma[None, :] + beta[None, :]
+    y_ref[...] = y.astype(y_ref.dtype)
+    mu_ref[...] = mu.astype(mu_ref.dtype)
+    rstd_ref[...] = rstd.astype(rstd_ref.dtype)
+
+
+def _bwd_kernel(
+    x_ref, gamma_ref, mu_ref, rstd_ref, dy_ref, dx_ref, dgamma_ref, dbeta_ref
+):
+    x = x_ref[...].astype(jnp.float32)
+    gamma = gamma_ref[...].astype(jnp.float32)
+    mu = mu_ref[...].astype(jnp.float32)
+    rstd = rstd_ref[...].astype(jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    xhat = (x - mu[:, None]) * rstd[:, None]
+    wdy = dy * gamma[None, :]
+    c1 = jnp.mean(wdy, axis=1)
+    c2 = jnp.mean(wdy * xhat, axis=1)
+    dx = (wdy - c1[:, None] - xhat * c2[:, None]) * rstd[:, None]
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+    # Per-block partial reductions, summed by the caller.
+    dgamma_ref[...] = jnp.sum(dy * xhat, axis=0, keepdims=True).astype(
+        dgamma_ref.dtype
+    )
+    dbeta_ref[...] = jnp.sum(dy, axis=0, keepdims=True).astype(dbeta_ref.dtype)
+
+
+def _fwd(x, gamma, beta, *, eps, block_n):
+    n, d = x.shape
+    b = _choose_block(n, block_n)
+    kernel = functools.partial(_fwd_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, d), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), x.dtype),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, gamma, beta)
+
+
+def _bwd(x, gamma, mu, rstd, dy, *, block_n):
+    n, d = x.shape
+    b = _choose_block(n, block_n)
+    nb = n // b
+    dx, dgamma_part, dbeta_part = pl.pallas_call(
+        _bwd_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), x.dtype),
+            jax.ShapeDtypeStruct((nb, d), jnp.float32),
+            jax.ShapeDtypeStruct((nb, d), jnp.float32),
+        ],
+        interpret=True,
+    )(x, gamma, mu, rstd, dy)
+    return dx, jnp.sum(dgamma_part, axis=0), jnp.sum(dbeta_part, axis=0)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_layernorm(eps: float, block_n: int):
+    @jax.custom_vjp
+    def ln(x, gamma, beta):
+        y, _, _ = _fwd(x, gamma, beta, eps=eps, block_n=block_n)
+        return y
+
+    def ln_fwd(x, gamma, beta):
+        y, mu, rstd = _fwd(x, gamma, beta, eps=eps, block_n=block_n)
+        return y, (x, gamma, mu, rstd)
+
+    def ln_bwd(res, dy):
+        x, gamma, mu, rstd = res
+        dx, dgamma, dbeta = _bwd(x, gamma, mu, rstd, dy, block_n=block_n)
+        return dx, dgamma.astype(gamma.dtype), dbeta.astype(gamma.dtype)
+
+    ln.defvjp(ln_fwd, ln_bwd)
+    return ln
+
+
+def layernorm(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    *,
+    eps: float = 1e-5,
+    block_n: int = DEFAULT_BLOCK_N,
+) -> jax.Array:
+    """Layer norm over the last axis, ``[N, D]`` rows. Differentiable.
+
+    Matches :func:`ref.layernorm_ref`.
+    """
+    return _make_layernorm(float(eps), int(block_n))(x, gamma, beta)

@@ -1,0 +1,79 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness target).
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+counterpart here. The pytest/hypothesis suites assert allclose between the
+two across shape/dtype sweeps, and the model can be built entirely on these
+references (``use_pallas=False``) to isolate kernel bugs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite stand-in for -inf: keeps exp() exact-zero without NaNs
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    kv_mask: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Reference scaled-dot-product attention.
+
+    Args:
+      q, k, v: ``[BH, L, D]`` (batch*heads folded into the leading dim).
+      kv_mask: ``[BH, L]`` float mask, 1.0 for valid keys, 0.0 for padding.
+      causal: apply a causal mask.
+      scale: softmax temperature; defaults to ``1/sqrt(D)``.
+
+    Returns:
+      ``[BH, L, D]`` attention output.
+    """
+    bh, l, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    bias = (1.0 - kv_mask[:, None, :]) * NEG_INF
+    if causal:
+        idx = jnp.arange(l)
+        bias = bias + jnp.where(idx[None, :, None] >= idx[None, None, :], 0.0, NEG_INF)
+    s = s + bias
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def softmax_xent_ref(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Reference per-row softmax cross entropy.
+
+    Args:
+      logits: ``[N, V]``.
+      labels: ``[N]`` int32; rows with label < 0 are ignored (loss 0).
+
+    Returns:
+      ``[N]`` per-row losses.
+    """
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(
+        logits, jnp.clip(labels, 0)[:, None], axis=-1
+    ).squeeze(-1)
+    loss = lse - picked
+    return jnp.where(labels >= 0, loss, 0.0)
+
+
+def layernorm_ref(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, *, eps: float = 1e-5
+) -> jax.Array:
+    """Reference layer normalization over the last axis.
+
+    Args:
+      x: ``[N, D]``.
+      gamma, beta: ``[D]`` scale and shift.
+    """
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta

@@ -1,0 +1,130 @@
+"""Fused softmax-cross-entropy Pallas kernel (forward + backward).
+
+Computes per-row ``logsumexp(logits) - logits[label]`` without
+materializing the probability matrix in HBM — the fusion the paper's
+fp16 fine-tuning path relies on to keep the loss head cheap.
+
+Rows with ``label < 0`` are ignored (zero loss, zero gradient); the model
+uses this for padded positions.
+
+Tiling: the grid runs over row blocks; each instance keeps one
+``[block_n, V]`` logits tile in VMEM. For vocabularies beyond VMEM a
+two-pass V-blocked variant would be used on real TPUs; at this repo's
+vocab sizes (<= 8k) a single V-resident tile is within the ~16 MiB VMEM
+budget (see DESIGN.md §8) so we keep the single-pass schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 8
+
+
+def _choose_block(n: int, block: int) -> int:
+    b = min(block, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _fwd_kernel(logits_ref, labels_ref, loss_ref, lse_ref):
+    x = logits_ref[...].astype(jnp.float32)  # [BN, V]
+    labels = labels_ref[...]  # [BN]
+    bn, v = x.shape
+    m = jnp.max(x, axis=1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(x - m[:, None]), axis=1))
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bn, v), 1)
+    onehot = (cols == jnp.clip(labels, 0)[:, None]).astype(jnp.float32)
+    picked = jnp.sum(x * onehot, axis=1)
+    valid = (labels >= 0).astype(jnp.float32)
+    loss_ref[...] = ((lse - picked) * valid).astype(loss_ref.dtype)
+    lse_ref[...] = lse.astype(lse_ref.dtype)
+
+
+def _bwd_kernel(logits_ref, labels_ref, lse_ref, g_ref, dlogits_ref):
+    x = logits_ref[...].astype(jnp.float32)
+    labels = labels_ref[...]
+    lse = lse_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    bn, v = x.shape
+    p = jnp.exp(x - lse[:, None])
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bn, v), 1)
+    onehot = (cols == jnp.clip(labels, 0)[:, None]).astype(jnp.float32)
+    valid = (labels >= 0).astype(jnp.float32)
+    dlogits_ref[...] = ((p - onehot) * (g * valid)[:, None]).astype(dlogits_ref.dtype)
+
+
+def _fwd(logits, labels, *, block_n):
+    n, v = logits.shape
+    b = _choose_block(n, block_n)
+    loss, lse = pl.pallas_call(
+        _fwd_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b, v), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(logits, labels)
+    return loss, lse
+
+
+def _bwd(logits, labels, lse, g, *, block_n):
+    n, v = logits.shape
+    b = _choose_block(n, block_n)
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b, v), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b, v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, v), logits.dtype),
+        interpret=True,
+    )(logits, labels, lse, g)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_softmax_xent(block_n: int):
+    @jax.custom_vjp
+    def xent(logits, labels):
+        loss, _ = _fwd(logits, labels, block_n=block_n)
+        return loss
+
+    def xent_fwd(logits, labels):
+        loss, lse = _fwd(logits, labels, block_n=block_n)
+        return loss, (logits, labels, lse)
+
+    def xent_bwd(res, g):
+        logits, labels, lse = res
+        dlogits = _bwd(logits, labels, lse, g, block_n=block_n)
+        return dlogits, None
+
+    xent.defvjp(xent_fwd, xent_bwd)
+    return xent
+
+
+def softmax_xent(
+    logits: jax.Array, labels: jax.Array, *, block_n: int = DEFAULT_BLOCK_N
+) -> jax.Array:
+    """Per-row softmax cross entropy, ``[N, V] x [N] -> [N]``.
+
+    Differentiable in ``logits``. Matches :func:`ref.softmax_xent_ref`.
+    """
+    return _make_softmax_xent(int(block_n))(logits, labels)

@@ -1,0 +1,256 @@
+"""L2: OPT-style transformer LM in JAX, calling the L1 Pallas kernels.
+
+This is the paper's fine-tuning target, written so that the whole
+computation lowers to a single HLO module per (batch, seq-len) bucket:
+
+  * ``forward``  — per-example (sum_loss, token_count); two of these back
+    every SPSA/MeZO zeroth-order estimate, one backs validation candidate
+    scoring (average log-likelihood, App. D.3).
+  * ``grads``    — mean loss + per-tensor gradients; one of these backs
+    every first-order (IP-SGD / Addax FO) half-step.
+
+Parameters are **inputs** to every artifact (rust owns the state and does
+the in-place updates of Algorithm 1); the flattening order is fixed by
+:func:`param_specs` and recorded in the manifest.
+
+Labels follow the causal-LM convention: ``labels[b, t]`` is the target for
+position ``t`` (usually ``ids[b, t+1]``); positions with ``labels < 0``
+are ignored. Classification tasks are scored the way the paper scores OPT
+(App. D.3): per-candidate average log-likelihood over the verbalizer
+region, computed from the per-example (sum, count) outputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import flash_attention, layernorm, softmax_xent
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Geometry of one transformer preset."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ff: int
+    max_len: int
+    causal: bool = True  # False => RoBERTa-style bidirectional encoder
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        return sum(int(np.prod(s)) for _, s in param_specs(self))
+
+
+#: Laptop-scale presets that actually train in this repo. The huge-model
+#: geometries used by the memory model live in rust/src/memory/geometry.rs.
+PRESETS: dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", vocab=512, d_model=64, n_heads=2, n_layers=2,
+                        d_ff=256, max_len=128),
+    "small": ModelConfig("small", vocab=2048, d_model=128, n_heads=4,
+                         n_layers=4, d_ff=512, max_len=256),
+    "base": ModelConfig("base", vocab=4096, d_model=256, n_heads=8,
+                        n_layers=6, d_ff=1024, max_len=512),
+    # OPT-125M-shaped geometry for the scaling-proof run (EXPERIMENTS.md).
+    "opt125m": ModelConfig("opt125m", vocab=8192, d_model=768, n_heads=12,
+                           n_layers=12, d_ff=3072, max_len=512),
+    # RoBERTa-large-style bidirectional preset (Fig. 7 / Table 11 track).
+    "mlm": ModelConfig("mlm", vocab=2048, d_model=128, n_heads=4,
+                       n_layers=4, d_ff=512, max_len=128, causal=False),
+}
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — THE canonical flattening order.
+
+    The rust ``ParamStore``, the manifest, and the dumped ``params_*.bin``
+    all use exactly this order.
+    """
+    d, f, v, m = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.max_len
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("embed.tok", (v, d)),
+        ("embed.pos", (m, d)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1.g", (d,)), (p + "ln1.b", (d,)),
+            (p + "attn.wq", (d, d)), (p + "attn.bq", (d,)),
+            (p + "attn.wk", (d, d)), (p + "attn.bk", (d,)),
+            (p + "attn.wv", (d, d)), (p + "attn.bv", (d,)),
+            (p + "attn.wo", (d, d)), (p + "attn.bo", (d,)),
+            (p + "ln2.g", (d,)), (p + "ln2.b", (d,)),
+            (p + "mlp.w1", (d, f)), (p + "mlp.b1", (f,)),
+            (p + "mlp.w2", (f, d)), (p + "mlp.b2", (d,)),
+        ]
+    specs += [("final.ln.g", (d,)), ("final.ln.b", (d,))]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, np.ndarray]:
+    """Deterministic init (normal 0.02 weights, zero biases, unit gains)."""
+    rng = np.random.default_rng(seed)
+    out: dict[str, np.ndarray] = {}
+    for name, shape in param_specs(cfg):
+        if name.endswith(".g"):
+            out[name] = np.ones(shape, np.float32)
+        elif name.endswith((".b", ".bq", ".bk", ".bv", ".bo", ".b1", ".b2")):
+            out[name] = np.zeros(shape, np.float32)
+        else:
+            out[name] = rng.normal(0.0, 0.02, size=shape).astype(np.float32)
+    return out
+
+
+def params_to_list(cfg: ModelConfig, params: dict[str, jax.Array]) -> list[jax.Array]:
+    return [params[name] for name, _ in param_specs(cfg)]
+
+
+def params_from_list(
+    cfg: ModelConfig, flat: Iterable[jax.Array]
+) -> dict[str, jax.Array]:
+    return {name: a for (name, _), a in zip(param_specs(cfg), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _ln(x2d, g, b, use_pallas):
+    if use_pallas:
+        return layernorm(x2d, g, b)
+    return kref.layernorm_ref(x2d, g, b)
+
+
+def _attention(cfg, x, p, prefix, mask, use_pallas):
+    b, l, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def proj(w, bias):
+        return (x @ p[prefix + w] + p[prefix + bias]).reshape(b, l, h, dh)
+
+    q = proj("attn.wq", "attn.bq").transpose(0, 2, 1, 3).reshape(b * h, l, dh)
+    k = proj("attn.wk", "attn.bk").transpose(0, 2, 1, 3).reshape(b * h, l, dh)
+    v = proj("attn.wv", "attn.bv").transpose(0, 2, 1, 3).reshape(b * h, l, dh)
+    kv_mask = jnp.repeat(mask, h, axis=0)  # [B*H, L]
+    if use_pallas:
+        o = flash_attention(q, k, v, kv_mask, causal=cfg.causal)
+    else:
+        o = kref.attention_ref(q, k, v, kv_mask, causal=cfg.causal)
+    o = o.reshape(b, h, l, dh).transpose(0, 2, 1, 3).reshape(b, l, d)
+    return o @ p[prefix + "attn.wo"] + p[prefix + "attn.bo"]
+
+
+def logits_fn(
+    cfg: ModelConfig,
+    params: dict[str, jax.Array],
+    ids: jax.Array,
+    mask: jax.Array,
+    *,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Token logits ``[B, L, V]`` for ids ``[B, L]`` and mask ``[B, L]``."""
+    p = params
+    b, l = ids.shape
+    d = cfg.d_model
+    x = p["embed.tok"][ids] + p["embed.pos"][:l][None, :, :]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        hN = _ln(x.reshape(b * l, d), p[pre + "ln1.g"], p[pre + "ln1.b"], use_pallas)
+        attn = _attention(cfg, hN.reshape(b, l, d), p, pre, mask, use_pallas)
+        x = x + attn
+        hN = _ln(x.reshape(b * l, d), p[pre + "ln2.g"], p[pre + "ln2.b"], use_pallas)
+        hN = hN.reshape(b, l, d)
+        hN = jax.nn.gelu(hN @ p[pre + "mlp.w1"] + p[pre + "mlp.b1"])
+        x = x + (hN @ p[pre + "mlp.w2"] + p[pre + "mlp.b2"])
+    x = _ln(x.reshape(b * l, d), p["final.ln.g"], p["final.ln.b"], use_pallas)
+    # Tied LM head (OPT ties input/output embeddings).
+    return (x @ p["embed.tok"].T).reshape(b, l, cfg.vocab)
+
+
+def per_example_loss(
+    cfg: ModelConfig,
+    params: dict[str, jax.Array],
+    ids: jax.Array,
+    labels: jax.Array,
+    *,
+    use_pallas: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-example (sum of token losses, count of labeled tokens).
+
+    Padding convention: token id 0 is <pad> and is invisible to attention
+    (except that position 0 is always visible so no query row is fully
+    masked); positions with label < 0 contribute neither loss nor count.
+    """
+    b, l = ids.shape
+    pos0 = jnp.zeros((b, l), bool).at[:, 0].set(True)
+    mask = ((ids > 0) | pos0).astype(jnp.float32)
+    logits = logits_fn(cfg, params, ids, mask, use_pallas=use_pallas)
+    flat_logits = logits.reshape(b * l, cfg.vocab)
+    flat_labels = labels.reshape(b * l)
+    if use_pallas:
+        tok_loss = softmax_xent(flat_logits, flat_labels)
+    else:
+        tok_loss = kref.softmax_xent_ref(flat_logits, flat_labels)
+    tok_loss = tok_loss.reshape(b, l)
+    valid = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(tok_loss, axis=1), jnp.sum(valid, axis=1)
+
+
+def batch_loss(cfg, params, ids, labels, *, use_pallas=True) -> jax.Array:
+    """Mean token loss over the labeled positions of the whole batch.
+
+    Rows that are pure padding (all labels -1) contribute nothing, so a
+    smaller real batch padded up to the artifact batch size yields exactly
+    the real batch's mean loss.
+    """
+    s, c = per_example_loss(cfg, params, ids, labels, use_pallas=use_pallas)
+    return jnp.sum(s) / jnp.maximum(jnp.sum(c), 1.0)
+
+
+def make_forward_fn(cfg: ModelConfig, *, use_pallas: bool = True):
+    """fn(*params, ids, labels) -> (sum_loss[B], count[B]) for AOT lowering."""
+
+    def fn(*args):
+        params = params_from_list(cfg, args[:-2])
+        ids, labels = args[-2], args[-1]
+        s, c = per_example_loss(cfg, params, ids, labels, use_pallas=use_pallas)
+        return (s, c)
+
+    return fn
+
+
+def make_grads_fn(cfg: ModelConfig, *, use_pallas: bool = True):
+    """fn(*params, ids, labels) -> (loss, count, *grads) for AOT lowering.
+
+    Gradient of the batch-mean loss w.r.t. every parameter tensor, in
+    ``param_specs`` order. ``count`` (total labeled tokens) lets the rust
+    coordinator combine several chunk executions into one exact large-batch
+    gradient: ``g = Σ count_i·g_i / Σ count_i``.
+    """
+    n = len(param_specs(cfg))
+
+    def scalar_loss(plist, ids, labels):
+        params = params_from_list(cfg, plist)
+        return batch_loss(cfg, params, ids, labels, use_pallas=use_pallas)
+
+    def fn(*args):
+        plist = list(args[:n])
+        ids, labels = args[n], args[n + 1]
+        loss, grads = jax.value_and_grad(scalar_loss)(plist, ids, labels)
+        count = jnp.sum((labels >= 0).astype(jnp.float32))
+        return (loss, count, *grads)
+
+    return fn

@@ -1,0 +1,87 @@
+//! End-to-end per-table step benchmarks: one entry per paper table,
+//! measuring the full per-step cost (batch sampling + XLA execution +
+//! in-place update) for every method in that table's comparison, at
+//! laptop scale on the live artifacts. The per-step ratios are the
+//! microscopic version of the tables' wall-clock columns (MeZO cheap per
+//! step but needs ~20x steps; Addax ≈ IP-SGD + 2 forwards).
+//!
+//! Run: `cargo bench --bench tables` (needs `make artifacts`).
+
+use std::time::Instant;
+
+use addax::data::{opt_task, Dataset};
+use addax::optim::{Adam, Addax, HybridZoFo, IpSgd, MeZo, Optimizer, Sgd, StepBatches, ZoSgdNaive};
+use addax::runtime::manifest::default_artifacts_dir;
+use addax::runtime::{ModelExec, XlaExec};
+use addax::zorng::derive_seed;
+
+fn bench_step(
+    exec: &mut XlaExec,
+    opt: &mut dyn Optimizer,
+    ds: &Dataset,
+    iters: usize,
+) -> anyhow::Result<f64> {
+    let mut params = exec.load_initial_params()?;
+    let needs = opt.needs();
+    let all: Vec<usize> = (0..ds.train.len()).collect();
+    let mut sampler = addax::data::Sampler::new(&all, 1);
+    let mut make = |n: usize| addax::data::training_batch(&ds.train, &sampler.draw(n));
+    // warmup (compiles artifacts)
+    let batches = StepBatches {
+        fo: (needs.fo > 0).then(|| make(needs.fo)),
+        zo: (needs.zo > 0).then(|| make(needs.zo)),
+    };
+    opt.step(&mut params, exec, &batches, 0)?;
+    let t0 = Instant::now();
+    for s in 0..iters {
+        let batches = StepBatches {
+            fo: (needs.fo > 0).then(|| make(needs.fo)),
+            zo: (needs.zo > 0).then(|| make(needs.zo)),
+        };
+        opt.step(&mut params, exec, &batches, derive_seed(1, s as u64))?;
+    }
+    Ok(t0.elapsed().as_secs_f64() / iters as f64)
+}
+
+fn table_bench(model: &str, task_name: &str, label: &str, iters: usize) -> anyhow::Result<()> {
+    println!("\n== {label} (model={model}, task={task_name}) ==");
+    let mut exec = XlaExec::new(&default_artifacts_dir(), model)?;
+    let entry = exec.entry().clone();
+    let task = opt_task(task_name).unwrap();
+    let ds = Dataset::generate(task, entry.vocab, Some(entry.max_len), 0, 400, 50, 50);
+
+    let mut racers: Vec<(&str, Box<dyn Optimizer>)> = vec![
+        ("Addax (4,6)", Box::new(Addax::new(4e-2, 1e-3, 0.03, 6, 4))),
+        ("MeZO bs16", Box::new(MeZo::new(1e-4, 1e-3, 16))),
+        ("ZO-SGD naive bs16", Box::new(ZoSgdNaive::new(1e-4, 1e-3, 16))),
+        ("IP-SGD bs4", Box::new(IpSgd::new(4e-2, 4))),
+        ("SGD bs16", Box::new(Sgd::new(4e-2, 16, Some(1.0)))),
+        ("Adam bs8", Box::new(Adam::new(4e-3, 8))),
+        ("Hybrid ZO-FO bs4", Box::new(HybridZoFo::new(4e-2, 1e-4, 1e-3, 4, 0.5))),
+    ];
+    let mut base = None;
+    for (name, opt) in racers.iter_mut() {
+        let dt = bench_step(&mut exec, opt.as_mut(), &ds, iters)?;
+        let rel = base.get_or_insert(dt);
+        println!("  {name:<20} {:>9.2} ms/step  ({:.2}x Addax)", dt * 1e3, dt / *rel);
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let iters: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+    println!("== per-table end-to-end step benchmarks ({iters} iters) ==");
+    // Table 12 (OPT-13B): the short-task regime.
+    table_bench("tiny", "sst2", "table12 regime: short task", iters)?;
+    // Tables 13-15 long-dataset regime: long sequences, partitioned.
+    table_bench("tiny", "multirc", "table13-15 regime: long task", iters)?;
+    // Table 11 (RoBERTa track): bidirectional mlm preset.
+    table_bench("mlm", "sst2", "table11 regime: masked-LM", iters)?;
+    println!("\n(Per-step ratios: MeZO ≈ 2 forwards, Addax ≈ 2 forwards + 1");
+    println!(" fwd+bwd, SGD/Adam ≈ 1 fwd+bwd at larger batch. Multiply by");
+    println!(" the step-count ratios of App. D.5 for wall-clock totals.)");
+    Ok(())
+}

@@ -1,0 +1,241 @@
+//! Config system: a TOML-subset parser + typed run configuration.
+//!
+//! The offline vendored crate set has no `toml`/`serde`, so we parse the
+//! subset we need: `[section]` headers, `key = value` with string, float,
+//! integer and boolean values, `#` comments. Keys flatten to
+//! `section.key`. CLI `--set section.key=value` overrides files.
+//!
+//! Example (`configs/addax_small.toml`):
+//! ```toml
+//! [model]
+//! key = "small"
+//! [task]
+//! name = "sst2"
+//! [optim]
+//! name = "addax"
+//! lr = 3e-2
+//! alpha = 0.05
+//! k0 = 6
+//! k1 = 4
+//! lt = 48
+//! [train]
+//! steps = 400
+//! seed = 0
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::TrainConfig;
+use crate::optim::{Adam, Addax, HybridZoFo, IpSgd, MeZo, Optimizer, Sgd, ZoSgdNaive};
+
+/// Flat `section.key -> raw string value` map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let value = v.trim().trim_matches('"').to_string();
+            map.insert(key, value);
+        }
+        Ok(Self { map })
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Apply a `--set key=value` override.
+    pub fn set(&mut self, kv: &str) -> Result<()> {
+        let (k, v) = kv.split_once('=').ok_or_else(|| anyhow!("--set wants key=value"))?;
+        self.map.insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(String::as_str)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("{key} = {s:?} is not a float")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("{key} = {s:?} is not an int")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("{key} = {s:?} is not an int")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(s) => bail!("{key} = {s:?} is not a bool"),
+        }
+    }
+
+    // -- typed views -------------------------------------------------------
+
+    pub fn model_key(&self) -> String {
+        self.str_or("model.key", "tiny")
+    }
+
+    pub fn task_name(&self) -> String {
+        self.str_or("task.name", "sst2")
+    }
+
+    /// `L_T` threshold; 0 / absent means "no partitioning" (Addax-WA).
+    pub fn lt(&self) -> Result<usize> {
+        self.usize_or("optim.lt", usize::MAX)
+    }
+
+    pub fn train_config(&self) -> Result<TrainConfig> {
+        Ok(TrainConfig {
+            steps: self.usize_or("train.steps", 400)?,
+            eval_every: self.usize_or("train.eval_every", 0)?,
+            seed: self.u64_or("train.seed", 0)?,
+            eval_examples: self.usize_or("train.eval_examples", 100)?,
+            log_path: self.get("train.log").map(std::path::PathBuf::from),
+            verbose: self.bool_or("train.verbose", true)?,
+        })
+    }
+
+    /// Instantiate the configured optimizer.
+    pub fn optimizer(&self) -> Result<Box<dyn Optimizer>> {
+        let name = self.str_or("optim.name", "addax");
+        let lr = self.f32_or("optim.lr", 1e-2)?;
+        let eps = self.f32_or("optim.eps", 1e-3)?;
+        let batch = self.usize_or("optim.batch", 8)?;
+        Ok(match name.as_str() {
+            "addax" => Box::new(Addax::new(
+                lr,
+                eps,
+                self.f32_or("optim.alpha", 0.05)?,
+                self.usize_or("optim.k0", 6)?,
+                self.usize_or("optim.k1", 4)?,
+            )),
+            "mezo" => Box::new(MeZo::new(lr, eps, batch)),
+            "zo-sgd" => Box::new(ZoSgdNaive::new(lr, eps, batch)),
+            "sgd" => Box::new(Sgd::new(lr, batch, Some(self.f32_or("optim.clip", 1.0)?))),
+            "ip-sgd" => Box::new(IpSgd::new(lr, batch)),
+            "adam" => Box::new(Adam::new(lr, batch)),
+            "hybrid-zofo" => Box::new(HybridZoFo::new(
+                lr,
+                self.f32_or("optim.lr_zo", 1e-3)?,
+                eps,
+                batch,
+                self.f32_or("optim.split", 0.5)?,
+            )),
+            other => bail!("unknown optimizer {other:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a comment
+[model]
+key = "small"
+[optim]
+name = "addax"
+lr = 3e-2
+alpha = 0.05
+k0 = 6
+k1 = 4
+lt = 48
+[train]
+steps = 400
+verbose = false
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.model_key(), "small");
+        assert_eq!(c.f32_or("optim.lr", 0.0).unwrap(), 3e-2);
+        assert_eq!(c.usize_or("train.steps", 0).unwrap(), 400);
+        assert!(!c.bool_or("train.verbose", true).unwrap());
+        assert_eq!(c.lt().unwrap(), 48);
+    }
+
+    #[test]
+    fn builds_each_optimizer() {
+        for name in ["addax", "mezo", "zo-sgd", "sgd", "ip-sgd", "adam", "hybrid-zofo"] {
+            let mut c = Config::parse(SAMPLE).unwrap();
+            c.set(&format!("optim.name={name}")).unwrap();
+            let opt = c.optimizer().unwrap();
+            assert_eq!(opt.name(), name);
+        }
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set("optim.name=nope").unwrap();
+        assert!(c.optimizer().is_err());
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set("optim.lr=0.5").unwrap();
+        assert_eq!(c.f32_or("optim.lr", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn defaults_when_absent() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.model_key(), "tiny");
+        assert_eq!(c.lt().unwrap(), usize::MAX);
+        let t = c.train_config().unwrap();
+        assert_eq!(t.steps, 400);
+    }
+
+    #[test]
+    fn rejects_bad_lines_and_values() {
+        assert!(Config::parse("not a kv line").is_err());
+        let c = Config::parse("[a]\nx = zzz").unwrap();
+        assert!(c.f32_or("a.x", 0.0).is_err());
+        assert!(c.bool_or("a.x", false).is_err());
+    }
+}

@@ -1,0 +1,358 @@
+//! The training coordinator: the L3 event loop that owns the request path.
+//!
+//! Per run it:
+//!  1. partitions the training set by sequence length into `D⁰`/`D¹`
+//!     (Alg. 1 lines 2-5) according to the optimizer's needs,
+//!  2. prefetches step batches on a feeder thread (deterministic in the
+//!     run seed, independent of consumer timing),
+//!  3. drives the optimizer's in-place updates through the [`ModelExec`]
+//!     seam (PJRT artifacts in production, the quadratic mock in tests),
+//!  4. evaluates validation accuracy every `eval_every` steps (the paper
+//!     checks 1/20 of total steps, App. D.5), tracks the best checkpoint,
+//!     and reports the paper's headline metrics: best-validation accuracy,
+//!     test accuracy at best validation, and wall-clock time to best.
+
+pub mod eval;
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::{partition, Dataset, Example, Sampler};
+use crate::jsonlite::{obj, Json};
+use crate::metrics::{Curve, JsonlLogger};
+use crate::optim::{Optimizer, StepBatches};
+use crate::params::ParamStore;
+use crate::runtime::ModelExec;
+use crate::zorng::derive_seed;
+
+pub use eval::{evaluate, EvalOut};
+
+/// Training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    /// Validation cadence; 0 = `steps/20` (paper default).
+    pub eval_every: usize,
+    pub seed: u64,
+    /// Cap on examples scored per evaluation (cost control).
+    pub eval_examples: usize,
+    /// Optional JSONL telemetry path.
+    pub log_path: Option<std::path::PathBuf>,
+    /// Print progress lines.
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            steps: 200,
+            eval_every: 0,
+            seed: 0,
+            eval_examples: 100,
+            log_path: None,
+            verbose: false,
+        }
+    }
+}
+
+/// Everything the paper reports about one fine-tuning run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub optimizer: String,
+    pub task: String,
+    pub steps: usize,
+    pub best_val_acc: f64,
+    pub best_val_step: usize,
+    /// Wall-clock seconds from step 0 to the best-validation checkpoint
+    /// (the paper's "time to best validation", compile time excluded).
+    pub time_to_best_secs: f64,
+    pub test_acc: f64,
+    pub test_f1: f64,
+    pub total_secs: f64,
+    pub final_train_loss: f64,
+    pub loss_curve: Curve,
+    pub val_curve: Curve,
+    /// Wall-clock at each eval point (for loss-vs-time plots, Fig. 11).
+    pub val_times: Vec<f64>,
+}
+
+impl RunResult {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("optimizer", Json::from(self.optimizer.clone())),
+            ("task", Json::from(self.task.clone())),
+            ("steps", Json::from(self.steps)),
+            ("best_val_acc", Json::from(self.best_val_acc)),
+            ("best_val_step", Json::from(self.best_val_step)),
+            ("time_to_best_secs", Json::from(self.time_to_best_secs)),
+            ("test_acc", Json::from(self.test_acc)),
+            ("test_f1", Json::from(self.test_f1)),
+            ("total_secs", Json::from(self.total_secs)),
+            ("final_train_loss", Json::from(self.final_train_loss)),
+            ("loss_curve", self.loss_curve.to_json()),
+            ("val_curve", self.val_curve.to_json()),
+        ])
+    }
+}
+
+/// Deterministic batch feeder running on its own thread.
+///
+/// Produces the `StepBatches` stream for the whole run up front-of-need
+/// (bounded channel, depth 4) so batch construction overlaps XLA
+/// execution — the L3 analogue of an input pipeline.
+struct BatchFeeder {
+    rx: mpsc::Receiver<StepBatches>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BatchFeeder {
+    fn spawn(
+        examples: Arc<Vec<Example>>,
+        d0: Vec<usize>,
+        d1: Vec<usize>,
+        needs_fo: usize,
+        needs_zo: usize,
+        steps: usize,
+        seed: u64,
+    ) -> Self {
+        let (tx, rx) = mpsc::sync_channel(4);
+        let handle = std::thread::spawn(move || {
+            let mut s_fo = Sampler::new(&d1, derive_seed(seed, 0xF0));
+            let mut s_zo = Sampler::new(&d0, derive_seed(seed, 0x20));
+            for _ in 0..steps {
+                let fo = (needs_fo > 0).then(|| {
+                    crate::data::training_batch(&examples, &s_fo.draw(needs_fo))
+                });
+                let zo = (needs_zo > 0).then(|| {
+                    crate::data::training_batch(&examples, &s_zo.draw(needs_zo))
+                });
+                if tx.send(StepBatches { fo, zo }).is_err() {
+                    break; // consumer dropped (early stop)
+                }
+            }
+        });
+        Self { rx, handle: Some(handle) }
+    }
+
+    fn next(&self) -> Option<StepBatches> {
+        self.rx.recv().ok()
+    }
+}
+
+impl Drop for BatchFeeder {
+    fn drop(&mut self) {
+        // Close the channel first so the producer unblocks, then join.
+        // (rx is dropped by struct drop order after this; join via take.)
+        if let Some(h) = self.handle.take() {
+            // Drain anything pending so the producer can finish/send-fail.
+            while self.rx.try_recv().is_ok() {}
+            drop(std::mem::replace(&mut self.rx, mpsc::channel().1));
+            let _ = h.join();
+        }
+    }
+}
+
+/// Fine-tune `params` with `opt` on `dataset`, partitioned at `lt`.
+///
+/// This is Algorithm 1 at system level: the partition, the per-step
+/// sampling of `B⁰`/`B¹`, the in-place update, and the validation loop.
+pub fn train(
+    exec: &mut dyn ModelExec,
+    params: &mut ParamStore,
+    opt: &mut dyn Optimizer,
+    dataset: &Dataset,
+    lt: usize,
+    cfg: &TrainConfig,
+) -> Result<RunResult> {
+    let needs = opt.needs();
+    let eval_every = if cfg.eval_every == 0 {
+        (cfg.steps / 20).max(1)
+    } else {
+        cfg.eval_every
+    };
+
+    // Partition (only meaningful when both batch kinds are needed; single
+    // -phase optimizers sample from the full dataset, like the paper's
+    // baselines which know nothing of L_T).
+    let (d0, d1) = if needs.fo > 0 && needs.zo > 0 {
+        partition(&dataset.train, lt)
+    } else {
+        let all: Vec<usize> = (0..dataset.train.len()).collect();
+        (all.clone(), all)
+    };
+
+    let examples = Arc::new(dataset.train.clone());
+    let feeder = BatchFeeder::spawn(
+        examples,
+        d0,
+        d1,
+        needs.fo,
+        needs.zo,
+        cfg.steps,
+        cfg.seed,
+    );
+
+    let mut logger = JsonlLogger::new(cfg.log_path.as_deref())?;
+    let mut loss_curve = Curve::default();
+    let mut val_curve = Curve::default();
+    let mut val_times = Vec::new();
+    let mut best_val = f64::NEG_INFINITY;
+    let mut best_step = 0;
+    let mut best_params: Option<ParamStore> = None;
+    let mut time_to_best = 0.0;
+    let t0 = Instant::now();
+
+    for step in 0..cfg.steps {
+        let batches = feeder.next().expect("feeder ended early");
+        let step_seed = derive_seed(cfg.seed, step as u64);
+        let stats = opt.step(params, exec, &batches, step_seed)?;
+        loss_curve.push(step, stats.loss);
+        logger.log(obj(vec![
+            ("step", Json::from(step)),
+            ("loss", Json::from(stats.loss)),
+            ("g0", Json::from(stats.g0)),
+            ("grad_norm", Json::from(stats.grad_norm)),
+            ("elapsed", Json::from(t0.elapsed().as_secs_f64())),
+        ]));
+
+        if (step + 1) % eval_every == 0 || step + 1 == cfg.steps {
+            let ev = evaluate(exec, params, &dataset.val, cfg.eval_examples)?;
+            val_curve.push(step + 1, ev.accuracy);
+            val_times.push(t0.elapsed().as_secs_f64());
+            if ev.accuracy > best_val {
+                best_val = ev.accuracy;
+                best_step = step + 1;
+                best_params = Some(params.clone());
+                time_to_best = t0.elapsed().as_secs_f64();
+            }
+            if cfg.verbose {
+                println!(
+                    "[{}] step {:>5}/{} loss {:.4} val_acc {:.3} (best {:.3} @ {})",
+                    opt.name(),
+                    step + 1,
+                    cfg.steps,
+                    loss_curve.tail_mean(eval_every),
+                    ev.accuracy,
+                    best_val,
+                    best_step
+                );
+            }
+            logger.log(obj(vec![
+                ("step", Json::from(step + 1)),
+                ("val_acc", Json::from(ev.accuracy)),
+            ]));
+        }
+    }
+    logger.flush();
+
+    // Test accuracy at the best-validation checkpoint (paper protocol).
+    let eval_params = best_params.as_ref().unwrap_or(params);
+    let test =
+        evaluate(exec, eval_params, &dataset.test, cfg.eval_examples.max(200))?;
+
+    Ok(RunResult {
+        optimizer: opt.name().to_string(),
+        task: dataset.task.name.to_string(),
+        steps: cfg.steps,
+        best_val_acc: best_val.max(0.0),
+        best_val_step: best_step,
+        time_to_best_secs: time_to_best,
+        test_acc: test.accuracy,
+        test_f1: test.macro_f1,
+        total_secs: t0.elapsed().as_secs_f64(),
+        final_train_loss: loss_curve.tail_mean(10),
+        loss_curve,
+        val_curve,
+        val_times,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::opt_task;
+    use crate::optim::{Addax, IpSgd, MeZo};
+    use crate::runtime::mock::QuadraticExec;
+
+    fn quad_setup(d: usize) -> (QuadraticExec, ParamStore, Dataset) {
+        let exec = QuadraticExec::new(d, 0.5, 2.0, 0.1, 3);
+        let params = ParamStore::zeros(&[("w".to_string(), vec![d])]);
+        let ds = Dataset::generate(opt_task("sst2").unwrap(), 512, Some(64), 1, 200, 50, 50);
+        (exec, params, ds)
+    }
+
+    #[test]
+    fn train_loop_runs_and_reports() {
+        let (mut exec, mut params, ds) = quad_setup(16);
+        let mut opt = IpSgd::new(0.1, 4);
+        let cfg = TrainConfig { steps: 50, eval_every: 10, ..Default::default() };
+        let r = train(&mut exec, &mut params, &mut opt, &ds, 9999, &cfg).unwrap();
+        assert_eq!(r.steps, 50);
+        assert_eq!(r.loss_curve.points.len(), 50);
+        assert!(r.val_curve.points.len() >= 5);
+        // quadratic mock: loss decreases
+        assert!(r.final_train_loss < r.loss_curve.points[0].1);
+    }
+
+    #[test]
+    fn addax_gets_both_batches_and_trains() {
+        let (mut exec, mut params, ds) = quad_setup(16);
+        let mut opt = Addax::new(0.05, 1e-3, 0.3, 4, 4);
+        let cfg = TrainConfig { steps: 40, eval_every: 20, ..Default::default() };
+        let r = train(&mut exec, &mut params, &mut opt, &ds, 40, &cfg).unwrap();
+        assert!(r.final_train_loss.is_finite());
+        assert!(exec.stats().grad_calls >= 40);
+        assert!(exec.stats().forward_calls >= 80);
+    }
+
+    #[test]
+    fn mezo_runs_without_fo_batches() {
+        let (mut exec, mut params, ds) = quad_setup(8);
+        let mut opt = MeZo::new(0.02, 1e-3, 4);
+        let cfg = TrainConfig { steps: 30, ..Default::default() };
+        let r = train(&mut exec, &mut params, &mut opt, &ds, 9999, &cfg).unwrap();
+        assert_eq!(exec.stats().grad_calls, 0);
+        assert!(r.total_secs >= 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let (mut exec, mut params, ds) = quad_setup(12);
+            let mut opt = Addax::new(0.05, 1e-3, 0.3, 2, 2);
+            let cfg = TrainConfig { steps: 20, seed: 7, ..Default::default() };
+            let r = train(&mut exec, &mut params, &mut opt, &ds, 40, &cfg).unwrap();
+            (r.final_train_loss, params.dist_sq(&ParamStore::zeros(&[("w".to_string(), vec![12])])))
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+    }
+
+    #[test]
+    fn jsonl_log_written() {
+        let dir = std::env::temp_dir().join("addax_train_log_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let log = dir.join("run.jsonl");
+        let (mut exec, mut params, ds) = quad_setup(8);
+        let mut opt = IpSgd::new(0.1, 2);
+        let cfg = TrainConfig {
+            steps: 10,
+            eval_every: 5,
+            log_path: Some(log.clone()),
+            ..Default::default()
+        };
+        train(&mut exec, &mut params, &mut opt, &ds, 9999, &cfg).unwrap();
+        let text = std::fs::read_to_string(&log).unwrap();
+        assert!(text.lines().count() >= 10);
+        // each line parses as JSON
+        for line in text.lines() {
+            crate::jsonlite::Json::parse(line).unwrap();
+        }
+        std::fs::remove_file(log).ok();
+    }
+}

@@ -1,0 +1,340 @@
+//! Data substrate: synthetic task generation, the length-based partition
+//! `D = D⁰ ∪ D¹` (Alg. 1 lines 2-5), samplers, and batch construction.
+//!
+//! ## Token layout of one example
+//!
+//! ```text
+//! [ctx₀ … ctx_{n-1}, verbalizer(answer)]
+//! ```
+//!
+//! Vocabulary map (token ids): 0 = padding, 1..=C are the class
+//! verbalizers, the rest of the vocab carries the context. A fraction
+//! `signal` of the context tokens is drawn from a class-specific band, so
+//! a model must learn band→verbalizer associations — a planted
+//! linear-separable signal whose difficulty is controlled per task.
+//!
+//! Training labels follow the paper's classification setup: the loss is
+//! taken on the verbalizer position only. Evaluation scores every class's
+//! verbalizer by its average log-likelihood and predicts the argmax
+//! (App. D.3).
+
+pub mod tasks;
+
+use crate::runtime::TokenBatch;
+use crate::zorng::Xoshiro256;
+
+pub use tasks::{opt_task, roberta_task, TaskDef, TaskType, OPT_TASKS, ROBERTA_TASKS};
+
+/// One generated example.
+#[derive(Clone, Debug)]
+pub struct Example {
+    /// Context tokens (verbalizer NOT included).
+    pub context: Vec<i32>,
+    /// Ground-truth class.
+    pub answer: usize,
+    pub n_classes: usize,
+}
+
+impl Example {
+    /// Total sequence length including the verbalizer token.
+    pub fn len(&self) -> usize {
+        self.context.len() + 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Verbalizer token id for class `c` (ids 1..=n_classes).
+    pub fn verbalizer(c: usize) -> i32 {
+        1 + c as i32
+    }
+
+    /// (ids, labels) for training: loss on the verbalizer position only.
+    pub fn training_row(&self) -> (Vec<i32>, Vec<i32>) {
+        let mut ids = self.context.clone();
+        ids.push(Self::verbalizer(self.answer));
+        let mut labels = vec![-1; ids.len()];
+        let n = ids.len();
+        labels[n - 2] = ids[n - 1]; // position n-2 predicts the verbalizer
+        (ids, labels)
+    }
+
+    /// (ids, labels) scoring candidate class `c` at evaluation time.
+    pub fn candidate_row(&self, c: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut ids = self.context.clone();
+        ids.push(Self::verbalizer(c));
+        let mut labels = vec![-1; ids.len()];
+        let n = ids.len();
+        labels[n - 2] = ids[n - 1];
+        (ids, labels)
+    }
+}
+
+/// Deterministic generator for a task's examples.
+///
+/// `max_len` rescales the task's length distribution so that its `L_max`
+/// maps onto the model preset's bucket ceiling (DESIGN.md §3: trainable
+/// runs are laptop-scale; memory simulations use the unscaled lengths).
+pub fn generate(
+    task: &TaskDef,
+    n: usize,
+    vocab: usize,
+    max_len: Option<usize>,
+    seed: u64,
+) -> Vec<Example> {
+    let mut rng = Xoshiro256::new(seed ^ 0xDA7A);
+    let scale = match max_len {
+        Some(m) if task.lengths.l_max > m => m as f64 / task.lengths.l_max as f64,
+        _ => 1.0,
+    };
+    let first_ctx = 1 + task.n_classes as i32; // context band starts here
+    let ctx_tokens = vocab as i32 - first_ctx;
+    assert!(ctx_tokens > 2 * task.n_classes as i32, "vocab too small for task");
+    let band = ctx_tokens / task.n_classes as i32;
+    (0..n)
+        .map(|_| {
+            let answer = rng.next_below(task.n_classes);
+            let len = sample_length(&task.lengths, scale, &mut rng);
+            let ctx_len = len.saturating_sub(1).max(2);
+            let context = (0..ctx_len)
+                .map(|_| {
+                    if rng.next_f64() < task.signal {
+                        // class-specific band
+                        first_ctx
+                            + answer as i32 * band
+                            + rng.next_below(band as usize) as i32
+                    } else {
+                        first_ctx + rng.next_below(ctx_tokens as usize) as i32
+                    }
+                })
+                .collect();
+            Example { context, answer, n_classes: task.n_classes }
+        })
+        .collect()
+}
+
+fn sample_length(d: &tasks::LengthDist, scale: f64, rng: &mut Xoshiro256) -> usize {
+    // log-normal via Box-Muller on the task's median/sigma
+    let u1 = rng.next_f64().max(1e-12);
+    let u2 = rng.next_f64();
+    let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+    let raw = (d.median.ln() + d.sigma * z).exp();
+    let lo = ((d.min_len as f64) * scale).max(4.0);
+    let hi = (d.l_max as f64) * scale;
+    (raw * scale).clamp(lo, hi).round() as usize
+}
+
+/// A generated dataset split into train/val/test (paper: 1000/500/1000).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub task: TaskDef,
+    pub train: Vec<Example>,
+    pub val: Vec<Example>,
+    pub test: Vec<Example>,
+}
+
+impl Dataset {
+    /// Generate with the paper's split sizes scaled by `frac`.
+    pub fn generate(
+        task: &TaskDef,
+        vocab: usize,
+        max_len: Option<usize>,
+        seed: u64,
+        n_train: usize,
+        n_val: usize,
+        n_test: usize,
+    ) -> Self {
+        Self {
+            task: *task,
+            train: generate(task, n_train, vocab, max_len, seed),
+            val: generate(task, n_val, vocab, max_len, seed.wrapping_add(1)),
+            test: generate(task, n_test, vocab, max_len, seed.wrapping_add(2)),
+        }
+    }
+
+    /// Longest sequence in the training split (the `L_max` of Alg. 1).
+    pub fn l_max(&self) -> usize {
+        self.train.iter().map(Example::len).max().unwrap_or(0)
+    }
+}
+
+/// The length-based partition of Algorithm 1 (lines 2-5).
+///
+/// Returns indices into `examples`: `(d0, d1)` with
+/// `D⁰ = {x : len(x) > L_T}` and `D¹ = {x : len(x) ≤ L_T}`.
+/// If `L_T ≥ L_max` both partitions are the full dataset (Addax-WA,
+/// line 3). If either partition would be empty, it falls back to the full
+/// dataset so sampling stays well-defined.
+pub fn partition(examples: &[Example], lt: usize) -> (Vec<usize>, Vec<usize>) {
+    let l_max = examples.iter().map(Example::len).max().unwrap_or(0);
+    let all: Vec<usize> = (0..examples.len()).collect();
+    if lt >= l_max {
+        return (all.clone(), all);
+    }
+    let d0: Vec<usize> = examples
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.len() > lt)
+        .map(|(i, _)| i)
+        .collect();
+    let d1: Vec<usize> = examples
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.len() <= lt)
+        .map(|(i, _)| i)
+        .collect();
+    let d0 = if d0.is_empty() { all.clone() } else { d0 };
+    let d1 = if d1.is_empty() { all } else { d1 };
+    (d0, d1)
+}
+
+/// Uniform-with-replacement minibatch sampler over an index set.
+pub struct Sampler<'a> {
+    pool: &'a [usize],
+    rng: Xoshiro256,
+}
+
+impl<'a> Sampler<'a> {
+    pub fn new(pool: &'a [usize], seed: u64) -> Self {
+        assert!(!pool.is_empty(), "empty sampling pool");
+        Self { pool, rng: Xoshiro256::new(seed) }
+    }
+
+    pub fn draw(&mut self, k: usize) -> Vec<usize> {
+        (0..k).map(|_| self.pool[self.rng.next_below(self.pool.len())]).collect()
+    }
+}
+
+/// Build a training [`TokenBatch`] from example indices.
+pub fn training_batch(examples: &[Example], idx: &[usize]) -> TokenBatch {
+    let rows: Vec<_> = idx.iter().map(|&i| examples[i].training_row()).collect();
+    TokenBatch::from_rows(&rows)
+}
+
+/// Build the candidate-scoring batch for one example (one row per class).
+pub fn candidate_batch(example: &Example) -> TokenBatch {
+    let rows: Vec<_> =
+        (0..example.n_classes).map(|c| example.candidate_row(c)).collect();
+    TokenBatch::from_rows(&rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sst2() -> &'static TaskDef {
+        opt_task("sst2").unwrap()
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate(sst2(), 20, 512, None, 7);
+        let b = generate(sst2(), 20, 512, None, 7);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.answer, y.answer);
+        }
+        let c = generate(sst2(), 20, 512, None, 8);
+        assert!(a.iter().zip(c.iter()).any(|(x, y)| x.context != y.context));
+    }
+
+    #[test]
+    fn lengths_respect_bounds_and_skew() {
+        let t = opt_task("multirc").unwrap();
+        let ex = generate(t, 3000, 4096, None, 1);
+        let lens: Vec<usize> = ex.iter().map(Example::len).collect();
+        let max = *lens.iter().max().unwrap();
+        let min = *lens.iter().min().unwrap();
+        assert!(max <= 739 && min >= t.lengths.min_len.min(4));
+        // right-skew: mean > median
+        let mut sorted = lens.clone();
+        sorted.sort_unstable();
+        let median = sorted[sorted.len() / 2] as f64;
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        assert!(mean > median, "mean {mean} median {median}");
+        // the long tail is rare: <20% of examples above 2x median
+        let tail = lens.iter().filter(|&&l| l as f64 > 2.0 * median).count();
+        assert!(tail < lens.len() / 5);
+    }
+
+    #[test]
+    fn max_len_rescaling() {
+        let t = opt_task("multirc").unwrap();
+        let ex = generate(t, 500, 4096, Some(128), 2);
+        assert!(ex.iter().map(Example::len).max().unwrap() <= 128);
+    }
+
+    #[test]
+    fn training_row_labels_only_verbalizer() {
+        let ex = &generate(sst2(), 1, 512, None, 3)[0];
+        let (ids, labels) = ex.training_row();
+        assert_eq!(ids.len(), labels.len());
+        assert_eq!(*ids.last().unwrap(), Example::verbalizer(ex.answer));
+        let labeled: Vec<usize> =
+            labels.iter().enumerate().filter(|(_, &l)| l >= 0).map(|(i, _)| i).collect();
+        assert_eq!(labeled, vec![ids.len() - 2]);
+        assert_eq!(labels[ids.len() - 2], *ids.last().unwrap());
+    }
+
+    #[test]
+    fn partition_splits_by_threshold() {
+        let ex = generate(opt_task("rte").unwrap(), 400, 512, None, 5);
+        let lt = 64;
+        let (d0, d1) = partition(&ex, lt);
+        assert!(d0.iter().all(|&i| ex[i].len() > lt));
+        assert!(d1.iter().all(|&i| ex[i].len() <= lt));
+        assert_eq!(d0.len() + d1.len(), 400);
+    }
+
+    #[test]
+    fn partition_lt_above_lmax_gives_full_dataset_twice() {
+        let ex = generate(sst2(), 50, 512, None, 6);
+        let (d0, d1) = partition(&ex, 10_000);
+        assert_eq!(d0.len(), 50);
+        assert_eq!(d1.len(), 50);
+    }
+
+    #[test]
+    fn partition_never_empty() {
+        let ex = generate(sst2(), 50, 512, None, 7);
+        // LT below every length: d1 would be empty -> falls back to full
+        let (_, d1) = partition(&ex, 1);
+        assert!(!d1.is_empty());
+    }
+
+    #[test]
+    fn sampler_draws_from_pool() {
+        let pool = vec![3, 5, 9];
+        let mut s = Sampler::new(&pool, 1);
+        for i in s.draw(100) {
+            assert!(pool.contains(&i));
+        }
+    }
+
+    #[test]
+    fn candidate_batch_has_one_row_per_class() {
+        let ex = &generate(opt_task("cb").unwrap(), 1, 512, None, 8)[0];
+        let b = candidate_batch(ex);
+        assert_eq!(b.batch, 3);
+        // all rows share the context, differ in the last token
+        let last0 = b.ids[b.seq - 1];
+        let last1 = b.ids[2 * b.seq - 1];
+        assert_ne!(last0, last1);
+    }
+
+    #[test]
+    fn signal_tokens_are_class_banded() {
+        // With signal=1.0 every context token lies in the class band.
+        let mut t = *sst2();
+        t.signal = 1.0;
+        let ex = generate(&t, 10, 512, None, 9);
+        let first_ctx = 1 + t.n_classes as i32;
+        let band = (512 - first_ctx) / t.n_classes as i32;
+        for e in ex {
+            let lo = first_ctx + e.answer as i32 * band;
+            let hi = lo + band;
+            assert!(e.context.iter().all(|&t| t >= lo && t < hi));
+        }
+    }
+}

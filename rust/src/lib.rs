@@ -1,0 +1,33 @@
+//! # Addax — memory-efficient LM fine-tuning with mixed ZO/FO gradients
+//!
+//! Rust + JAX + Pallas reproduction of *"Addax: Utilizing Zeroth-Order
+//! Gradients to Improve Memory Efficiency and Performance of SGD for
+//! Fine-Tuning Language Models"* (ICLR 2025).
+//!
+//! Three layers:
+//! * **L1** (`python/compile/kernels/`): Pallas flash-attention, fused
+//!   softmax-xent, layernorm — build-time only.
+//! * **L2** (`python/compile/model.py`): OPT-style transformer lowered
+//!   once to HLO-text artifacts.
+//! * **L3** (this crate): the training coordinator — data partitioning by
+//!   sequence length, seed-replay zeroth-order perturbation, in-place
+//!   optimizers (Addax, MeZO, IP-SGD, SGD, Adam, hybrid ZO-FO), the GPU
+//!   memory simulator, and the experiment harness regenerating every
+//!   table/figure of the paper.
+//!
+//! Python never runs on the training path: the `addax` binary is
+//! self-contained once `make artifacts` has produced `artifacts/`.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod jsonlite;
+pub mod metrics;
+pub mod memory;
+pub mod optim;
+pub mod params;
+pub mod repro;
+pub mod runtime;
+pub mod tensor;
+pub mod theory;
+pub mod zorng;

@@ -1,0 +1,198 @@
+//! Transformer geometries for the analytic memory model.
+//!
+//! The big-model geometries (OPT-13B/30B/66B, Llama-2-70B, RoBERTa-large)
+//! never run on this machine; they parameterize the closed-form footprint
+//! that reproduces the paper's memory columns and OOM verdicts. The
+//! laptop-scale presets mirror `python/compile/model.py`.
+
+/// Shape of a transformer LM for memory accounting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelGeometry {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// Key/value heads (GQA); equal to `n_heads` for classic MHA.
+    pub kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_pos: usize,
+    /// MLP matrices per layer: 2 (GELU) or 3 (SwiGLU).
+    pub ffn_mats: usize,
+}
+
+impl ModelGeometry {
+    /// Total parameter count (embeddings + per-layer attn/MLP/LN + final LN,
+    /// tied LM head).
+    pub fn n_params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let f = self.d_ff as u64;
+        let v = self.vocab as u64;
+        let m = self.max_pos as u64;
+        let kv = (d * self.kv_heads as u64) / self.n_heads as u64;
+        let per_layer = 2 * d * d + 2 * d * kv + 4 * d   // q,o full; k,v GQA-scaled
+            + self.ffn_mats as u64 * (d * f) + f + d     // mlp (2 mats, 3 for SwiGLU)
+            + 4 * d; // two layernorms
+        v * d + m * d + self.n_layers as u64 * per_layer + 2 * d
+    }
+
+    /// Largest single weight tensor (elements) — the transient gradient
+    /// that even in-place methods hold momentarily.
+    pub fn largest_tensor(&self) -> u64 {
+        let d = self.d_model as u64;
+        (self.vocab as u64 * d).max(d * self.d_ff as u64)
+    }
+}
+
+/// OPT-13B (Zhang et al. 2022 geometry).
+pub const OPT_13B: ModelGeometry = ModelGeometry {
+    name: "opt-13b",
+    n_layers: 40,
+    d_model: 5120,
+    n_heads: 40,
+    kv_heads: 40,
+    d_ff: 20480,
+    vocab: 50272,
+    max_pos: 2048,
+    ffn_mats: 2,
+};
+
+/// OPT-30B.
+pub const OPT_30B: ModelGeometry = ModelGeometry {
+    name: "opt-30b",
+    n_layers: 48,
+    d_model: 7168,
+    n_heads: 56,
+    kv_heads: 56,
+    d_ff: 28672,
+    vocab: 50272,
+    max_pos: 2048,
+    ffn_mats: 2,
+};
+
+/// OPT-66B.
+pub const OPT_66B: ModelGeometry = ModelGeometry {
+    name: "opt-66b",
+    n_layers: 64,
+    d_model: 9216,
+    n_heads: 72,
+    kv_heads: 72,
+    d_ff: 36864,
+    vocab: 50272,
+    max_pos: 2048,
+    ffn_mats: 2,
+};
+
+/// Llama-2-70B (GQA with 8 kv heads, SwiGLU ffn 28672).
+pub const LLAMA2_70B: ModelGeometry = ModelGeometry {
+    name: "llama2-70b",
+    n_layers: 80,
+    d_model: 8192,
+    n_heads: 64,
+    kv_heads: 8,
+    d_ff: 28672,
+    vocab: 32000,
+    max_pos: 4096,
+    ffn_mats: 3,
+};
+
+/// RoBERTa-large (355M).
+pub const ROBERTA_LARGE: ModelGeometry = ModelGeometry {
+    name: "roberta-large",
+    n_layers: 24,
+    d_model: 1024,
+    n_heads: 16,
+    kv_heads: 16,
+    d_ff: 4096,
+    vocab: 50265,
+    max_pos: 514,
+    ffn_mats: 2,
+};
+
+/// Laptop-scale presets (must mirror python/compile/model.py PRESETS).
+pub const TINY: ModelGeometry = ModelGeometry {
+    name: "tiny",
+    n_layers: 2,
+    d_model: 64,
+    n_heads: 2,
+    kv_heads: 2,
+    d_ff: 256,
+    vocab: 512,
+    max_pos: 128,
+    ffn_mats: 2,
+};
+
+pub const SMALL: ModelGeometry = ModelGeometry {
+    name: "small",
+    n_layers: 4,
+    d_model: 128,
+    n_heads: 4,
+    kv_heads: 4,
+    d_ff: 512,
+    vocab: 2048,
+    max_pos: 256,
+    ffn_mats: 2,
+};
+
+pub const BASE: ModelGeometry = ModelGeometry {
+    name: "base",
+    n_layers: 6,
+    d_model: 256,
+    n_heads: 8,
+    kv_heads: 8,
+    d_ff: 1024,
+    vocab: 4096,
+    max_pos: 512,
+    ffn_mats: 2,
+};
+
+pub const ALL: &[ModelGeometry] =
+    &[OPT_13B, OPT_30B, OPT_66B, LLAMA2_70B, ROBERTA_LARGE, TINY, SMALL, BASE];
+
+/// Look up a geometry by name.
+pub fn by_name(name: &str) -> Option<ModelGeometry> {
+    ALL.iter().find(|g| g.name == name).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_published_sizes() {
+        // within 6% of the nominal sizes
+        let cases = [
+            (OPT_13B, 13.0e9),
+            (OPT_30B, 30.0e9),
+            (OPT_66B, 66.0e9),
+            (LLAMA2_70B, 70.0e9),
+            (ROBERTA_LARGE, 0.355e9),
+        ];
+        for (g, nominal) in cases {
+            let p = g.n_params() as f64;
+            let rel = (p - nominal).abs() / nominal;
+            assert!(rel < 0.08, "{}: {p:.3e} vs {nominal:.1e} (rel {rel:.3})", g.name);
+        }
+    }
+
+    #[test]
+    fn weights_fp16_match_paper_inference_footprints() {
+        // Paper: OPT-13B inference ≈ 25-26 GB in fp16.
+        let gb = OPT_13B.n_params() as f64 * 2.0 / 1e9;
+        assert!((24.0..28.0).contains(&gb), "{gb}");
+        // Llama-2-70B fp16 ≈ 135-140 GB.
+        let gb = LLAMA2_70B.n_params() as f64 * 2.0 / 1e9;
+        assert!((130.0..145.0).contains(&gb), "{gb}");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("opt-13b").unwrap().d_model, 5120);
+        assert!(by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn largest_tensor_is_lm_head_for_opt() {
+        assert_eq!(OPT_13B.largest_tensor(), 50272 * 5120);
+    }
+}

@@ -1,0 +1,224 @@
+//! Metrics: accuracy / macro-F1, curves, timers, and JSONL run logs.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::jsonlite::Json;
+
+/// Classification accuracy.
+pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(truth).filter(|(p, t)| p == t).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// Macro-averaged F1 over `n_classes` (the paper reports accuracy/F1;
+/// F1 matters for the skewed generation-style tasks).
+pub fn macro_f1(pred: &[usize], truth: &[usize], n_classes: usize) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let mut f1_sum = 0.0;
+    let mut counted = 0;
+    for c in 0..n_classes {
+        let tp = pred.iter().zip(truth).filter(|(&p, &t)| p == c && t == c).count() as f64;
+        let fp = pred.iter().zip(truth).filter(|(&p, &t)| p == c && t != c).count() as f64;
+        let fn_ = pred.iter().zip(truth).filter(|(&p, &t)| p != c && t == c).count() as f64;
+        if tp + fp + fn_ == 0.0 {
+            continue; // class absent from both => skip (sklearn convention)
+        }
+        let f1 = if tp == 0.0 { 0.0 } else { 2.0 * tp / (2.0 * tp + fp + fn_) };
+        f1_sum += f1;
+        counted += 1;
+    }
+    if counted == 0 {
+        0.0
+    } else {
+        f1_sum / counted as f64
+    }
+}
+
+/// A (step, value) curve.
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub points: Vec<(usize, f64)>,
+}
+
+impl Curve {
+    pub fn push(&mut self, step: usize, value: f64) {
+        self.points.push((step, value));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    /// Smoothed value: mean of the last `k` points.
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        let n = self.points.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let start = n.saturating_sub(k);
+        let slice = &self.points[start..];
+        slice.iter().map(|&(_, v)| v).sum::<f64>() / slice.len() as f64
+    }
+
+    /// First step at which the curve dips below `threshold` (time-to-loss).
+    pub fn first_below(&self, threshold: f64) -> Option<usize> {
+        self.points.iter().find(|&&(_, v)| v < threshold).map(|&(s, _)| s)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.points
+                .iter()
+                .map(|&(s, v)| Json::Arr(vec![Json::from(s), Json::from(v)]))
+                .collect(),
+        )
+    }
+}
+
+/// Buffered JSONL writer for per-step telemetry.
+pub struct JsonlLogger {
+    out: Option<std::io::BufWriter<std::fs::File>>,
+}
+
+impl JsonlLogger {
+    /// `None` path = disabled logger (no-op).
+    pub fn new(path: Option<&Path>) -> Result<Self> {
+        let out = match path {
+            Some(p) => {
+                if let Some(dir) = p.parent() {
+                    std::fs::create_dir_all(dir).ok();
+                }
+                Some(std::io::BufWriter::new(
+                    std::fs::File::create(p)
+                        .with_context(|| format!("creating log {}", p.display()))?,
+                ))
+            }
+            None => None,
+        };
+        Ok(Self { out })
+    }
+
+    pub fn log(&mut self, record: Json) {
+        if let Some(w) = &mut self.out {
+            let _ = writeln!(w, "{}", record.dump());
+        }
+    }
+
+    pub fn flush(&mut self) {
+        if let Some(w) = &mut self.out {
+            let _ = w.flush();
+        }
+    }
+}
+
+/// Write a result JSON file under `results/`.
+pub fn write_result(name: &str, value: &Json) -> Result<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from("results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, value.dump())?;
+    Ok(path)
+}
+
+/// Simple fixed-width markdown-ish table printer for the repro harness.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            line.push('\n');
+            line
+        };
+        s.push_str(&fmt_row(&self.header, &widths));
+        s.push('|');
+        for w in &widths {
+            s.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&fmt_row(r, &widths));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[0, 1, 1], &[0, 1, 0]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn f1_perfect_and_degenerate() {
+        assert!((macro_f1(&[0, 1, 0, 1], &[0, 1, 0, 1], 2) - 1.0).abs() < 1e-9);
+        // all wrong
+        assert!(macro_f1(&[1, 0], &[0, 1], 2) < 1e-9);
+        // skipped empty classes
+        let f = macro_f1(&[0, 0], &[0, 0], 5);
+        assert!((f - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f1_imbalanced_differs_from_accuracy() {
+        // 9 of class 0 right, 1 of class 1 wrong
+        let truth = vec![0, 0, 0, 0, 0, 0, 0, 0, 0, 1];
+        let pred = vec![0; 10];
+        let acc = accuracy(&pred, &truth);
+        let f1 = macro_f1(&pred, &truth, 2);
+        assert!(acc > 0.85 && f1 < 0.55, "acc {acc} f1 {f1}");
+    }
+
+    #[test]
+    fn curve_ops() {
+        let mut c = Curve::default();
+        for (s, v) in [(0, 3.0), (10, 2.0), (20, 1.0)] {
+            c.push(s, v);
+        }
+        assert_eq!(c.last(), Some(1.0));
+        assert_eq!(c.first_below(1.5), Some(20));
+        assert!((c.tail_mean(2) - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_render_aligns() {
+        let mut t = Table::new(&["a", "method"]);
+        t.row(vec!["1".into(), "mezo".into()]);
+        let s = t.render();
+        assert!(s.contains("| a | method |"));
+        assert!(s.lines().count() == 3);
+    }
+}

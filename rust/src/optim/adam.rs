@@ -1,0 +1,139 @@
+//! Adam baseline (Kingma & Ba) with bias correction.
+//!
+//! Keeps first/second-moment state for every parameter — the O(2d)
+//! optimizer-state memory the paper's Figure 1 charges Adam for (the
+//! memory model additionally accounts its fp32 weights + full gradient).
+
+use anyhow::{bail, Result};
+
+use crate::memory::Method;
+use crate::params::ParamStore;
+use crate::runtime::ModelExec;
+
+use super::{grad_global_norm, BatchNeeds, Optimizer, StepBatches, StepStats};
+
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub batch: usize,
+    t: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32, batch: usize) -> Self {
+        Self {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            batch,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    pub fn defaults() -> Self {
+        Self::new(1e-5, 8)
+    }
+
+    fn ensure_state(&mut self, params: &ParamStore) {
+        if self.m.is_empty() {
+            self.m = params.tensors().map(|t| vec![0.0; t.len()]).collect();
+            self.v = params.tensors().map(|t| vec![0.0; t.len()]).collect();
+        }
+    }
+
+    /// Bytes of optimizer state currently held (telemetry/memory model).
+    pub fn state_bytes(&self) -> usize {
+        (self.m.iter().map(Vec::len).sum::<usize>()
+            + self.v.iter().map(Vec::len).sum::<usize>())
+            * 4
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn needs(&self) -> BatchNeeds {
+        BatchNeeds { fo: self.batch, zo: 0 }
+    }
+
+    fn step(
+        &mut self,
+        params: &mut ParamStore,
+        exec: &mut dyn ModelExec,
+        batches: &StepBatches,
+        _step_seed: u64,
+    ) -> Result<StepStats> {
+        let Some(fo_batch) = &batches.fo else { bail!("adam needs a FO batch") };
+        let g = exec.grads(params, fo_batch)?;
+        self.ensure_state(params);
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        let norm = grad_global_norm(&g.grads);
+        for (idx, grad) in g.grads.iter().enumerate() {
+            let m = &mut self.m[idx];
+            let v = &mut self.v[idx];
+            let data = &mut params.get_mut(idx).tensor.data;
+            for i in 0..grad.len() {
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * grad[i];
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+                let mhat = m[i] / b1t;
+                let vhat = v[i] / b2t;
+                data[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+        Ok(StepStats {
+            loss: g.loss as f64,
+            g0: 0.0,
+            grad_norm: norm,
+            fwd_evals: 0,
+            bwd_evals: 1,
+        })
+    }
+
+    fn method(&self) -> Method {
+        Method::Adam
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::run_optimizer;
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut opt = Adam::new(0.05, 4);
+        let sub = run_optimizer(&mut opt, 16, 0.02, 600);
+        assert!(sub < 0.05, "suboptimality {sub}");
+    }
+
+    #[test]
+    fn state_bytes_counts_two_moments() {
+        use crate::optim::testutil::{quad, random_batch, store};
+        use crate::zorng::Xoshiro256;
+        let mut opt = Adam::new(0.01, 2);
+        let mut exec = quad(10, 0.0);
+        let mut p = store(10);
+        let mut rng = Xoshiro256::new(1);
+        let b = random_batch(2, &mut rng);
+        assert_eq!(opt.state_bytes(), 0);
+        opt.step(&mut p, &mut exec, &StepBatches { fo: Some(b), zo: None }, 0)
+            .unwrap();
+        assert_eq!(opt.state_bytes(), 2 * 10 * 4);
+    }
+}

@@ -1,0 +1,140 @@
+//! Layer-split hybrid ZO-FO baseline (Zhang et al. [69], discussed in §3.1
+//! and App. C of the Addax paper).
+//!
+//! Backpropagation is restricted to the *deep* layers (the last
+//! `1 − split_frac` fraction of parameter tensors); the shallow layers are
+//! updated with zeroth-order SPSA estimates whose perturbation touches
+//! only those shallow tensors. Unlike Addax it cannot exploit in-place
+//! updates for the FO part (its memory model charges deep-layer gradient
+//! residency) and both halves see the *same* batch — there is no
+//! length-based data assignment.
+
+use anyhow::{bail, Result};
+
+use crate::memory::Method;
+use crate::params::ParamStore;
+use crate::runtime::ModelExec;
+
+use super::{grad_global_norm, BatchNeeds, Optimizer, StepBatches, StepStats};
+
+#[derive(Clone, Debug)]
+pub struct HybridZoFo {
+    pub lr_fo: f32,
+    pub lr_zo: f32,
+    pub eps: f32,
+    pub batch: usize,
+    /// Fraction of tensors (from the front / shallow side) that use ZO.
+    pub split_frac: f32,
+}
+
+impl HybridZoFo {
+    pub fn new(lr_fo: f32, lr_zo: f32, eps: f32, batch: usize, split_frac: f32) -> Self {
+        assert!((0.0..=1.0).contains(&split_frac));
+        Self { lr_fo, lr_zo, eps, batch, split_frac }
+    }
+
+    pub fn defaults() -> Self {
+        Self::new(1e-4, 1e-6, 1e-3, 4, 0.5)
+    }
+
+    fn split_index(&self, n_tensors: usize) -> usize {
+        ((n_tensors as f32) * self.split_frac).round() as usize
+    }
+}
+
+impl Optimizer for HybridZoFo {
+    fn name(&self) -> &'static str {
+        "hybrid-zofo"
+    }
+
+    fn needs(&self) -> BatchNeeds {
+        // One batch, used by both halves (no data assignment).
+        BatchNeeds { fo: self.batch, zo: 0 }
+    }
+
+    fn step(
+        &mut self,
+        params: &mut ParamStore,
+        exec: &mut dyn ModelExec,
+        batches: &StepBatches,
+        step_seed: u64,
+    ) -> Result<StepStats> {
+        let Some(batch) = &batches.fo else { bail!("hybrid-zofo needs a batch") };
+        let split = self.split_index(params.len());
+        let shallow = move |idx: usize, _name: &str| idx < split;
+
+        // ZO half on the shallow tensors (subset SPSA, seed replay).
+        params.perturb_subset(step_seed, self.eps, shallow);
+        let l_plus = exec.mean_loss(params, batch)?;
+        params.perturb_subset(step_seed, -2.0 * self.eps, shallow);
+        let l_minus = exec.mean_loss(params, batch)?;
+        params.perturb_subset(step_seed, self.eps, shallow);
+        let g0 = (l_plus - l_minus) / (2.0 * self.eps as f64);
+
+        // FO half on the deep tensors only.
+        let g = exec.grads(params, batch)?;
+        let deep_grads: Vec<&Vec<f32>> = g.grads[split..].iter().collect();
+        let norm = grad_global_norm(&g.grads[split..]);
+        for (offset, grad) in deep_grads.into_iter().enumerate() {
+            params.fo_update_tensor(split + offset, self.lr_fo, 1.0, grad);
+        }
+
+        // Apply the ZO update to the shallow tensors via replay.
+        params.perturb_subset(step_seed, -self.lr_zo * g0 as f32, shallow);
+
+        Ok(StepStats {
+            loss: g.loss as f64,
+            g0,
+            grad_norm: norm,
+            fwd_evals: 2,
+            bwd_evals: 1,
+        })
+    }
+
+    fn method(&self) -> Method {
+        Method::HybridZoFo
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr_fo as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::{quad, random_batch, run_optimizer, store};
+    use crate::zorng::Xoshiro256;
+
+    #[test]
+    fn hybrid_converges_on_quadratic() {
+        let mut opt = HybridZoFo::new(0.1, 0.02, 1e-3, 4, 0.5);
+        let sub = run_optimizer(&mut opt, 16, 0.0, 800);
+        assert!(sub < 0.5, "suboptimality {sub}");
+    }
+
+    #[test]
+    fn shallow_perturbation_leaves_deep_untouched() {
+        let mut p = store(16); // 2 tensors: w1 (8), w2 (8)
+        let before = p.clone();
+        p.perturb_subset(7, 0.1, |idx, _| idx < 1);
+        // tensor 0 changed, tensor 1 identical
+        assert!(p.get(0).tensor.data != before.get(0).tensor.data);
+        assert_eq!(p.get(1).tensor.data, before.get(1).tensor.data);
+    }
+
+    #[test]
+    fn step_restores_shallow_exactly_before_update() {
+        // With lr_zo = 0 and lr_fo = 0, a step must leave params unchanged.
+        let mut opt = HybridZoFo::new(0.0, 0.0, 1e-3, 2, 0.5);
+        let mut exec = quad(16, 0.0);
+        let mut p = store(16);
+        p.perturb(3, 1.0);
+        let before = p.clone();
+        let mut rng = Xoshiro256::new(4);
+        let b = random_batch(2, &mut rng);
+        opt.step(&mut p, &mut exec, &super::StepBatches { fo: Some(b), zo: None }, 5)
+            .unwrap();
+        assert!(p.dist_sq(&before) < 1e-10, "drift {}", p.dist_sq(&before));
+    }
+}

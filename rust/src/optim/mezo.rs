@@ -1,0 +1,192 @@
+//! MeZO (Malladi et al. [42]) and the naive ZO-SGD it improves on.
+//!
+//! MeZO = ZO-SGD with the in-place seed-replay trick: only the seed is
+//! stored, so memory ≈ inference. `ZoSgdNaive` materializes the full
+//! perturbation vector `z ∈ R^d` — numerically identical updates, O(d)
+//! extra memory — kept as the ablation the paper's §2.2 describes.
+
+use anyhow::{bail, Result};
+
+use crate::memory::Method;
+use crate::params::ParamStore;
+use crate::runtime::ModelExec;
+use crate::zorng::NoiseStream;
+
+use super::{spsa_g0, BatchNeeds, Optimizer, StepBatches, StepStats};
+
+/// MeZO: `θ ← θ − η·g⁰·z`, z replayed from the step seed.
+#[derive(Clone, Debug)]
+pub struct MeZo {
+    pub lr: f32,
+    pub eps: f32,
+    pub batch: usize,
+}
+
+impl MeZo {
+    pub fn new(lr: f32, eps: f32, batch: usize) -> Self {
+        Self { lr, eps, batch }
+    }
+
+    /// Paper defaults (Table 7: η ∈ {1e-6, 1e-7}, ε = 1e-3).
+    pub fn defaults() -> Self {
+        Self::new(1e-6, 1e-3, 16)
+    }
+}
+
+impl Optimizer for MeZo {
+    fn name(&self) -> &'static str {
+        "mezo"
+    }
+
+    fn needs(&self) -> BatchNeeds {
+        BatchNeeds { fo: 0, zo: self.batch }
+    }
+
+    fn step(
+        &mut self,
+        params: &mut ParamStore,
+        exec: &mut dyn ModelExec,
+        batches: &StepBatches,
+        step_seed: u64,
+    ) -> Result<StepStats> {
+        let Some(zo_batch) = &batches.zo else { bail!("mezo needs a ZO batch") };
+        let (g0, loss) = spsa_g0(params, exec, zo_batch, self.eps, step_seed)?;
+        params.zo_update(step_seed, self.lr, 1.0, g0 as f32);
+        Ok(StepStats { loss, g0, grad_norm: 0.0, fwd_evals: 2, bwd_evals: 0 })
+    }
+
+    fn method(&self) -> Method {
+        Method::MeZo
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr as f64
+    }
+}
+
+/// ZO-SGD without the seed trick: materializes `z` (O(d) memory).
+///
+/// Produces *identical* parameter trajectories to [`MeZo`] given the same
+/// seeds — asserted by a test below — which is exactly the paper's point:
+/// the seed trick changes memory, not mathematics.
+#[derive(Clone, Debug)]
+pub struct ZoSgdNaive {
+    pub lr: f32,
+    pub eps: f32,
+    pub batch: usize,
+}
+
+impl ZoSgdNaive {
+    pub fn new(lr: f32, eps: f32, batch: usize) -> Self {
+        Self { lr, eps, batch }
+    }
+}
+
+impl Optimizer for ZoSgdNaive {
+    fn name(&self) -> &'static str {
+        "zo-sgd"
+    }
+
+    fn needs(&self) -> BatchNeeds {
+        BatchNeeds { fo: 0, zo: self.batch }
+    }
+
+    fn step(
+        &mut self,
+        params: &mut ParamStore,
+        exec: &mut dyn ModelExec,
+        batches: &StepBatches,
+        step_seed: u64,
+    ) -> Result<StepStats> {
+        let Some(zo_batch) = &batches.zo else { bail!("zo-sgd needs a ZO batch") };
+
+        // Materialize z for the whole model — the memory cost MeZO avoids.
+        let mut stream = NoiseStream::new(step_seed);
+        let z: Vec<Vec<f32>> = params
+            .tensors()
+            .map(|t| {
+                let mut v = vec![0.0f32; t.len()];
+                stream.fill_normal(&mut v);
+                v
+            })
+            .collect();
+
+        // θ ± εz without replay.
+        for (idx, zt) in z.iter().enumerate() {
+            params.get_mut(idx).tensor.axpy(self.eps, zt);
+        }
+        let l_plus = exec.mean_loss(params, zo_batch)?;
+        for (idx, zt) in z.iter().enumerate() {
+            params.get_mut(idx).tensor.axpy(-2.0 * self.eps, zt);
+        }
+        let l_minus = exec.mean_loss(params, zo_batch)?;
+        for (idx, zt) in z.iter().enumerate() {
+            params.get_mut(idx).tensor.axpy(self.eps, zt);
+        }
+        let g0 = (l_plus - l_minus) / (2.0 * self.eps as f64);
+        for (idx, zt) in z.iter().enumerate() {
+            params.get_mut(idx).tensor.axpy(-self.lr * g0 as f32, zt);
+        }
+        Ok(StepStats {
+            loss: 0.5 * (l_plus + l_minus),
+            g0,
+            grad_norm: 0.0,
+            fwd_evals: 2,
+            bwd_evals: 0,
+        })
+    }
+
+    fn method(&self) -> Method {
+        Method::ZoSgdNaive
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::{quad, random_batch, run_optimizer, store};
+    use crate::optim::StepBatches;
+    use crate::zorng::Xoshiro256;
+
+    #[test]
+    fn mezo_descends_on_quadratic() {
+        let mut opt = MeZo::new(0.02, 1e-3, 8);
+        let sub = run_optimizer(&mut opt, 8, 0.0, 800);
+        assert!(sub < 1.0, "suboptimality {sub}");
+    }
+
+    #[test]
+    fn mezo_and_naive_trajectories_identical() {
+        let d = 12;
+        let mut exec = quad(d, 0.05);
+        let mut pa = store(d);
+        pa.perturb(1, 1.0);
+        let mut pb = pa.clone();
+        let mut mezo = MeZo::new(0.05, 1e-3, 4);
+        let mut naive = ZoSgdNaive::new(0.05, 1e-3, 4);
+        let mut rng = Xoshiro256::new(5);
+        for s in 0..50 {
+            let b = random_batch(4, &mut rng);
+            let sb = StepBatches { fo: None, zo: Some(b) };
+            let sa = mezo.step(&mut pa, &mut exec, &sb, s).unwrap();
+            let sn = naive.step(&mut pb, &mut exec, &sb, s).unwrap();
+            assert!((sa.g0 - sn.g0).abs() < 1e-9);
+        }
+        // Identical math; tiny float divergence allowed because the naive
+        // version materializes z and applies ±ε in a different op order.
+        assert!(pa.dist_sq(&pb) < 1e-8, "dist {}", pa.dist_sq(&pb));
+    }
+
+    #[test]
+    fn mezo_needs_zo_batch() {
+        let mut opt = MeZo::defaults();
+        let mut exec = quad(4, 0.0);
+        let mut p = store(4);
+        let r = opt.step(&mut p, &mut exec, &StepBatches::default(), 0);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! The optimizer zoo: Addax (the paper's contribution) and every baseline
+//! it is compared against (MeZO, ZO-SGD, SGD, IP-SGD, Adam, and the
+//! layer-split hybrid ZO-FO scheme of Zhang et al. [69]).
+//!
+//! All optimizers speak the same [`Optimizer`] trait: the coordinator
+//! samples the batches each optimizer declares it needs (a first-order
+//! batch from `D¹`, a zeroth-order batch from `D⁰`, or both) and calls
+//! [`Optimizer::step`]. Updates are applied **in place** on the
+//! [`ParamStore`]; gradients and noise are transient.
+
+mod adam;
+mod addax;
+mod hybrid;
+mod mezo;
+mod sgd;
+
+pub use adam::Adam;
+pub use addax::Addax;
+pub use hybrid::HybridZoFo;
+pub use mezo::{MeZo, ZoSgdNaive};
+pub use sgd::{IpSgd, Sgd};
+
+use anyhow::Result;
+
+use crate::memory::Method;
+use crate::params::ParamStore;
+use crate::runtime::{ModelExec, TokenBatch};
+
+/// How many examples an optimizer wants per step from each partition.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatchNeeds {
+    /// First-order batch size `K¹` (drawn from `D¹`, short sequences).
+    pub fo: usize,
+    /// Zeroth-order batch size `K⁰` (drawn from `D⁰`, long sequences).
+    pub zo: usize,
+}
+
+/// The batches the coordinator sampled for one step.
+#[derive(Clone, Debug, Default)]
+pub struct StepBatches {
+    pub fo: Option<TokenBatch>,
+    pub zo: Option<TokenBatch>,
+}
+
+/// Telemetry from a single optimizer step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// Training loss observed this step (FO loss if available, else the
+    /// mean of the two ZO probe losses).
+    pub loss: f64,
+    /// SPSA directional-derivative estimate `g⁰` (0 if no ZO part).
+    pub g0: f64,
+    /// Global gradient norm of the FO part (0 if no FO part).
+    pub grad_norm: f64,
+    /// Forward executions used.
+    pub fwd_evals: u32,
+    /// Backward (grads) executions used.
+    pub bwd_evals: u32,
+}
+
+/// A fine-tuning optimizer with in-place updates.
+pub trait Optimizer: Send {
+    fn name(&self) -> &'static str;
+
+    /// Batch sizes to sample for each step.
+    fn needs(&self) -> BatchNeeds;
+
+    /// Perform one in-place update of `params`.
+    ///
+    /// `step_seed` is the per-step seed used for ZO noise replay; the
+    /// coordinator derives it as `derive_seed(run_seed, step)`.
+    fn step(
+        &mut self,
+        params: &mut ParamStore,
+        exec: &mut dyn ModelExec,
+        batches: &StepBatches,
+        step_seed: u64,
+    ) -> Result<StepStats>;
+
+    /// The memory-model method this optimizer corresponds to (drives the
+    /// GPU footprint simulation, Figures 1-4).
+    fn method(&self) -> Method;
+
+    /// Learning rate accessor (for schedules / logging).
+    fn lr(&self) -> f64;
+}
+
+/// SPSA zeroth-order directional derivative (Algorithm 2) via seed replay.
+///
+/// Perturbs `params` in place (+ε, −2ε, +ε), evaluating the loss twice,
+/// and returns `g⁰ = (L(θ+εz) − L(θ−εz)) / 2ε` together with the mean of
+/// the two probe losses. `params` is restored exactly (bit-wise) because
+/// the same `z` values are added and subtracted.
+pub fn spsa_g0(
+    params: &mut ParamStore,
+    exec: &mut dyn ModelExec,
+    batch: &TokenBatch,
+    eps: f32,
+    seed: u64,
+) -> Result<(f64, f64)> {
+    params.perturb(seed, eps);
+    let l_plus = exec.mean_loss(params, batch)?;
+    params.perturb(seed, -2.0 * eps);
+    let l_minus = exec.mean_loss(params, batch)?;
+    params.perturb(seed, eps);
+    let g0 = (l_plus - l_minus) / (2.0 * eps as f64);
+    Ok((g0, 0.5 * (l_plus + l_minus)))
+}
+
+/// Global-norm of a gradient list.
+pub fn grad_global_norm(grads: &[Vec<f32>]) -> f64 {
+    grads
+        .iter()
+        .map(|t| t.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::runtime::mock::QuadraticExec;
+    use crate::runtime::TokenBatch;
+    use crate::zorng::Xoshiro256;
+
+    pub fn store(d: usize) -> ParamStore {
+        ParamStore::zeros(&[
+            ("w1".to_string(), vec![d / 2]),
+            ("w2".to_string(), vec![d - d / 2]),
+        ])
+    }
+
+    pub fn quad(d: usize, sigma: f32) -> QuadraticExec {
+        QuadraticExec::new(d, 0.5, 2.0, sigma, 13)
+    }
+
+    pub fn random_batch(n: usize, rng: &mut Xoshiro256) -> TokenBatch {
+        let rows: Vec<_> = (0..n)
+            .map(|_| (vec![rng.next_below(1000) as i32 + 1, 7], vec![-1, -1]))
+            .collect();
+        TokenBatch::from_rows(&rows)
+    }
+
+    /// Run `opt` for `steps` on the quadratic and return final suboptimality.
+    pub fn run_optimizer(
+        opt: &mut dyn Optimizer,
+        d: usize,
+        sigma: f32,
+        steps: usize,
+    ) -> f64 {
+        let mut exec = quad(d, sigma);
+        let mut params = store(d);
+        let mut rng = Xoshiro256::new(99);
+        for s in 0..steps {
+            let needs = opt.needs();
+            let batches = StepBatches {
+                fo: (needs.fo > 0).then(|| random_batch(needs.fo, &mut rng)),
+                zo: (needs.zo > 0).then(|| random_batch(needs.zo, &mut rng)),
+            };
+            opt.step(&mut params, &mut exec, &batches, s as u64 * 7919 + 1)
+                .unwrap();
+        }
+        exec.suboptimality(&params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spsa_restores_params_exactly() {
+        let mut params = testutil::store(16);
+        params.perturb(3, 1.0);
+        let before = params.clone();
+        let mut exec = testutil::quad(16, 0.0);
+        let mut rng = crate::zorng::Xoshiro256::new(1);
+        let batch = testutil::random_batch(4, &mut rng);
+        let (g0, loss) = spsa_g0(&mut params, &mut exec, &batch, 1e-3, 77).unwrap();
+        assert!(g0.is_finite() && loss.is_finite());
+        assert!(params.dist_sq(&before) < 1e-10, "restore drift {}", params.dist_sq(&before));
+    }
+
+    #[test]
+    fn spsa_matches_directional_derivative_on_quadratic() {
+        let mut params = testutil::store(16);
+        params.perturb(5, 1.0);
+        let mut exec = testutil::quad(16, 0.0);
+        let mut rng = crate::zorng::Xoshiro256::new(2);
+        let batch = testutil::random_batch(2, &mut rng);
+        let seed = 31;
+        let (g0, _) = spsa_g0(&mut params, &mut exec, &batch, 1e-4, seed).unwrap();
+        // z·∇L with z replayed
+        let g = exec.grads(&params, &batch).unwrap();
+        let mut stream = crate::zorng::NoiseStream::new(seed);
+        let mut dir = 0.0f64;
+        for t in &g.grads {
+            for &gi in t {
+                dir += gi as f64 * stream.next_normal() as f64;
+            }
+        }
+        assert!((g0 - dir).abs() < 0.05 * dir.abs().max(1.0), "{g0} vs {dir}");
+    }
+
+    #[test]
+    fn grad_norm_helper() {
+        let g = vec![vec![3.0f32], vec![4.0f32]];
+        assert!((grad_global_norm(&g) - 5.0).abs() < 1e-9);
+    }
+}

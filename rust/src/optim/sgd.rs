@@ -1,0 +1,183 @@
+//! SGD and IP-SGD baselines.
+//!
+//! The paper distinguishes them (App. B): **SGD** materializes the full
+//! gradient so it can apply global-norm clipping/normalization before the
+//! update (O(d) gradient memory); **IP-SGD** updates each tensor as soon
+//! as its gradient is available and discards it, so no normalization is
+//! possible but memory does not scale with model size.
+//!
+//! In this AOT substrate both receive the per-tensor gradients from the
+//! grads artifact; the *semantic* difference (normalize-then-apply vs
+//! apply-per-tensor) and the *memory-model* difference (Method::Sgd
+//! charges full-gradient residency) are both preserved.
+
+use anyhow::{bail, Result};
+
+use crate::memory::Method;
+use crate::params::ParamStore;
+use crate::runtime::ModelExec;
+
+use super::{grad_global_norm, BatchNeeds, Optimizer, StepBatches, StepStats};
+
+/// SGD with global-norm gradient clipping (`clip = 1.0` by default).
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub lr: f32,
+    pub batch: usize,
+    /// Clip threshold for the global gradient norm (None = no clipping).
+    pub clip: Option<f32>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, batch: usize, clip: Option<f32>) -> Self {
+        Self { lr, batch, clip }
+    }
+
+    pub fn defaults() -> Self {
+        Self::new(5e-3, 16, Some(1.0))
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn needs(&self) -> BatchNeeds {
+        BatchNeeds { fo: self.batch, zo: 0 }
+    }
+
+    fn step(
+        &mut self,
+        params: &mut ParamStore,
+        exec: &mut dyn ModelExec,
+        batches: &StepBatches,
+        _step_seed: u64,
+    ) -> Result<StepStats> {
+        let Some(fo_batch) = &batches.fo else { bail!("sgd needs a FO batch") };
+        let g = exec.grads(params, fo_batch)?;
+        let norm = grad_global_norm(&g.grads);
+        // Global-norm clipping requires the WHOLE gradient first — this is
+        // exactly why SGD cannot be done in place (App. B).
+        let scale = match self.clip {
+            Some(c) if norm > c as f64 => (c as f64 / norm) as f32,
+            _ => 1.0,
+        };
+        for (idx, grad) in g.grads.iter().enumerate() {
+            params.fo_update_tensor(idx, self.lr * scale, 1.0, grad);
+        }
+        Ok(StepStats {
+            loss: g.loss as f64,
+            g0: 0.0,
+            grad_norm: norm,
+            fwd_evals: 0,
+            bwd_evals: 1,
+        })
+    }
+
+    fn method(&self) -> Method {
+        Method::Sgd
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr as f64
+    }
+}
+
+/// In-place SGD: per-tensor update, no normalization, no gradient storage.
+#[derive(Clone, Debug)]
+pub struct IpSgd {
+    pub lr: f32,
+    pub batch: usize,
+}
+
+impl IpSgd {
+    pub fn new(lr: f32, batch: usize) -> Self {
+        Self { lr, batch }
+    }
+
+    pub fn defaults() -> Self {
+        Self::new(1e-4, 4)
+    }
+}
+
+impl Optimizer for IpSgd {
+    fn name(&self) -> &'static str {
+        "ip-sgd"
+    }
+
+    fn needs(&self) -> BatchNeeds {
+        BatchNeeds { fo: self.batch, zo: 0 }
+    }
+
+    fn step(
+        &mut self,
+        params: &mut ParamStore,
+        exec: &mut dyn ModelExec,
+        batches: &StepBatches,
+        _step_seed: u64,
+    ) -> Result<StepStats> {
+        let Some(fo_batch) = &batches.fo else { bail!("ip-sgd needs a FO batch") };
+        let g = exec.grads(params, fo_batch)?;
+        let norm = grad_global_norm(&g.grads);
+        for (idx, grad) in g.grads.iter().enumerate() {
+            // update, then conceptually drop grad (in-place discipline)
+            params.fo_update_tensor(idx, self.lr, 1.0, grad);
+        }
+        Ok(StepStats {
+            loss: g.loss as f64,
+            g0: 0.0,
+            grad_norm: norm,
+            fwd_evals: 0,
+            bwd_evals: 1,
+        })
+    }
+
+    fn method(&self) -> Method {
+        Method::IpSgd
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::run_optimizer;
+
+    #[test]
+    fn ip_sgd_converges_fast() {
+        let mut opt = IpSgd::new(0.1, 4);
+        let sub = run_optimizer(&mut opt, 16, 0.0, 200);
+        assert!(sub < 1e-4, "suboptimality {sub}");
+    }
+
+    #[test]
+    fn sgd_with_clip_converges() {
+        let mut opt = Sgd::new(0.1, 4, Some(1.0));
+        let sub = run_optimizer(&mut opt, 16, 0.05, 400);
+        assert!(sub < 0.05, "suboptimality {sub}");
+    }
+
+    #[test]
+    fn clipping_bounds_update_size() {
+        use crate::optim::testutil::{quad, random_batch, store};
+        use crate::zorng::Xoshiro256;
+        let mut exec = quad(8, 0.0);
+        let mut p = store(8);
+        p.perturb(1, 100.0); // far from optimum => huge gradient
+        let before = p.clone();
+        let mut rng = Xoshiro256::new(2);
+        let b = random_batch(2, &mut rng);
+        let mut opt = Sgd::new(1.0, 2, Some(0.5));
+        let stats = opt
+            .step(&mut p, &mut exec, &StepBatches { fo: Some(b), zo: None }, 0)
+            .unwrap();
+        assert!(stats.grad_norm > 0.5);
+        // ‖Δθ‖ = lr * clip = 0.5
+        let dist = p.dist_sq(&before).sqrt();
+        assert!((dist - 0.5).abs() < 1e-3, "dist {dist}");
+    }
+}

@@ -1,0 +1,295 @@
+//! The in-place parameter store: rust owns the model state (Alg. 1).
+//!
+//! All optimizer updates happen here, tensor by tensor, with gradients and
+//! perturbation noise discarded immediately — the in-place discipline that
+//! gives IP-SGD/MeZO/Addax their memory profile (paper §2.3, App. B).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::HostTensor;
+use crate::zorng::NoiseStream;
+
+/// One named parameter tensor.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub tensor: HostTensor,
+}
+
+/// Ordered collection of model parameters.
+///
+/// The order is the canonical `param_specs` order from
+/// `python/compile/model.py`, recorded in the manifest; the ZO noise
+/// stream is consumed in exactly this order so that perturbation and
+/// update replay line up (Alg. 3 iterates layers in a fixed order).
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    params: Vec<Param>,
+}
+
+impl ParamStore {
+    pub fn new(params: Vec<Param>) -> Self {
+        Self { params }
+    }
+
+    /// Build zero-initialized params from (name, shape) specs.
+    pub fn zeros(specs: &[(String, Vec<usize>)]) -> Self {
+        let params = specs
+            .iter()
+            .map(|(n, s)| Param { name: n.clone(), tensor: HostTensor::zeros(s) })
+            .collect();
+        Self { params }
+    }
+
+    /// Load from the AOT dump: concatenated little-endian f32 in spec order.
+    pub fn load_bin(specs: &[(String, Vec<usize>)], path: &Path) -> Result<Self> {
+        let mut file = std::fs::File::open(path)
+            .with_context(|| format!("opening params file {}", path.display()))?;
+        let mut params = Vec::with_capacity(specs.len());
+        for (name, shape) in specs {
+            let n: usize = shape.iter().product();
+            let mut bytes = vec![0u8; n * 4];
+            file.read_exact(&mut bytes)
+                .with_context(|| format!("reading {name} ({n} f32)"))?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            params.push(Param { name: name.clone(), tensor: HostTensor::from_vec(shape, data) });
+        }
+        // The file must be fully consumed — a longer file means the specs
+        // and the dump disagree.
+        let mut extra = [0u8; 1];
+        if file.read(&mut extra)? != 0 {
+            bail!("params file {} longer than specs describe", path.display());
+        }
+        Ok(Self { params })
+    }
+
+    /// Save in the same binary format (checkpointing).
+    pub fn save_bin(&self, path: &Path) -> Result<()> {
+        let mut file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        for p in &self.params {
+            let mut bytes = Vec::with_capacity(p.tensor.len() * 4);
+            for &v in &p.tensor.data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            file.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
+    /// Total scalar parameter count `d`.
+    pub fn n_scalars(&self) -> usize {
+        self.params.iter().map(|p| p.tensor.len()).sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Param> {
+        self.params.iter()
+    }
+
+    pub fn tensors(&self) -> impl Iterator<Item = &HostTensor> {
+        self.params.iter().map(|p| &p.tensor)
+    }
+
+    pub fn get(&self, idx: usize) -> &Param {
+        &self.params[idx]
+    }
+
+    pub fn get_mut(&mut self, idx: usize) -> &mut Param {
+        &mut self.params[idx]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Param> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// In-place Gaussian perturbation: `θ_m ← θ_m + scale·z_m` for every
+    /// tensor, with `z` replayed from `seed` (Algorithm 3). Generation is
+    /// fused with the apply loop — no transient noise buffer at all.
+    pub fn perturb(&mut self, seed: u64, scale: f32) {
+        let mut stream = NoiseStream::new(seed);
+        for p in self.params.iter_mut() {
+            // fused generate+apply: one pass over the data (§Perf)
+            for v in p.tensor.data.iter_mut() {
+                *v += scale * stream.next_normal();
+            }
+        }
+    }
+
+    /// Perturb only the tensors for which `include(idx, name)` is true.
+    ///
+    /// The noise stream is consumed **only** for included tensors, so a
+    /// matching `perturb_subset` with the same seed and filter replays the
+    /// identical noise (used by the layer-split hybrid ZO-FO baseline of
+    /// Zhang et al. [69]).
+    pub fn perturb_subset<F: Fn(usize, &str) -> bool>(
+        &mut self,
+        seed: u64,
+        scale: f32,
+        include: F,
+    ) {
+        let mut stream = NoiseStream::new(seed);
+        let mut chunk = [0.0f32; 4096];
+        for (idx, p) in self.params.iter_mut().enumerate() {
+            if !include(idx, &p.name) {
+                continue;
+            }
+            let data = &mut p.tensor.data;
+            let mut off = 0;
+            while off < data.len() {
+                let n = (data.len() - off).min(chunk.len());
+                stream.fill_normal(&mut chunk[..n]);
+                for i in 0..n {
+                    data[off + i] += scale * chunk[i];
+                }
+                off += n;
+            }
+        }
+    }
+
+    /// The ZO half of the Addax/MeZO update (Alg. 1 lines 13-17):
+    /// `θ ← θ − lr·coeff·g⁰·z`, replaying `z` from `seed`.
+    ///
+    /// Equivalent to `perturb(seed, -lr*coeff*g0)`; kept as a named method
+    /// because it is the algorithmically meaningful operation.
+    pub fn zo_update(&mut self, seed: u64, lr: f32, coeff: f32, g0: f32) {
+        self.perturb(seed, -lr * coeff * g0);
+    }
+
+    /// The FO half: `θ_m ← θ_m − lr·coeff·g_m`, one tensor at a time
+    /// (the caller drops each gradient right after — in-place SGD).
+    pub fn fo_update_tensor(&mut self, idx: usize, lr: f32, coeff: f32, grad: &[f32]) {
+        self.params[idx].tensor.axpy(-lr * coeff, grad);
+    }
+
+    /// Apply FO updates for all tensors from a gradient list.
+    pub fn fo_update_all(&mut self, lr: f32, coeff: f32, grads: &[Vec<f32>]) {
+        assert_eq!(grads.len(), self.params.len());
+        for (i, g) in grads.iter().enumerate() {
+            self.fo_update_tensor(i, lr, coeff, g);
+        }
+    }
+
+    /// Squared L2 distance to another store (tests, theory experiments).
+    pub fn dist_sq(&self, other: &ParamStore) -> f64 {
+        self.params
+            .iter()
+            .zip(other.params.iter())
+            .map(|(a, b)| {
+                a.tensor
+                    .data
+                    .iter()
+                    .zip(b.tensor.data.iter())
+                    .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                    .sum::<f64>()
+            })
+            .sum()
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.params.iter().all(|p| p.tensor.all_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<(String, Vec<usize>)> {
+        vec![
+            ("a".into(), vec![3, 2]),
+            ("b".into(), vec![5]),
+            ("c".into(), vec![2, 2, 2]),
+        ]
+    }
+
+    #[test]
+    fn zeros_and_counts() {
+        let s = ParamStore::zeros(&specs());
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.n_scalars(), 6 + 5 + 8);
+    }
+
+    #[test]
+    fn perturb_roundtrip_restores_exactly_like_algorithm2() {
+        // θ +ε z, then −2ε z, then +ε z must return exactly to θ when the
+        // same seed replays the same z (floating error cancels exactly
+        // because the identical z values are added/subtracted).
+        let mut s = ParamStore::zeros(&specs());
+        s.perturb(123, 0.5); // give θ nonzero values
+        let before = s.clone();
+        let seed = 777;
+        let eps = 1e-3f32;
+        s.perturb(seed, eps);
+        s.perturb(seed, -2.0 * eps);
+        s.perturb(seed, eps);
+        for (a, b) in s.iter().zip(before.iter()) {
+            for (x, y) in a.tensor.data.iter().zip(b.tensor.data.iter()) {
+                assert!((x - y).abs() <= 1e-6, "{} vs {}", x, y);
+            }
+        }
+    }
+
+    #[test]
+    fn zo_update_matches_manual_replay() {
+        let mut s = ParamStore::zeros(&specs());
+        let seed = 99;
+        s.zo_update(seed, 0.1, 0.5, 2.0);
+        // manual: θ = -0.1*0.5*2.0 * z
+        let mut stream = NoiseStream::new(seed);
+        for p in s.iter() {
+            for &v in &p.tensor.data {
+                let z = stream.next_normal();
+                assert!((v - (-0.1 * 0.5 * 2.0 * z)).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("addax_test_params");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.bin");
+        let mut s = ParamStore::zeros(&specs());
+        s.perturb(5, 1.0);
+        s.save_bin(&path).unwrap();
+        let loaded = ParamStore::load_bin(&specs(), &path).unwrap();
+        assert!(s.dist_sq(&loaded) == 0.0);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_wrong_size() {
+        let dir = std::env::temp_dir().join("addax_test_params2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, vec![0u8; 10]).unwrap();
+        assert!(ParamStore::load_bin(&specs(), &path).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn fo_update_applies_per_tensor() {
+        let mut s = ParamStore::zeros(&specs());
+        let grads: Vec<Vec<f32>> = s.iter().map(|p| vec![1.0; p.tensor.len()]).collect();
+        s.fo_update_all(0.1, 0.5, &grads);
+        for p in s.iter() {
+            for &v in &p.tensor.data {
+                assert!((v + 0.05).abs() < 1e-7);
+            }
+        }
+    }
+}

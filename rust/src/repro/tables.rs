@@ -1,0 +1,352 @@
+//! Tables 11-15 (and their figure twins 1, 2, 7, 10).
+//!
+//! Each table combines:
+//!  * **memory + batch-size columns** — analytic footprints at the paper's
+//!    model geometry and device, with the App. D.6 grid search (OOM = `*`);
+//!  * **accuracy / time columns** — measured runs of the same algorithms
+//!    at laptop scale (`tiny` by default, `--model small|base-ref` to
+//!    scale up).
+
+use anyhow::Result;
+
+use crate::data::{self, TaskDef};
+use crate::jsonlite::{obj, Json};
+use crate::memory::{
+    footprint, geometry, max_batch_in_grid, Device, Method, Workload,
+};
+use crate::metrics::Table;
+
+use super::{emit, Harness, MethodKind};
+
+const FP16: f64 = 2.0;
+
+/// Addax's (K¹, K⁰) across all OPT tables (App. D.6).
+const K1: usize = 4;
+const K0: usize = 6;
+
+struct TableSpec {
+    id: &'static str,
+    title: &'static str,
+    geometry: geometry::ModelGeometry,
+    device: Device,
+    tasks: &'static [&'static str],
+    /// Addax L_T at the paper scale.
+    lt: usize,
+    include_adam: bool,
+}
+
+fn memory_cell(
+    spec: &TableSpec,
+    task: &TaskDef,
+    method: MethodKind,
+) -> (String, String) {
+    // returns (memory GB or "*", batch size string)
+    let g = &spec.geometry;
+    let l = task.lengths.l_max;
+    match method {
+        MethodKind::ZeroShot => ("-".into(), "-".into()),
+        MethodKind::Adam => {
+            let f = footprint(g, Method::Adam, Workload::fo(8, l), 4.0);
+            (format!("{:.0}", f.gb()), "8".into())
+        }
+        MethodKind::Addax => {
+            let zo_len = l;
+            let fo_len = spec.lt.min(l);
+            let wl = Workload::mixed(K1, fo_len, K0, zo_len);
+            let f = footprint(g, Method::Addax, wl, FP16);
+            if f.total <= spec.device.total_bytes() {
+                (format!("{:.1}", f.gb()), format!("({K1},{K0})"))
+            } else {
+                ("*".into(), "*".into())
+            }
+        }
+        _ => {
+            let m = match method {
+                MethodKind::MeZo => Method::MeZo,
+                MethodKind::Sgd => Method::Sgd,
+                MethodKind::IpSgd => Method::IpSgd,
+                _ => unreachable!(),
+            };
+            match max_batch_in_grid(g, m, l, &spec.device, FP16) {
+                None => ("*".into(), "*".into()),
+                Some(b) => {
+                    let wl = match m {
+                        Method::MeZo => Workload::zo(b, l),
+                        _ => Workload::fo(b, l),
+                    };
+                    let f = footprint(g, m, wl, FP16);
+                    (format!("{:.1}", f.gb()), b.to_string())
+                }
+            }
+        }
+    }
+}
+
+fn render_opt_table(spec: &TableSpec, h: &mut Harness) -> Result<()> {
+    let base_steps = if h.fast { 300 } else { 600 };
+    let zo_mult = if h.fast { 3 } else { 5 };
+    let methods = if spec.include_adam {
+        vec![
+            MethodKind::ZeroShot,
+            MethodKind::MeZo,
+            MethodKind::Sgd,
+            MethodKind::IpSgd,
+            MethodKind::Adam,
+            MethodKind::Addax,
+        ]
+    } else {
+        vec![
+            MethodKind::ZeroShot,
+            MethodKind::MeZo,
+            MethodKind::Sgd,
+            MethodKind::IpSgd,
+            MethodKind::Addax,
+        ]
+    };
+
+    let mut acc_tbl = Table::new(
+        &[&["method"], spec.tasks].concat().iter().map(|s| *s).collect::<Vec<_>>(),
+    );
+    let mut mem_tbl = acc_tbl_clone_header(&acc_tbl);
+    let mut bs_tbl = acc_tbl_clone_header(&acc_tbl);
+    let mut time_tbl = acc_tbl_clone_header(&acc_tbl);
+    let mut raw_rows = Vec::new();
+    let model_key = h.model_key.clone();
+
+    for method in &methods {
+        let mut acc_row = vec![method.label().to_string()];
+        let mut mem_row = acc_row.clone();
+        let mut bs_row = acc_row.clone();
+        let mut time_row = acc_row.clone();
+        for tname in spec.tasks {
+            let task = *data::opt_task(tname).expect("task");
+            let (mem, bs) = memory_cell(spec, &task, *method);
+            let oom = mem == "*";
+            mem_row.push(mem.clone());
+            bs_row.push(bs.clone());
+            if oom {
+                // The paper's `*`: the method cannot run at this scale.
+                acc_row.push("*".into());
+                time_row.push("*".into());
+                raw_rows.push(obj(vec![
+                    ("method", Json::from(method.label())),
+                    ("task", Json::from(*tname)),
+                    ("oom", Json::from(true)),
+                ]));
+                continue;
+            }
+            let cell =
+                h.run_cell(&model_key, &task, *method, base_steps, zo_mult, 0)?;
+            acc_row.push(format!("{:.1}", 100.0 * cell.test_acc));
+            time_row.push(if *method == MethodKind::ZeroShot {
+                "-".into()
+            } else {
+                format!("{:.1}m", cell.time_to_best / 60.0)
+            });
+            raw_rows.push(obj(vec![
+                ("method", Json::from(method.label())),
+                ("task", Json::from(*tname)),
+                ("acc", Json::from(cell.test_acc)),
+                ("f1", Json::from(cell.test_f1)),
+                ("time_to_best_secs", Json::from(cell.time_to_best)),
+                ("steps", Json::from(cell.steps)),
+                ("mem_gb", Json::from(mem.clone())),
+                ("bs", Json::from(bs.clone())),
+            ]));
+        }
+        acc_tbl.row(acc_row);
+        mem_tbl.row(mem_row);
+        bs_tbl.row(bs_row);
+        time_tbl.row(time_row);
+    }
+
+    let md = format!(
+        "# {} — {}\n\nGeometry: {} on {}×{} ({} GB total). Memory/BS from the \
+         analytic model + App. D.6 grid; accuracy & time measured at laptop \
+         scale (model `{}`, {} FO steps, MeZO ×{}). `*` = OOM even at the \
+         smallest grid batch.\n\n## Accuracy / F1 (%)\n{}\n## Simulated memory (GB)\n{}\n\
+         ## Batch size (grid-searched)\n{}\n## Wall-clock to best validation\n{}\n",
+        spec.id,
+        spec.title,
+        spec.geometry.name,
+        spec.device.count,
+        spec.device.name,
+        spec.device.total_bytes() / 1e9,
+        model_key,
+        base_steps,
+        zo_mult,
+        acc_tbl.render(),
+        mem_tbl.render(),
+        bs_tbl.render(),
+        time_tbl.render()
+    );
+    emit(spec.id, &md, Json::Arr(raw_rows))
+}
+
+fn acc_tbl_clone_header(t: &Table) -> Table {
+    Table { header: t.header.clone(), rows: Vec::new() }
+}
+
+/// Table 12 / Figure 1: OPT-13B on one A100-40GB, nine tasks.
+pub fn table12(h: &mut Harness) -> Result<()> {
+    render_opt_table(
+        &TableSpec {
+            id: "table12",
+            title: "OPT-13B, 1×A100-40GB (Fig. 1)",
+            geometry: geometry::OPT_13B,
+            device: Device::a100_40(1),
+            tasks: &["sst2", "rte", "cb", "boolq", "wsc", "wic", "multirc", "record", "squad"],
+            lt: 170,
+            include_adam: true,
+        },
+        h,
+    )
+}
+
+/// Table 13 / Figure 2 / Table 1: OPT-30B on one H100-80GB.
+pub fn table13(h: &mut Harness) -> Result<()> {
+    render_opt_table(
+        &TableSpec {
+            id: "table13",
+            title: "OPT-30B, 1×H100-80GB (Fig. 2, Table 1 aggregates below)",
+            geometry: geometry::OPT_30B,
+            device: Device::h100_80(1),
+            tasks: &["sst2", "rte", "boolq", "wsc", "wic", "multirc", "squad"],
+            lt: 180,
+            include_adam: false,
+        },
+        h,
+    )?;
+    summarize_short_long("table1", "OPT-30B summary (Table 1)", "table13")
+}
+
+/// Table 14 / Figure 10 / Table 2: OPT-66B on three H100s.
+pub fn table14(h: &mut Harness) -> Result<()> {
+    render_opt_table(
+        &TableSpec {
+            id: "table14",
+            title: "OPT-66B, 3×H100-80GB (Fig. 10, Table 2 aggregates below)",
+            geometry: geometry::OPT_66B,
+            device: Device::h100_80(3),
+            tasks: &["sst2", "rte", "boolq", "wsc", "wic", "multirc", "squad"],
+            lt: 260,
+            include_adam: false,
+        },
+        h,
+    )?;
+    summarize_short_long("table2", "OPT-66B summary (Table 2)", "table14")
+}
+
+/// Table 15 / Table 3: Llama-2-70B on three H100s.
+pub fn table15(h: &mut Harness) -> Result<()> {
+    render_opt_table(
+        &TableSpec {
+            id: "table15",
+            title: "Llama-2-70B, 3×H100-80GB (Table 3 aggregates below)",
+            geometry: geometry::LLAMA2_70B,
+            device: Device::h100_80(3),
+            tasks: &["rte", "boolq", "wsc", "wic", "multirc", "squad"],
+            lt: 240,
+            include_adam: false,
+        },
+        h,
+    )?;
+    summarize_short_long("table3", "Llama-2-70B summary (Table 3)", "table15")
+}
+
+/// Tables 1-3 are short/long-dataset aggregates of the detail tables.
+fn summarize_short_long(id: &str, title: &str, detail_id: &str) -> Result<()> {
+    let raw = std::fs::read_to_string(format!("results/{detail_id}.json"))?;
+    let rows = Json::parse(&raw)?;
+    let mut agg: std::collections::BTreeMap<(String, bool), (f64, f64, usize)> =
+        Default::default();
+    for r in rows.as_arr()? {
+        if r.opt("oom").is_some() {
+            continue;
+        }
+        let method = r.get("method")?.as_str()?.to_string();
+        let task = r.get("task")?.as_str()?;
+        let long = data::opt_task(task).map(|t| t.long).unwrap_or(false);
+        let e = agg.entry((method, long)).or_insert((0.0, 0.0, 0));
+        e.0 += r.get("acc")?.as_f64()? * 100.0;
+        e.1 += r.get("time_to_best_secs")?.as_f64()?;
+        e.2 += 1;
+    }
+    let mut tbl = Table::new(&["method", "short acc", "short time", "long acc", "long time"]);
+    let methods: Vec<String> = {
+        let mut v: Vec<String> = agg.keys().map(|(m, _)| m.clone()).collect();
+        v.dedup();
+        v
+    };
+    let mut raw_out = Vec::new();
+    for m in methods {
+        let s = agg.get(&(m.clone(), false));
+        let l = agg.get(&(m.clone(), true));
+        let fmt = |x: Option<&(f64, f64, usize)>, acc: bool| match x {
+            None => "*".to_string(),
+            Some((a, t, n)) => {
+                if acc {
+                    format!("{:.1}", a / *n as f64)
+                } else {
+                    format!("{:.1}m", t / *n as f64 / 60.0)
+                }
+            }
+        };
+        tbl.row(vec![m.clone(), fmt(s, true), fmt(s, false), fmt(l, true), fmt(l, false)]);
+        raw_out.push(obj(vec![
+            ("method", Json::from(m.clone())),
+            ("short_acc", Json::from(fmt(s, true))),
+            ("long_acc", Json::from(fmt(l, true))),
+        ]));
+    }
+    let md = format!(
+        "# {id} — {title}\n\nAverages over the short vs long datasets of \
+         {detail_id} (paper's Table 1-3 split; OOM cells excluded).\n\n{}\n",
+        tbl.render()
+    );
+    emit(id, &md, Json::Arr(raw_out))
+}
+
+/// Table 11 / Figure 7: RoBERTa-large-style (mlm preset), six tasks.
+pub fn table11(h: &mut Harness) -> Result<()> {
+    let base_steps = if h.fast { 300 } else { 600 };
+    let zo_mult = if h.fast { 3 } else { 5 };
+    let tasks = ["sst2", "sst5", "snli", "mnli", "rte", "trec"];
+    let methods = [
+        MethodKind::ZeroShot,
+        MethodKind::MeZo,
+        MethodKind::Addax,
+        MethodKind::Adam,
+    ];
+    let mut tbl = Table::new(
+        &[&["method"][..], &tasks[..]].concat().iter().map(|s| *s).collect::<Vec<_>>(),
+    );
+    let mut raw = Vec::new();
+    for method in methods {
+        let mut row = vec![method.label().to_string()];
+        for tname in tasks {
+            let task = *data::roberta_task(tname).expect("task");
+            let cell = h.run_cell("mlm", &task, method, base_steps, zo_mult, 0)?;
+            row.push(format!("{:.1}", 100.0 * cell.test_acc));
+            raw.push(obj(vec![
+                ("method", Json::from(method.label())),
+                ("task", Json::from(tname)),
+                ("acc", Json::from(cell.test_acc)),
+            ]));
+        }
+        tbl.row(row);
+    }
+    // RoBERTa-large memory footprint context (fp32, fits any GPU).
+    let g = geometry::ROBERTA_LARGE;
+    let mezo = footprint(&g, Method::MeZo, Workload::zo(64, 60), 4.0);
+    let adam = footprint(&g, Method::Adam, Workload::fo(8, 60), 4.0);
+    let md = format!(
+        "# table11 — RoBERTa-large track (Fig. 7)\n\nMasked-LM preset `mlm` \
+         (bidirectional), k-shot style tasks. RoBERTa-large simulated \
+         footprints: MeZO bs64 {:.1} GB, Adam bs8 {:.1} GB.\n\n{}\n",
+        mezo.gb(),
+        adam.gb(),
+        tbl.render()
+    );
+    emit("table11", &md, Json::Arr(raw))
+}

@@ -1,0 +1,84 @@
+//! `repro theory`: empirical checks of Theorems 3.1 / 3.2 on the
+//! closed-form quadratic (assumptions hold exactly; no XLA involved).
+
+use anyhow::Result;
+
+use crate::jsonlite::{obj, Json};
+use crate::metrics::Table;
+use crate::optim::Addax;
+use crate::theory::{fit_rate_exponent, run_synthetic, variance_factor};
+
+use super::emit;
+
+pub fn run(fast: bool) -> Result<()> {
+    let mut raw = Vec::new();
+
+    // --- Thm 3.2: strongly convex rate ~ ln(T)/T --------------------------
+    let ts: &[usize] = if fast { &[200, 400, 800] } else { &[200, 400, 800, 1600, 3200] };
+    let mut pts = Vec::new();
+    let mut t_tbl = Table::new(&["T", "E||θ_T − θ*||²"]);
+    for &t in ts {
+        let lr = ((t as f32).ln() / (0.25 * t as f32)).min(0.4);
+        let r = run_synthetic(16, t, 0.2, 4, 4, lr, 0.3, false, 11)?;
+        t_tbl.row(vec![t.to_string(), format!("{:.3e}", r.dist_sq)]);
+        pts.push((t, r.dist_sq));
+    }
+    let p_sc = fit_rate_exponent(&pts);
+    raw.push(obj(vec![
+        ("experiment", Json::from("thm3.2")),
+        ("fitted_exponent", Json::from(p_sc)),
+    ]));
+
+    // --- Thm 3.1: variance factor and optimal α ---------------------------
+    let (k0, k1) = (6usize, 4usize);
+    let mut a_tbl = Table::new(&["d", "α*", "var(α*)", "var(0)", "var(1)"]);
+    for &d in &[16usize, 256, 4096] {
+        let a = Addax::optimal_alpha(k0, k1, d) as f64;
+        a_tbl.row(vec![
+            d.to_string(),
+            format!("{a:.2e}"),
+            format!("{:.4}", variance_factor(a, k0, k1, d)),
+            format!("{:.4}", variance_factor(0.0, k0, k1, d)),
+            format!("{:.1}", variance_factor(1.0, k0, k1, d)),
+        ]);
+    }
+
+    // --- dimension dependence: Addax vs MeZO ------------------------------
+    let t = if fast { 400 } else { 800 };
+    let mut d_tbl = Table::new(&["d", "Addax ||θ−θ*||²/d", "MeZO ||θ−θ*||²/d"]);
+    let mut addax_col = Vec::new();
+    let mut mezo_col = Vec::new();
+    for &d in &[8usize, 32, 128] {
+        let alpha = Addax::optimal_alpha(4, 4, d);
+        let a = run_synthetic(d, t, alpha, 4, 4, 0.05, 0.2, false, 5)?;
+        let m = run_synthetic(d, t, 1.0, 4, 4, 0.05 / (d as f32).sqrt(), 0.2, true, 5)?;
+        d_tbl.row(vec![
+            d.to_string(),
+            format!("{:.3e}", a.dist_sq / d as f64),
+            format!("{:.3e}", m.dist_sq / d as f64),
+        ]);
+        addax_col.push(a.dist_sq / d as f64);
+        mezo_col.push(m.dist_sq / d as f64);
+        raw.push(obj(vec![
+            ("experiment", Json::from("dim-dependence")),
+            ("d", Json::from(d)),
+            ("addax_per_coord", Json::from(a.dist_sq / d as f64)),
+            ("mezo_per_coord", Json::from(m.dist_sq / d as f64)),
+        ]));
+    }
+
+    let md = format!(
+        "# theory — empirical validation of Theorems 3.1 / 3.2\n\n\
+         ## Thm 3.2 (strongly convex, η ∝ ln T / T)\n{}\nFitted decay \
+         exponent p in err ∝ T^-p: **{:.2}** (theory: 1 up to the ln T \
+         factor).\n\n## Thm 3.1 variance factor (1−α)²/K¹ + α²d/K⁰ and the \
+         optimal α* = K⁰/(K⁰+dK¹)\n{}\n\n## Dimension dependence at fixed \
+         T={} (Remark 1: Addax nearly dimension-free, MeZO degrades)\n{}\n",
+        t_tbl.render(),
+        p_sc,
+        a_tbl.render(),
+        t,
+        d_tbl.render()
+    );
+    emit("theory", &md, Json::Arr(raw))
+}

@@ -1,0 +1,260 @@
+//! Parsing of `artifacts/manifest.json` produced by `python/compile/aot.py`.
+//!
+//! The manifest is the single source of truth for parameter order/shapes
+//! and for which (kind, batch, seq-len) HLO artifacts exist. Parsed with
+//! the in-tree [`crate::jsonlite`] parser (offline build, no serde).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonlite::Json;
+
+/// Kind of an AOT artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `(params…, ids, labels) -> (sum_loss[B], count[B])`
+    Forward,
+    /// `(params…, ids, labels) -> (loss, count, grads…)`
+    Grads,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "forward" => Ok(Self::Forward),
+            "grads" => Ok(Self::Grads),
+            other => bail!("unknown artifact kind {other:?}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub kind: ArtifactKind,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub file: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub impl_: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_len: usize,
+    pub causal: bool,
+    pub n_params: usize,
+    pub init_seed: u64,
+    pub params_file: String,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl ModelEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        let params = v
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let artifacts = v
+            .get("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    kind: ArtifactKind::parse(a.get("kind")?.as_str()?)?,
+                    batch: a.get("batch")?.as_usize()?,
+                    seq_len: a.get("seq_len")?.as_usize()?,
+                    file: a.get("file")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(Self {
+            impl_: v.get("impl")?.as_str()?.to_string(),
+            vocab: v.get("vocab")?.as_usize()?,
+            d_model: v.get("d_model")?.as_usize()?,
+            n_heads: v.get("n_heads")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            d_ff: v.get("d_ff")?.as_usize()?,
+            max_len: v.get("max_len")?.as_usize()?,
+            causal: v.get("causal")?.as_bool()?,
+            n_params: v.get("n_params")?.as_usize()?,
+            init_seed: v.get("init_seed")?.as_u64()?,
+            params_file: v.get("params_file")?.as_str()?.to_string(),
+            params,
+            artifacts,
+        })
+    }
+
+    /// `(name, shape)` pairs in canonical order, as `ParamStore` wants them.
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        self.params.iter().map(|p| (p.name.clone(), p.shape.clone())).collect()
+    }
+
+    /// Smallest artifact of `kind` whose bucket fits `seq_len`, if any.
+    pub fn pick_artifact(&self, kind: ArtifactKind, seq_len: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.seq_len >= seq_len)
+            .min_by_key(|a| a.seq_len)
+    }
+
+    /// All seq-len buckets available for `kind`, ascending.
+    pub fn buckets(&self, kind: ArtifactKind) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind)
+            .map(|a| a.seq_len)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub format_version: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} — run `make artifacts` first", path.display())
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let v = Json::parse(text).context("parsing manifest.json")?;
+        let format_version = v.get("format_version")?.as_usize()?;
+        if format_version != 1 {
+            bail!("unsupported manifest format_version {format_version}");
+        }
+        let models = v
+            .get("models")?
+            .as_obj()?
+            .iter()
+            .map(|(k, m)| {
+                Ok((
+                    k.clone(),
+                    ModelEntry::from_json(m).with_context(|| format!("model {k:?}"))?,
+                ))
+            })
+            .collect::<Result<_>>()?;
+        Ok(Self { format_version, models, dir: dir.to_path_buf() })
+    }
+
+    pub fn model(&self, key: &str) -> Result<&ModelEntry> {
+        self.models.get(key).with_context(|| {
+            format!(
+                "model {key:?} not in manifest; available: {:?}",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn artifact_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    pub fn params_path(&self, entry: &ModelEntry) -> PathBuf {
+        self.dir.join(&entry.params_file)
+    }
+}
+
+/// Default artifacts directory: `$ADDAX_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("ADDAX_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format_version": 1,
+        "models": {
+            "tiny": {
+                "impl": "pallas", "vocab": 8, "d_model": 4, "n_heads": 2,
+                "n_layers": 1, "d_ff": 8, "max_len": 64, "causal": true,
+                "n_params": 10, "init_seed": 0, "params_file": "p.bin",
+                "params": [{"name": "w", "shape": [2, 5]}],
+                "artifacts": [
+                    {"kind": "forward", "batch": 8, "seq_len": 32, "file": "f32.hlo.txt"},
+                    {"kind": "forward", "batch": 8, "seq_len": 64, "file": "f64.hlo.txt"},
+                    {"kind": "grads", "batch": 8, "seq_len": 32, "file": "g32.hlo.txt"}
+                ]
+            }
+        }
+    }"#;
+
+    fn sample() -> Manifest {
+        Manifest::parse(SAMPLE, Path::new("/tmp/none")).unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = sample();
+        let e = m.model("tiny").unwrap();
+        assert_eq!(e.vocab, 8);
+        assert_eq!(e.params[0].shape, vec![2, 5]);
+        assert_eq!(e.artifacts.len(), 3);
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn pick_smallest_fitting_bucket() {
+        let m = sample();
+        let e = m.model("tiny").unwrap();
+        assert_eq!(e.pick_artifact(ArtifactKind::Forward, 10).unwrap().seq_len, 32);
+        assert_eq!(e.pick_artifact(ArtifactKind::Forward, 33).unwrap().seq_len, 64);
+        assert!(e.pick_artifact(ArtifactKind::Forward, 65).is_none());
+        assert!(e.pick_artifact(ArtifactKind::Grads, 40).is_none());
+    }
+
+    #[test]
+    fn buckets_sorted() {
+        let m = sample();
+        let e = m.model("tiny").unwrap();
+        assert_eq!(e.buckets(ArtifactKind::Forward), vec![32, 64]);
+        assert_eq!(e.buckets(ArtifactKind::Grads), vec![32]);
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = SAMPLE.replace("\"format_version\": 1", "\"format_version\": 9");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+}

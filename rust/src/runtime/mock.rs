@@ -1,0 +1,235 @@
+//! Closed-form mock objective implementing [`ModelExec`].
+//!
+//! A strongly convex quadratic with per-example gradient noise:
+//!
+//! ```text
+//! ℓ(θ; x) = ½ Σᵢ aᵢ (θᵢ − tᵢ)²  +  σ ξ(x)ᵀ θ
+//! ```
+//!
+//! with `ξ(x)` a deterministic pseudo-random unit-variance vector hashed
+//! from the example's tokens, so `E[∇ℓ] = ∇L` and `Var ≤ σ²` hold exactly
+//! (Assumptions G.1/G.2/G.4 of the paper). Used by the optimizer unit
+//! tests, the proptest invariants, and the Theorem 3.1/3.2 rate
+//! experiments — no artifacts or PJRT needed.
+
+use anyhow::Result;
+
+use crate::params::ParamStore;
+use crate::zorng::NoiseStream;
+
+use super::{ExecStats, FwdOut, GradOut, ModelExec, TokenBatch};
+
+/// See module docs.
+pub struct QuadraticExec {
+    /// Per-coordinate curvatures `aᵢ` (log-spaced in `[mu, lip]`).
+    pub curvature: Vec<f32>,
+    /// Optimum `t` (same layout as the flattened params).
+    pub target: Vec<f32>,
+    /// Gradient noise scale σ.
+    pub sigma: f32,
+    stats: ExecStats,
+}
+
+impl QuadraticExec {
+    /// Build for a `d`-dimensional problem with curvatures in `[mu, lip]`.
+    pub fn new(d: usize, mu: f32, lip: f32, sigma: f32, seed: u64) -> Self {
+        assert!(mu > 0.0 && lip >= mu);
+        let mut rng = NoiseStream::new(seed);
+        let curvature = (0..d)
+            .map(|i| {
+                let frac = if d > 1 { i as f32 / (d - 1) as f32 } else { 0.0 };
+                mu * (lip / mu).powf(frac)
+            })
+            .collect();
+        let target = (0..d).map(|_| rng.next_normal()).collect();
+        Self { curvature, target, sigma, stats: ExecStats::default() }
+    }
+
+    /// The deterministic (noise-free) loss `L(θ) − L*`.
+    pub fn suboptimality(&self, params: &ParamStore) -> f64 {
+        let mut i = 0;
+        let mut acc = 0.0f64;
+        for t in params.tensors() {
+            for &v in &t.data {
+                let d = (v - self.target[i]) as f64;
+                acc += 0.5 * self.curvature[i] as f64 * d * d;
+                i += 1;
+            }
+        }
+        acc
+    }
+
+    /// ‖∇L(θ)‖² of the noise-free loss.
+    pub fn grad_norm_sq(&self, params: &ParamStore) -> f64 {
+        let mut i = 0;
+        let mut acc = 0.0f64;
+        for t in params.tensors() {
+            for &v in &t.data {
+                let g = self.curvature[i] as f64 * (v - self.target[i]) as f64;
+                acc += g * g;
+                i += 1;
+            }
+        }
+        acc
+    }
+
+    /// Distance to the optimum ‖θ − θ*‖².
+    pub fn dist_sq(&self, params: &ParamStore) -> f64 {
+        let mut i = 0;
+        let mut acc = 0.0f64;
+        for t in params.tensors() {
+            for &v in &t.data {
+                let d = (v - self.target[i]) as f64;
+                acc += d * d;
+                i += 1;
+            }
+        }
+        acc
+    }
+
+    fn example_seed(&self, batch: &TokenBatch, row: usize) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        for &t in &batch.ids[row * batch.seq..(row + 1) * batch.seq] {
+            h = (h ^ t as u64).wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    fn row_loss(&self, params: &ParamStore, batch: &TokenBatch, row: usize) -> f64 {
+        let mut noise = NoiseStream::new(self.example_seed(batch, row));
+        let mut i = 0;
+        let mut acc = 0.0f64;
+        for t in params.tensors() {
+            for &v in &t.data {
+                let d = (v - self.target[i]) as f64;
+                acc += 0.5 * self.curvature[i] as f64 * d * d;
+                acc += self.sigma as f64 * noise.next_normal() as f64 * v as f64;
+                i += 1;
+            }
+        }
+        acc
+    }
+}
+
+impl ModelExec for QuadraticExec {
+    fn forward(&mut self, params: &ParamStore, batch: &TokenBatch) -> Result<FwdOut> {
+        self.stats.forward_calls += 1;
+        let sums = (0..batch.batch)
+            .map(|r| self.row_loss(params, batch, r) as f32)
+            .collect();
+        Ok(FwdOut { sums, counts: vec![1.0; batch.batch] })
+    }
+
+    fn grads(&mut self, params: &ParamStore, batch: &TokenBatch) -> Result<GradOut> {
+        self.stats.grad_calls += 1;
+        let d = params.n_scalars();
+        let mut flat = vec![0.0f32; d];
+        let inv_b = 1.0 / batch.batch as f32;
+        let mut loss = 0.0f64;
+        for r in 0..batch.batch {
+            loss += self.row_loss(params, batch, r);
+            let mut noise = NoiseStream::new(self.example_seed(batch, r));
+            let mut i = 0;
+            for t in params.tensors() {
+                for &v in &t.data {
+                    let g = self.curvature[i] * (v - self.target[i])
+                        + self.sigma * noise.next_normal();
+                    flat[i] += g * inv_b;
+                    i += 1;
+                }
+            }
+        }
+        // Split the flat gradient back into per-tensor pieces.
+        let mut grads = Vec::with_capacity(params.len());
+        let mut off = 0;
+        for t in params.tensors() {
+            grads.push(flat[off..off + t.len()].to_vec());
+            off += t.len();
+        }
+        Ok(GradOut {
+            loss: (loss / batch.batch as f64) as f32,
+            count: batch.batch as f32,
+            grads,
+        })
+    }
+
+    fn stats(&self) -> ExecStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::ParamStore;
+
+    fn store(d: usize) -> ParamStore {
+        ParamStore::zeros(&[("w".to_string(), vec![d])])
+    }
+
+    fn batch(b: usize) -> TokenBatch {
+        let rows: Vec<_> = (0..b).map(|i| (vec![i as i32 + 1, 17], vec![-1, -1])).collect();
+        TokenBatch::from_rows(&rows)
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let mut exec = QuadraticExec::new(4, 0.5, 2.0, 0.1, 3);
+        let mut p = store(4);
+        p.perturb(11, 1.0);
+        let b = batch(2);
+        let g = exec.grads(&p, &b).unwrap();
+        let eps = 1e-3f32;
+        for i in 0..4 {
+            let mut p_plus = p.clone();
+            p_plus.get_mut(0).tensor.data[i] += eps;
+            let mut p_minus = p.clone();
+            p_minus.get_mut(0).tensor.data[i] -= eps;
+            let lp = exec.forward(&p_plus, &b).unwrap().mean_loss();
+            let lm = exec.forward(&p_minus, &b).unwrap().mean_loss();
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            assert!(
+                (fd - g.grads[0][i] as f64).abs() < 1e-2,
+                "coord {i}: fd {fd} vs {}", g.grads[0][i]
+            );
+        }
+    }
+
+    #[test]
+    fn noise_is_mean_zero_over_many_examples() {
+        let mut exec = QuadraticExec::new(3, 1.0, 1.0, 1.0, 5);
+        let mut p = store(3);
+        p.perturb(2, 1.0);
+        let noise_free: f64 = exec.suboptimality(&p)
+            + {
+                // deterministic part of ξᵀθ has mean 0, so the mean row
+                // loss over many rows approaches the quadratic part.
+                0.0
+            };
+        let rows: Vec<_> = (0..4000).map(|i| (vec![i as i32], vec![-1])).collect();
+        let b = TokenBatch::from_rows(&rows);
+        let mean = exec.forward(&p, &b).unwrap().mean_loss();
+        assert!((mean - noise_free).abs() < 0.1, "{mean} vs {noise_free}");
+    }
+
+    #[test]
+    fn gd_converges_on_noise_free_problem() {
+        let mut exec = QuadraticExec::new(8, 0.5, 2.0, 0.0, 1);
+        let mut p = store(8);
+        let b = batch(1);
+        for _ in 0..200 {
+            let g = exec.grads(&p, &b).unwrap();
+            p.fo_update_all(0.4, 1.0, &g.grads);
+        }
+        assert!(exec.suboptimality(&p) < 1e-6);
+    }
+
+    #[test]
+    fn suboptimality_zero_at_target() {
+        let exec = QuadraticExec::new(5, 1.0, 4.0, 0.0, 2);
+        let mut p = store(5);
+        p.get_mut(0).tensor.data.copy_from_slice(&exec.target);
+        assert!(exec.suboptimality(&p) < 1e-12);
+        assert!(exec.grad_norm_sq(&p) < 1e-12);
+    }
+}

@@ -1,0 +1,384 @@
+//! L3 runtime: load AOT HLO-text artifacts and execute them via PJRT.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
+//! Executables are compiled lazily per (kind, bucket) and cached; the
+//! training hot path then only pays host→device copies + execution.
+//!
+//! The [`ModelExec`] trait is the seam between the optimizers and the
+//! substrate: the real [`XlaExec`] runs the transformer artifacts, while
+//! [`mock::QuadraticExec`] provides a closed-form objective for unit tests
+//! and the theory experiments.
+
+pub mod manifest;
+pub mod mock;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::params::ParamStore;
+use manifest::{ArtifactKind, Manifest, ModelEntry};
+
+/// A tokenized batch, ids/labels row-major `[batch, seq]`.
+///
+/// Convention (matches `python/compile/model.py`): id 0 is padding,
+/// label < 0 is "no loss at this position".
+#[derive(Clone, Debug)]
+pub struct TokenBatch {
+    pub ids: Vec<i32>,
+    pub labels: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl TokenBatch {
+    pub fn new(batch: usize, seq: usize) -> Self {
+        Self { ids: vec![0; batch * seq], labels: vec![-1; batch * seq], batch, seq }
+    }
+
+    /// Build from per-example (ids, labels) rows, padding to the longest.
+    pub fn from_rows(rows: &[(Vec<i32>, Vec<i32>)]) -> Self {
+        let batch = rows.len();
+        let seq = rows.iter().map(|(i, _)| i.len()).max().unwrap_or(1).max(1);
+        let mut out = Self::new(batch, seq);
+        for (b, (ids, labels)) in rows.iter().enumerate() {
+            assert_eq!(ids.len(), labels.len());
+            out.ids[b * seq..b * seq + ids.len()].copy_from_slice(ids);
+            out.labels[b * seq..b * seq + labels.len()].copy_from_slice(labels);
+        }
+        out
+    }
+
+    /// Pad (rows and/or columns) up to an artifact's (batch, seq) shape.
+    pub fn padded_to(&self, batch: usize, seq: usize) -> TokenBatch {
+        assert!(batch >= self.batch && seq >= self.seq, "cannot shrink a batch");
+        let mut out = TokenBatch::new(batch, seq);
+        for b in 0..self.batch {
+            out.ids[b * seq..b * seq + self.seq]
+                .copy_from_slice(&self.ids[b * self.seq..(b + 1) * self.seq]);
+            out.labels[b * seq..b * seq + self.seq]
+                .copy_from_slice(&self.labels[b * self.seq..(b + 1) * self.seq]);
+        }
+        out
+    }
+
+    /// Split into chunks of at most `max_batch` rows.
+    pub fn chunks(&self, max_batch: usize) -> Vec<TokenBatch> {
+        (0..self.batch)
+            .step_by(max_batch)
+            .map(|start| {
+                let n = (self.batch - start).min(max_batch);
+                TokenBatch {
+                    ids: self.ids[start * self.seq..(start + n) * self.seq].to_vec(),
+                    labels: self.labels[start * self.seq..(start + n) * self.seq].to_vec(),
+                    batch: n,
+                    seq: self.seq,
+                }
+            })
+            .collect()
+    }
+
+    /// Number of labeled (loss-bearing) tokens.
+    pub fn labeled_tokens(&self) -> usize {
+        self.labels.iter().filter(|&&l| l >= 0).count()
+    }
+}
+
+/// Per-example forward output.
+#[derive(Clone, Debug)]
+pub struct FwdOut {
+    /// Sum of token losses per example.
+    pub sums: Vec<f32>,
+    /// Count of labeled tokens per example.
+    pub counts: Vec<f32>,
+}
+
+impl FwdOut {
+    /// Batch-mean token loss.
+    pub fn mean_loss(&self) -> f64 {
+        let s: f64 = self.sums.iter().map(|&x| x as f64).sum();
+        let c: f64 = self.counts.iter().map(|&x| x as f64).sum();
+        if c > 0.0 {
+            s / c
+        } else {
+            0.0
+        }
+    }
+}
+
+/// First-order output: mean loss + per-tensor gradients (canonical order).
+#[derive(Clone, Debug)]
+pub struct GradOut {
+    pub loss: f32,
+    pub count: f32,
+    pub grads: Vec<Vec<f32>>,
+}
+
+/// Execution counters for the wall-clock/efficiency reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    pub forward_calls: u64,
+    pub grad_calls: u64,
+    pub forward_secs: f64,
+    pub grad_secs: f64,
+}
+
+/// The seam between optimizers and the compute substrate.
+pub trait ModelExec {
+    /// Per-example (sum, count) of token losses.
+    fn forward(&mut self, params: &ParamStore, batch: &TokenBatch) -> Result<FwdOut>;
+    /// Mean loss + gradients of the mean loss.
+    fn grads(&mut self, params: &ParamStore, batch: &TokenBatch) -> Result<GradOut>;
+    /// Scalar mean loss (default: via `forward`).
+    fn mean_loss(&mut self, params: &ParamStore, batch: &TokenBatch) -> Result<f64> {
+        Ok(self.forward(params, batch)?.mean_loss())
+    }
+    fn stats(&self) -> ExecStats;
+}
+
+/// XLA/PJRT-backed execution of the AOT artifacts for one model key.
+pub struct XlaExec {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    model_key: String,
+    executables: HashMap<(ArtifactKind, usize), xla::PjRtLoadedExecutable>,
+    stats: ExecStats,
+    /// Wall-clock spent compiling artifacts (excluded from step timing).
+    pub compile_secs: f64,
+}
+
+impl XlaExec {
+    /// Create against an artifacts dir; compiles nothing yet.
+    pub fn new(artifacts_dir: &Path, model_key: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        manifest.model(model_key)?; // validate early
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            model_key: model_key.to_string(),
+            executables: HashMap::new(),
+            stats: ExecStats::default(),
+            compile_secs: 0.0,
+        })
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        self.manifest.model(&self.model_key).expect("validated in new()")
+    }
+
+    /// Canonical `(name, shape)` specs for `ParamStore`.
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        self.entry().param_specs()
+    }
+
+    /// Load the deterministic initial parameters dumped by aot.py.
+    pub fn load_initial_params(&self) -> Result<ParamStore> {
+        let entry = self.entry();
+        ParamStore::load_bin(&entry.param_specs(), &self.manifest.params_path(entry))
+    }
+
+    /// Largest seq bucket for which a `kind` artifact exists.
+    pub fn max_bucket(&self, kind: ArtifactKind) -> Option<usize> {
+        self.entry().buckets(kind).last().copied()
+    }
+
+    fn ensure_compiled(&mut self, kind: ArtifactKind, seq: usize) -> Result<(usize, usize)> {
+        let entry = self.entry().clone();
+        let spec = match entry.pick_artifact(kind, seq) {
+            Some(s) => s.clone(),
+            None => bail!(
+                "no {:?} artifact covers seq_len {} for model {} (buckets: {:?}) — \
+                 this is the artifact-level analogue of the paper's OOM: long \
+                 sequences only have a forward path",
+                kind,
+                seq,
+                self.model_key,
+                entry.buckets(kind)
+            ),
+        };
+        let key = (kind, spec.seq_len);
+        if !self.executables.contains_key(&key) {
+            let t0 = Instant::now();
+            let path = self.manifest.artifact_path(&spec);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            self.compile_secs += t0.elapsed().as_secs_f64();
+            self.executables.insert(key, exe);
+        }
+        Ok((spec.batch, spec.seq_len))
+    }
+
+    /// Upload params + batch and execute; returns the output tuple parts.
+    fn run(
+        &mut self,
+        kind: ArtifactKind,
+        params: &ParamStore,
+        batch: &TokenBatch,
+    ) -> Result<Vec<xla::Literal>> {
+        let (art_batch, art_seq) = self.ensure_compiled(kind, batch.seq)?;
+        if batch.batch > art_batch {
+            bail!("batch {} exceeds artifact batch {art_batch}; chunk first", batch.batch);
+        }
+        let padded = if batch.batch == art_batch && batch.seq == art_seq {
+            None
+        } else {
+            Some(batch.padded_to(art_batch, art_seq))
+        };
+        let b: &TokenBatch = padded.as_ref().unwrap_or(batch);
+
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(params.len() + 2);
+        for p in params.iter() {
+            args.push(self.client.buffer_from_host_buffer(
+                &p.tensor.data,
+                &p.tensor.shape,
+                None,
+            )?);
+        }
+        let dims = [art_batch, art_seq];
+        args.push(self.client.buffer_from_host_buffer(&b.ids, &dims, None)?);
+        args.push(self.client.buffer_from_host_buffer(&b.labels, &dims, None)?);
+
+        let exe = &self.executables[&(kind, art_seq)];
+        let result = exe.execute_b::<xla::PjRtBuffer>(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+impl ModelExec for XlaExec {
+    fn forward(&mut self, params: &ParamStore, batch: &TokenBatch) -> Result<FwdOut> {
+        let t0 = Instant::now();
+        let mut sums = Vec::with_capacity(batch.batch);
+        let mut counts = Vec::with_capacity(batch.batch);
+        let art_batch = self
+            .entry()
+            .pick_artifact(ArtifactKind::Forward, batch.seq)
+            .map(|a| a.batch)
+            .unwrap_or(batch.batch.max(1));
+        for chunk in batch.chunks(art_batch) {
+            let parts = self.run(ArtifactKind::Forward, params, &chunk)?;
+            let s: Vec<f32> = parts[0].to_vec()?;
+            let c: Vec<f32> = parts[1].to_vec()?;
+            sums.extend_from_slice(&s[..chunk.batch]);
+            counts.extend_from_slice(&c[..chunk.batch]);
+        }
+        self.stats.forward_calls += 1;
+        self.stats.forward_secs += t0.elapsed().as_secs_f64();
+        Ok(FwdOut { sums, counts })
+    }
+
+    fn grads(&mut self, params: &ParamStore, batch: &TokenBatch) -> Result<GradOut> {
+        let t0 = Instant::now();
+        let art_batch = self
+            .entry()
+            .pick_artifact(ArtifactKind::Grads, batch.seq)
+            .map(|a| a.batch)
+            .unwrap_or(batch.batch.max(1));
+        let mut total_count = 0.0f64;
+        let mut loss_weighted = 0.0f64;
+        let mut acc: Option<Vec<Vec<f32>>> = None;
+        for chunk in batch.chunks(art_batch) {
+            let parts = self.run(ArtifactKind::Grads, params, &chunk)?;
+            let loss = parts[0].to_vec::<f32>()?[0] as f64;
+            let count = parts[1].to_vec::<f32>()?[0] as f64;
+            let grads: Vec<Vec<f32>> =
+                parts[2..].iter().map(|l| l.to_vec::<f32>()).collect::<Result<_, _>>()?;
+            // Combine chunks into the exact big-batch gradient:
+            // g = Σ count_i·g_i / Σ count_i  (model.py normalizes per chunk).
+            match &mut acc {
+                None => {
+                    let mut g = grads;
+                    for t in g.iter_mut() {
+                        for v in t.iter_mut() {
+                            *v *= count as f32;
+                        }
+                    }
+                    acc = Some(g);
+                }
+                Some(a) => {
+                    for (t, g) in a.iter_mut().zip(grads.iter()) {
+                        for (x, &y) in t.iter_mut().zip(g.iter()) {
+                            *x += count as f32 * y;
+                        }
+                    }
+                }
+            }
+            loss_weighted += loss * count;
+            total_count += count;
+        }
+        let mut grads = acc.unwrap_or_default();
+        let denom = total_count.max(1.0) as f32;
+        for t in grads.iter_mut() {
+            for v in t.iter_mut() {
+                *v /= denom;
+            }
+        }
+        self.stats.grad_calls += 1;
+        self.stats.grad_secs += t0.elapsed().as_secs_f64();
+        Ok(GradOut {
+            loss: (loss_weighted / total_count.max(1.0)) as f32,
+            count: total_count as f32,
+            grads,
+        })
+    }
+
+    fn stats(&self) -> ExecStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_batch_from_rows_pads() {
+        let rows = vec![
+            (vec![1, 2, 3], vec![-1, 3, 4]),
+            (vec![5], vec![6]),
+        ];
+        let b = TokenBatch::from_rows(&rows);
+        assert_eq!((b.batch, b.seq), (2, 3));
+        assert_eq!(b.ids, vec![1, 2, 3, 5, 0, 0]);
+        assert_eq!(b.labels, vec![-1, 3, 4, 6, -1, -1]);
+        assert_eq!(b.labeled_tokens(), 3);
+    }
+
+    #[test]
+    fn padded_to_grows_rows_and_cols() {
+        let b = TokenBatch::from_rows(&[(vec![1, 2], vec![2, -1])]);
+        let p = b.padded_to(3, 4);
+        assert_eq!((p.batch, p.seq), (3, 4));
+        assert_eq!(p.ids[..4], [1, 2, 0, 0]);
+        assert_eq!(p.labels[4..8], [-1, -1, -1, -1]);
+    }
+
+    #[test]
+    fn chunking_covers_all_rows() {
+        let rows: Vec<_> = (0..10).map(|i| (vec![i as i32 + 1], vec![i as i32])).collect();
+        let b = TokenBatch::from_rows(&rows);
+        let chunks = b.chunks(4);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks.iter().map(|c| c.batch).sum::<usize>(), 10);
+        assert_eq!(chunks[2].batch, 2);
+    }
+
+    #[test]
+    fn fwd_out_mean() {
+        let f = FwdOut { sums: vec![2.0, 4.0], counts: vec![1.0, 2.0] };
+        assert!((f.mean_loss() - 2.0).abs() < 1e-9);
+        let empty = FwdOut { sums: vec![0.0], counts: vec![0.0] };
+        assert_eq!(empty.mean_loss(), 0.0);
+    }
+}

