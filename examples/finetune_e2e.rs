@@ -60,6 +60,7 @@ fn main() -> anyhow::Result<()> {
         eval_examples: 150,
         log_path: Some("results/e2e_loss_curve.jsonl".into()),
         verbose: true,
+        noise_workers: 0,
     };
     let t0 = std::time::Instant::now();
     let r = train(&mut exec, &mut params, &mut opt, &ds, lt, &cfg)?;

@@ -50,6 +50,7 @@ fn main() -> anyhow::Result<()> {
             eval_examples: 120,
             log_path: None,
             verbose: false,
+            noise_workers: 0,
         };
         let r = train(&mut exec, &mut params, &mut *opt, &ds, usize::MAX, &cfg)?;
         println!(

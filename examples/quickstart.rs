@@ -42,6 +42,7 @@ fn main() -> anyhow::Result<()> {
         eval_examples: 100,
         log_path: None,
         verbose: true,
+        noise_workers: 0,
     };
     let lt = ds.l_max(); // no memory pressure at tiny scale => Addax-WA
     let t0 = std::time::Instant::now();

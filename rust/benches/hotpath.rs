@@ -1,19 +1,36 @@
 //! Hot-path micro-benchmarks (hand-rolled harness; the offline crate set
 //! has no criterion). Measures the L3 components that sit on every
-//! training step, and the ablation the paper's §2.2 describes:
-//! seed-replay perturbation (O(1) memory) vs materialized-z (O(d)).
+//! training step, the §2.2 ablation (seed-replay vs materialized-z), the
+//! worker-pool scaling of the counter-addressed noise sweeps, and the
+//! fused vs unfused ZO step (4 → 3 O(d) sweeps).
 //!
-//! Run: `cargo bench --bench hotpath`
+//! Run: `cargo bench --bench hotpath` (add `-- --smoke` for the 1-shot CI
+//! regression check). Machine-readable results land in
+//! `BENCH_hotpath.json` so the perf trajectory is tracked across PRs.
 
 use std::time::Instant;
 
+use addax::jsonlite::{obj, Json};
 use addax::params::ParamStore;
 use addax::tensor::HostTensor;
 use addax::zorng::NoiseStream;
 
-/// Time `f` over `iters` iterations after `warmup` runs; report best-of-3
-/// batches to suppress scheduler noise.
-fn bench<F: FnMut()>(name: &str, bytes_per_iter: f64, iters: usize, mut f: F) -> f64 {
+/// One recorded measurement.
+struct BenchResult {
+    name: String,
+    ms_per_iter: f64,
+    gb_per_s: f64,
+}
+
+/// Time `f` over `iters` iterations after a short warmup; report best-of-3
+/// batches to suppress scheduler noise, and record into `results`.
+fn bench<F: FnMut()>(
+    results: &mut Vec<BenchResult>,
+    name: &str,
+    bytes_per_iter: f64,
+    iters: usize,
+    mut f: F,
+) -> f64 {
     for _ in 0..iters.min(3) {
         f();
     }
@@ -32,6 +49,11 @@ fn bench<F: FnMut()>(name: &str, bytes_per_iter: f64, iters: usize, mut f: F) ->
         best * 1e3,
         gbs
     );
+    results.push(BenchResult {
+        name: name.to_string(),
+        ms_per_iter: best * 1e3,
+        gb_per_s: gbs,
+    });
     best
 }
 
@@ -45,73 +67,131 @@ fn big_store(d: usize) -> ParamStore {
 }
 
 fn main() {
-    println!("== addax hot-path benchmarks ==\n");
-    let d = 8 * (1 << 20); // 8M params ≈ base-scale (f32: 32 MB)
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!("== addax hot-path benchmarks{} ==\n", if smoke { " (smoke)" } else { "" });
+    // 8M params ≈ base-scale (f32: 32 MB); smoke shrinks to 1M for CI.
+    let d = if smoke { 1 << 20 } else { 8 * (1 << 20) };
+    let iters = if smoke { 1 } else { 10 };
     let mut store = big_store(d);
     let bytes = (d * 4) as f64;
+    let mut results: Vec<BenchResult> = Vec::new();
+    let r = &mut results;
 
     // 1. Gaussian generation alone.
     let mut buf = vec![0.0f32; 1 << 16];
     let mut stream = NoiseStream::new(7);
-    bench("rng: fill_normal 64k f32", (buf.len() * 4) as f64, 200, || {
+    bench(r, "rng: fill_normal 64k f32", (buf.len() * 4) as f64, if smoke { 1 } else { 200 }, || {
         stream.fill_normal(&mut buf);
     });
 
-    // 2. Seed-replay perturbation (MeZO/Addax inner op; touches d params).
-    bench("perturb: seed-replay (O(1) mem)", bytes, 10, || {
-        store.perturb(42, 1e-3);
-    });
+    // 2. Seed-replay perturbation, worker-pool scaling sweep (the
+    // counter-addressed blocks make every worker count bit-identical; the
+    // sweep shows how far from serial the wall clock moves).
+    let mut serial_ms = 0.0;
+    for workers in [1usize, 2, 4, 8] {
+        let t = bench(
+            r,
+            &format!("perturb: seed-replay, {workers} worker(s)"),
+            bytes,
+            iters,
+            || store.perturb_with_workers(42, 1e-3, workers),
+        );
+        if workers == 1 {
+            serial_ms = t * 1e3;
+        } else {
+            println!(
+                "{:<44} {:>10.2}x vs serial",
+                format!("  speedup @ {workers} workers"),
+                serial_ms / (t * 1e3)
+            );
+        }
+    }
 
     // 3. Materialized-z perturbation (the O(d) ablation of §2.2).
     let z: Vec<Vec<f32>> = {
-        let mut stream = NoiseStream::new(42);
+        let noise = addax::zorng::BlockNoise::new(42);
         (0..8)
-            .map(|_| {
+            .map(|p| {
                 let mut v = vec![0.0f32; d / 8];
-                stream.fill_normal(&mut v);
+                noise.fill_param(p, &mut v);
                 v
             })
             .collect()
     };
-    bench("perturb: materialized z (O(d) mem)", bytes, 10, || {
+    bench(r, "perturb: materialized z (O(d) mem)", bytes, iters, || {
         for (i, zt) in z.iter().enumerate() {
             store.get_mut(i).tensor.axpy(1e-3, zt);
         }
     });
 
-    // 4. FO in-place update (axpy over all tensors).
+    // 4. Fused vs unfused ZO step: the probe pair is common to both; the
+    // tail is restore+update as two sweeps (old) or one (fused). Scales
+    // cancel exactly, so the store returns to θ every iteration.
+    let eps = 1e-3f32;
+    bench(r, "zo-step: unfused (4 O(d) sweeps)", 4.0 * bytes, iters, || {
+        store.perturb(43, eps);
+        store.perturb(43, -2.0 * eps);
+        store.perturb(43, eps); // restore
+        store.zo_update(43, 0.0, 1.0, 0.0); // update sweep (lr 0: θ preserved)
+    });
+    bench(r, "zo-step: fused (3 O(d) sweeps)", 3.0 * bytes, iters, || {
+        store.perturb(43, eps);
+        store.perturb(43, -2.0 * eps);
+        store.restore_and_zo_update(43, eps, 0.0, 1.0, 0.0);
+    });
+
+    // 5. FO in-place update (axpy over all tensors).
     let grads: Vec<Vec<f32>> = (0..8).map(|_| vec![0.01f32; d / 8]).collect();
-    bench("fo_update_all: axpy over 8M params", bytes, 10, || {
+    bench(r, "fo_update_all: axpy over all params", bytes, iters, || {
         store.fo_update_all(1e-3, 1.0, &grads);
     });
 
-    // 5. Tensor primitives.
+    // 6. Tensor primitives.
     let mut t = HostTensor::zeros(&[1 << 20]);
     let other = vec![1.0f32; 1 << 20];
-    bench("tensor: axpy 1M f32", (4 << 20) as f64, 200, || {
+    bench(r, "tensor: axpy 1M f32", (4 << 20) as f64, if smoke { 1 } else { 200 }, || {
         t.axpy(1e-6, &other);
     });
-    bench("tensor: norm_sq 1M f32", (4 << 20) as f64, 200, || {
+    bench(r, "tensor: norm_sq 1M f32", (4 << 20) as f64, if smoke { 1 } else { 200 }, || {
         std::hint::black_box(t.norm_sq());
     });
 
-    // 6. JSON manifest parse (startup path).
+    // 7. JSON manifest parse (startup path).
     let manifest = std::fs::read_to_string("artifacts/manifest.json").ok();
     if let Some(text) = manifest {
         let n = text.len() as f64;
-        bench("jsonlite: parse manifest.json", n, 50, || {
+        bench(r, "jsonlite: parse manifest.json", n, if smoke { 1 } else { 50 }, || {
             std::hint::black_box(addax::jsonlite::Json::parse(&text).unwrap());
         });
     }
 
-    // 7. Batch construction (feeder-thread work).
+    // 8. Batch construction (feeder-thread work).
     let task = addax::data::opt_task("multirc").unwrap();
     let ex = addax::data::generate(task, 512, 4096, Some(128), 3);
     let idx: Vec<usize> = (0..16).collect();
-    bench("data: build 16-row training batch", 0.0, 500, || {
+    bench(r, "data: build 16-row training batch", 0.0, if smoke { 1 } else { 500 }, || {
         std::hint::black_box(addax::data::training_batch(&ex, &idx));
     });
 
-    println!("\n(The perturb/update loops should sit near memory bandwidth;");
-    println!(" seed-replay trades ~2x time for an O(d) memory saving.)");
+    // Emit machine-readable results for cross-PR perf tracking.
+    let entries: Vec<Json> = results
+        .iter()
+        .map(|b| {
+            obj(vec![
+                ("name", Json::from(b.name.clone())),
+                ("ms_per_iter", Json::from(b.ms_per_iter)),
+                ("gb_per_s", Json::from(b.gb_per_s)),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("bench", Json::from("hotpath")),
+        ("d", Json::from(d)),
+        ("smoke", Json::from(smoke)),
+        ("results", Json::Arr(entries)),
+    ]);
+    std::fs::write("BENCH_hotpath.json", doc.dump()).expect("writing BENCH_hotpath.json");
+    println!("\nwrote BENCH_hotpath.json ({} entries)", results.len());
+    println!("(The perturb/update loops should sit near memory bandwidth;");
+    println!(" the fused ZO step removes one of the four O(d) sweeps.)");
 }

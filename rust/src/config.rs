@@ -138,6 +138,8 @@ impl Config {
             eval_examples: self.usize_or("train.eval_examples", 100)?,
             log_path: self.get("train.log").map(std::path::PathBuf::from),
             verbose: self.bool_or("train.verbose", true)?,
+            // `[perf] noise_workers = N` pins the ZO sweep pool; 0 = auto.
+            noise_workers: self.usize_or("perf.noise_workers", 0)?,
         })
     }
 
@@ -229,6 +231,13 @@ verbose = false
         assert_eq!(c.lt().unwrap(), usize::MAX);
         let t = c.train_config().unwrap();
         assert_eq!(t.steps, 400);
+        assert_eq!(t.noise_workers, 0); // auto
+    }
+
+    #[test]
+    fn perf_noise_workers_parses() {
+        let c = Config::parse("[perf]\nnoise_workers = 4").unwrap();
+        assert_eq!(c.train_config().unwrap().noise_workers, 4);
     }
 
     #[test]

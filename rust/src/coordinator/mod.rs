@@ -43,6 +43,10 @@ pub struct TrainConfig {
     pub log_path: Option<std::path::PathBuf>,
     /// Print progress lines.
     pub verbose: bool,
+    /// Worker threads for the ZO noise sweeps; 0 = auto
+    /// (`ADDAX_NOISE_WORKERS`, then `min(cores, 8)`). Bit-exact at any
+    /// value — the block noise is counter-addressed.
+    pub noise_workers: usize,
 }
 
 impl Default for TrainConfig {
@@ -54,6 +58,7 @@ impl Default for TrainConfig {
             eval_examples: 100,
             log_path: None,
             verbose: false,
+            noise_workers: 0,
         }
     }
 }
@@ -168,6 +173,8 @@ pub fn train(
     cfg: &TrainConfig,
 ) -> Result<RunResult> {
     let needs = opt.needs();
+    // Pin the noise-sweep pool for the whole run (0 keeps auto selection).
+    crate::params::set_noise_workers(cfg.noise_workers);
     let eval_every = if cfg.eval_every == 0 {
         (cfg.steps / 20).max(1)
     } else {

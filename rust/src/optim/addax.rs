@@ -1,12 +1,14 @@
 //! Addax (Algorithm 1): the paper's optimizer.
 //!
-//! Per step:
-//!   1. SPSA on the zeroth-order batch `B⁰` (drawn from the long-sequence
-//!      partition `D⁰`) → directional derivative `g⁰` (Alg. 2, seed s).
-//!   2. First-order gradients on `B¹` (short partition `D¹`), applied in
-//!      place tensor-by-tensor with weight `(1−α)` (Alg. 1 lines 9-12).
-//!   3. ZO update `θ ← θ − ηα·g⁰·z` with `z` replayed from s
-//!      (Alg. 1 lines 13-17).
+//! Per step (fused sweep order — same math as Alg. 1, fewer O(d) passes):
+//!   1. First-order gradients on `B¹` (short partition `D¹`) at θ
+//!      (Alg. 1 lines 9-12; applied last, updates commute additively).
+//!   2. SPSA probe on the zeroth-order batch `B⁰` (long partition `D⁰`)
+//!      → directional derivative `g⁰` (Alg. 2, seed s), leaving `θ − εz`.
+//!   3. Fused restore + ZO update: one sweep takes `θ − εz` to
+//!      `θ − ηα·g⁰·z` with `z` replayed from s (Alg. 1 lines 13-17) —
+//!      3 noise sweeps per step instead of 4.
+//!   4. FO update applied in place tensor-by-tensor with weight `(1−α)`.
 //!
 //! Addax-WA ("without assignment") is the same optimizer; the coordinator
 //! simply samples both batches from the whole dataset (`L_T ≥ L_max`).
@@ -17,7 +19,7 @@ use crate::memory::Method;
 use crate::params::ParamStore;
 use crate::runtime::ModelExec;
 
-use super::{grad_global_norm, spsa_g0, BatchNeeds, Optimizer, StepBatches, StepStats};
+use super::{grad_global_norm, spsa_probe, BatchNeeds, Optimizer, StepBatches, StepStats};
 
 /// Hyper-parameters follow Table 7: `(K¹, K⁰) = (4, 6)`, `η = 1e-4`,
 /// `ε = 1e-3`, `α` tuned per task from a small grid.
@@ -69,19 +71,30 @@ impl Optimizer for Addax {
         let Some(zo_batch) = &batches.zo else { bail!("addax needs a ZO batch") };
         let Some(fo_batch) = &batches.fo else { bail!("addax needs a FO batch") };
 
-        // (1) zeroth-order probe — two forward passes, O(1) extra memory.
-        let (g0, zo_loss) = spsa_g0(params, exec, zo_batch, self.eps, step_seed)?;
-
-        // (2) first-order half-step, in place per tensor (grad dropped
-        // immediately after use — the IP discipline of App. B).
+        // (1) first-order gradients at θ, before any perturbation; the
+        // in-place application is deferred past the ZO sweeps (additive
+        // updates commute, so the math of Alg. 1 is unchanged). Note the
+        // gradient list stays resident through the ZO probes — a deliberate
+        // trade for the fused 3-sweep schedule. The `ModelExec` seam
+        // materializes the full list either way, so this substrate's peak
+        // is unchanged; the analytic GPU model in `memory.rs` describes
+        // the paper's streaming-backward system, where Addax would instead
+        // run the probes first and forgo the fusion.
         let g = exec.grads(params, fo_batch)?;
         let grad_norm = grad_global_norm(&g.grads);
+
+        // (2) zeroth-order probe — two forward passes, O(1) extra memory;
+        // leaves params at θ − εz.
+        let (g0, zo_loss) = spsa_probe(params, exec, zo_batch, self.eps, step_seed)?;
+
+        // (3) fused restore + ZO half-step via seed replay: one sweep from
+        // θ − εz to θ − ηα·g⁰·z.
+        params.restore_and_zo_update(step_seed, self.eps, self.lr, self.alpha, g0 as f32);
+
+        // (4) first-order half-step, applied in place per tensor.
         for (idx, grad) in g.grads.iter().enumerate() {
             params.fo_update_tensor(idx, self.lr, 1.0 - self.alpha, grad);
         }
-
-        // (3) zeroth-order half-step via seed replay.
-        params.zo_update(step_seed, self.lr, self.alpha, g0 as f32);
 
         let _ = zo_loss;
         Ok(StepStats {
@@ -130,6 +143,27 @@ mod tests {
         // ZO-only is slower (d-dependent) but must make clear progress
         // from the initial suboptimality (≈ several units).
         assert!(sub < 1.0, "suboptimality {sub}");
+    }
+
+    #[test]
+    fn step_uses_three_noise_sweeps() {
+        // The fused restore+update collapses the old 4-sweep ZO pattern
+        // (+ε, −2ε, +ε, update) into 3 O(d) passes.
+        use crate::optim::testutil::{quad, random_batch, store};
+        use crate::optim::StepBatches;
+        use crate::zorng::Xoshiro256;
+        let mut opt = Addax::new(0.05, 1e-3, 0.3, 2, 2);
+        let mut exec = quad(16, 0.0);
+        let mut p = store(16);
+        p.perturb(1, 1.0);
+        let mut rng = Xoshiro256::new(3);
+        let before = p.noise_sweeps();
+        let batches = StepBatches {
+            fo: Some(random_batch(2, &mut rng)),
+            zo: Some(random_batch(2, &mut rng)),
+        };
+        opt.step(&mut p, &mut exec, &batches, 11).unwrap();
+        assert_eq!(p.noise_sweeps() - before, 3);
     }
 
     #[test]

@@ -63,24 +63,33 @@ impl Optimizer for HybridZoFo {
         let split = self.split_index(params.len());
         let shallow = move |idx: usize, _name: &str| idx < split;
 
-        // ZO half on the shallow tensors (subset SPSA, seed replay).
+        // FO gradients at θ (before any perturbation; applied after the ZO
+        // sweeps — the updates commute additively).
+        let g = exec.grads(params, batch)?;
+        let norm = grad_global_norm(&g.grads[split..]);
+
+        // ZO half on the shallow tensors (subset SPSA, counter-addressed
+        // seed replay); leaves the shallow tensors at θ − εz.
         params.perturb_subset(step_seed, self.eps, shallow);
         let l_plus = exec.mean_loss(params, batch)?;
         params.perturb_subset(step_seed, -2.0 * self.eps, shallow);
         let l_minus = exec.mean_loss(params, batch)?;
-        params.perturb_subset(step_seed, self.eps, shallow);
         let g0 = (l_plus - l_minus) / (2.0 * self.eps as f64);
 
+        // Fused restore + ZO update on the shallow tensors via replay.
+        params.restore_and_zo_update_subset(
+            step_seed,
+            self.eps,
+            self.lr_zo,
+            1.0,
+            g0 as f32,
+            shallow,
+        );
+
         // FO half on the deep tensors only.
-        let g = exec.grads(params, batch)?;
-        let deep_grads: Vec<&Vec<f32>> = g.grads[split..].iter().collect();
-        let norm = grad_global_norm(&g.grads[split..]);
-        for (offset, grad) in deep_grads.into_iter().enumerate() {
+        for (offset, grad) in g.grads[split..].iter().enumerate() {
             params.fo_update_tensor(split + offset, self.lr_fo, 1.0, grad);
         }
-
-        // Apply the ZO update to the shallow tensors via replay.
-        params.perturb_subset(step_seed, -self.lr_zo * g0 as f32, shallow);
 
         Ok(StepStats {
             loss: g.loss as f64,

@@ -85,13 +85,17 @@ pub trait Optimizer: Send {
     fn lr(&self) -> f64;
 }
 
-/// SPSA zeroth-order directional derivative (Algorithm 2) via seed replay.
+/// SPSA zeroth-order probe (Algorithm 2, first two sweeps) via seed replay.
 ///
-/// Perturbs `params` in place (+ε, −2ε, +ε), evaluating the loss twice,
+/// Perturbs `params` in place (+ε, then −2ε), evaluating the loss twice,
 /// and returns `g⁰ = (L(θ+εz) − L(θ−εz)) / 2ε` together with the mean of
-/// the two probe losses. `params` is restored exactly (bit-wise) because
-/// the same `z` values are added and subtracted.
-pub fn spsa_g0(
+/// the two probe losses. **On return the params sit at `θ − εz`** — the
+/// caller owns the restore, either `params.perturb(seed, eps)` (plain
+/// restore, what [`spsa_g0`] does) or the fused
+/// [`ParamStore::restore_and_zo_update`], which folds the restore and the
+/// ZO update `θ ← θ − ηαg⁰z` into one O(d) sweep — 3 total sweeps per ZO
+/// step instead of 4.
+pub fn spsa_probe(
     params: &mut ParamStore,
     exec: &mut dyn ModelExec,
     batch: &TokenBatch,
@@ -102,9 +106,36 @@ pub fn spsa_g0(
     let l_plus = exec.mean_loss(params, batch)?;
     params.perturb(seed, -2.0 * eps);
     let l_minus = exec.mean_loss(params, batch)?;
-    params.perturb(seed, eps);
     let g0 = (l_plus - l_minus) / (2.0 * eps as f64);
     Ok((g0, 0.5 * (l_plus + l_minus)))
+}
+
+/// [`spsa_probe`] plus the plain restore sweep: `params` come back exactly
+/// (bit-wise) because the same `z` values are added and subtracted. Used
+/// where the estimate is wanted without an update (tests, diagnostics);
+/// the optimizers use the probe + fused-update path instead.
+pub fn spsa_g0(
+    params: &mut ParamStore,
+    exec: &mut dyn ModelExec,
+    batch: &TokenBatch,
+    eps: f32,
+    seed: u64,
+) -> Result<(f64, f64)> {
+    let out = spsa_probe(params, exec, batch, eps, seed)?;
+    params.perturb(seed, eps);
+    Ok(out)
+}
+
+/// `z · g` with `z` replayed from `seed` under the counter-addressed block
+/// scheme, for a per-tensor gradient list laid out like the param store.
+/// This is the true directional derivative SPSA estimates (tests, theory).
+pub fn z_dot_grads(seed: u64, grads: &[Vec<f32>]) -> f64 {
+    let noise = crate::zorng::BlockNoise::new(seed);
+    grads
+        .iter()
+        .enumerate()
+        .map(|(param_idx, g)| noise.dot_param(param_idx, g))
+        .sum()
 }
 
 /// Global-norm of a gradient list.
@@ -190,16 +221,31 @@ mod tests {
         let batch = testutil::random_batch(2, &mut rng);
         let seed = 31;
         let (g0, _) = spsa_g0(&mut params, &mut exec, &batch, 1e-4, seed).unwrap();
-        // z·∇L with z replayed
+        // z·∇L with z replayed block-wise
         let g = exec.grads(&params, &batch).unwrap();
-        let mut stream = crate::zorng::NoiseStream::new(seed);
-        let mut dir = 0.0f64;
-        for t in &g.grads {
-            for &gi in t {
-                dir += gi as f64 * stream.next_normal() as f64;
-            }
-        }
+        let dir = z_dot_grads(seed, &g.grads);
         assert!((g0 - dir).abs() < 0.05 * dir.abs().max(1.0), "{g0} vs {dir}");
+    }
+
+    #[test]
+    fn probe_leaves_params_at_theta_minus_eps_z() {
+        let mut params = testutil::store(16);
+        params.perturb(4, 1.0);
+        let before = params.clone();
+        let mut exec = testutil::quad(16, 0.0);
+        let mut rng = crate::zorng::Xoshiro256::new(6);
+        let batch = testutil::random_batch(2, &mut rng);
+        let (seed, eps) = (55u64, 1e-3f32);
+        spsa_probe(&mut params, &mut exec, &batch, eps, seed).unwrap();
+        // manual θ − εz from the same replay (float tolerance: the probe
+        // reaches it as (θ+εz)−2εz, the manual path in one add)
+        let mut manual = before.clone();
+        manual.perturb(seed, -eps);
+        let drift = params.dist_sq(&manual);
+        assert!(drift < 1e-10, "probe must leave θ − εz (drift {drift})");
+        // the caller-owned restore brings them back
+        params.perturb(seed, eps);
+        assert!(params.dist_sq(&before) < 1e-10);
     }
 
     #[test]

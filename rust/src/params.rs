@@ -3,14 +3,62 @@
 //! All optimizer updates happen here, tensor by tensor, with gradients and
 //! perturbation noise discarded immediately — the in-place discipline that
 //! gives IP-SGD/MeZO/Addax their memory profile (paper §2.3, App. B).
+//!
+//! The ZO sweeps (`perturb`, `perturb_subset`, `restore_and_zo_update`)
+//! are the hottest loops in the system: each touches all `d` parameters.
+//! They run over a flat map of [`NOISE_BLOCK`]-element blocks whose noise
+//! is counter-addressed (`zorng::block_seed`), so the blocks are
+//! distributed across a scoped worker pool and the result is bit-identical
+//! at every worker count — including the serial path (see
+//! EXPERIMENTS.md §Perf for the scaling numbers).
 
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{bail, Context, Result};
 
 use crate::tensor::HostTensor;
-use crate::zorng::NoiseStream;
+use crate::zorng::{BlockNoise, NoiseStream, NOISE_BLOCK};
+
+/// Worker-pool override for the noise sweeps; 0 = auto (env, then
+/// `min(cores, 8)`). Set from config at run start.
+static NOISE_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Pin the noise-sweep worker count (0 restores auto selection).
+pub fn set_noise_workers(n: usize) {
+    NOISE_WORKERS.store(n, Ordering::Relaxed);
+}
+
+/// `ADDAX_NOISE_WORKERS`, read once (0 = unset/invalid).
+fn env_noise_workers() -> usize {
+    use std::sync::OnceLock;
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("ADDAX_NOISE_WORKERS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(0)
+    })
+}
+
+/// Effective worker count for the noise sweeps: explicit override (last
+/// `set_noise_workers` wins), then `ADDAX_NOISE_WORKERS`, then
+/// `min(available cores, 8)`.
+pub fn noise_workers() -> usize {
+    let n = NOISE_WORKERS.load(Ordering::Relaxed);
+    if n > 0 {
+        return n;
+    }
+    let env = env_noise_workers();
+    if env > 0 {
+        return env;
+    }
+    std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1)
+        .min(8)
+}
 
 /// One named parameter tensor.
 #[derive(Clone, Debug)]
@@ -19,20 +67,86 @@ pub struct Param {
     pub tensor: HostTensor,
 }
 
+/// One unit of sweep work: a [`NOISE_BLOCK`]-element block of one tensor.
+/// `(param_idx, block_idx)` is the noise address; the borrow is the
+/// destination slice.
+struct NoiseBlock<'a> {
+    param_idx: usize,
+    block_idx: usize,
+    data: &'a mut [f32],
+}
+
+/// Flatten the included tensors into the block map the workers consume.
+fn noise_blocks<'a>(
+    params: &'a mut [Param],
+    include: &dyn Fn(usize, &str) -> bool,
+) -> Vec<NoiseBlock<'a>> {
+    let mut blocks = Vec::new();
+    for (param_idx, p) in params.iter_mut().enumerate() {
+        if !include(param_idx, &p.name) {
+            continue;
+        }
+        for (block_idx, data) in p.tensor.data.chunks_mut(NOISE_BLOCK).enumerate() {
+            blocks.push(NoiseBlock { param_idx, block_idx, data });
+        }
+    }
+    blocks
+}
+
+/// Minimum blocks per worker before spawning threads pays for itself
+/// (thread startup is ~tens of µs; a block sweep is ~µs-scale).
+const MIN_BLOCKS_PER_WORKER: usize = 2;
+
+/// Run `op` once per block, on up to `workers` scoped threads (1 = serial,
+/// same bits: every block's stream is independent of processing order).
+/// Small stores fall back to the serial path — identical results, no
+/// thread-spawn overhead.
+fn run_block_sweep<Op>(seed: u64, mut blocks: Vec<NoiseBlock<'_>>, workers: usize, op: Op)
+where
+    Op: Fn(&mut NoiseStream, &mut [f32]) + Sync,
+{
+    let noise = BlockNoise::new(seed);
+    let workers = workers.min(blocks.len() / MIN_BLOCKS_PER_WORKER);
+    if workers <= 1 {
+        for b in blocks.iter_mut() {
+            let mut stream = noise.block_stream(b.param_idx, b.block_idx);
+            op(&mut stream, &mut *b.data);
+        }
+        return;
+    }
+    let per_worker = blocks.len().div_ceil(workers);
+    let op = &op;
+    std::thread::scope(|s| {
+        for part in blocks.chunks_mut(per_worker) {
+            s.spawn(move || {
+                for b in part.iter_mut() {
+                    let mut stream = noise.block_stream(b.param_idx, b.block_idx);
+                    op(&mut stream, &mut *b.data);
+                }
+            });
+        }
+    });
+}
+
 /// Ordered collection of model parameters.
 ///
 /// The order is the canonical `param_specs` order from
-/// `python/compile/model.py`, recorded in the manifest; the ZO noise
-/// stream is consumed in exactly this order so that perturbation and
-/// update replay line up (Alg. 3 iterates layers in a fixed order).
+/// `python/compile/model.py`, recorded in the manifest; ZO noise is
+/// addressed by `(param_idx, block_idx)` in exactly this order so that
+/// perturbation and update replay line up (Alg. 3 iterates layers in a
+/// fixed order).
 #[derive(Clone, Debug)]
 pub struct ParamStore {
     params: Vec<Param>,
+    /// Count of full O(d) noise sweeps performed (perturb / subset /
+    /// fused restore+update) — the traffic metric the fused ZO step
+    /// optimizes (4 → 3 sweeps per step; asserted in tests).
+    noise_sweeps: u64,
 }
 
 impl ParamStore {
     pub fn new(params: Vec<Param>) -> Self {
-        Self { params }
+        Self { params, noise_sweeps: 0 }
     }
 
     /// Build zero-initialized params from (name, shape) specs.
@@ -41,7 +155,7 @@ impl ParamStore {
             .iter()
             .map(|(n, s)| Param { name: n.clone(), tensor: HostTensor::zeros(s) })
             .collect();
-        Self { params }
+        Self::new(params)
     }
 
     /// Load from the AOT dump: concatenated little-endian f32 in spec order.
@@ -66,7 +180,7 @@ impl ParamStore {
         if file.read(&mut extra)? != 0 {
             bail!("params file {} longer than specs describe", path.display());
         }
-        Ok(Self { params })
+        Ok(Self::new(params))
     }
 
     /// Save in the same binary format (checkpointing).
@@ -96,6 +210,11 @@ impl ParamStore {
         self.params.iter().map(|p| p.tensor.len()).sum()
     }
 
+    /// Full O(d) noise sweeps performed so far (perf accounting).
+    pub fn noise_sweeps(&self) -> u64 {
+        self.noise_sweeps
+    }
+
     pub fn iter(&self) -> impl Iterator<Item = &Param> {
         self.params.iter()
     }
@@ -117,56 +236,94 @@ impl ParamStore {
     }
 
     /// In-place Gaussian perturbation: `θ_m ← θ_m + scale·z_m` for every
-    /// tensor, with `z` replayed from `seed` (Algorithm 3). Generation is
-    /// fused with the apply loop — no transient noise buffer at all.
+    /// tensor, with `z_m` replayed block-wise from `seed` (Algorithm 3).
+    /// Generation is fused with the apply loop — no transient noise buffer
+    /// — and the blocks run on the configured worker pool.
     pub fn perturb(&mut self, seed: u64, scale: f32) {
-        let mut stream = NoiseStream::new(seed);
-        for p in self.params.iter_mut() {
-            // fused generate+apply: one pass over the data (§Perf)
-            for v in p.tensor.data.iter_mut() {
+        self.perturb_with_workers(seed, scale, noise_workers());
+    }
+
+    /// [`ParamStore::perturb`] with an explicit worker count (1 = serial).
+    /// All worker counts produce bit-identical stores: each block's noise
+    /// comes from its own counter-addressed stream, independent of which
+    /// thread generates it or in what order.
+    pub fn perturb_with_workers(&mut self, seed: u64, scale: f32, workers: usize) {
+        self.noise_sweeps += 1;
+        let blocks = noise_blocks(&mut self.params, &|_, _| true);
+        run_block_sweep(seed, blocks, workers, move |stream, data| {
+            for v in data.iter_mut() {
                 *v += scale * stream.next_normal();
             }
-        }
+        });
     }
 
     /// Perturb only the tensors for which `include(idx, name)` is true.
     ///
-    /// The noise stream is consumed **only** for included tensors, so a
+    /// Under counter addressing the noise for tensor `m` depends only on
+    /// `(seed, m)` — not on which other tensors are included — so a
     /// matching `perturb_subset` with the same seed and filter replays the
     /// identical noise (used by the layer-split hybrid ZO-FO baseline of
-    /// Zhang et al. [69]).
+    /// Zhang et al. [69]), and even agrees with a full `perturb` on the
+    /// included tensors.
     pub fn perturb_subset<F: Fn(usize, &str) -> bool>(
         &mut self,
         seed: u64,
         scale: f32,
         include: F,
     ) {
-        let mut stream = NoiseStream::new(seed);
-        let mut chunk = [0.0f32; 4096];
-        for (idx, p) in self.params.iter_mut().enumerate() {
-            if !include(idx, &p.name) {
-                continue;
+        self.noise_sweeps += 1;
+        let blocks = noise_blocks(&mut self.params, &include);
+        run_block_sweep(seed, blocks, noise_workers(), move |stream, data| {
+            for v in data.iter_mut() {
+                *v += scale * stream.next_normal();
             }
-            let data = &mut p.tensor.data;
-            let mut off = 0;
-            while off < data.len() {
-                let n = (data.len() - off).min(chunk.len());
-                stream.fill_normal(&mut chunk[..n]);
-                for i in 0..n {
-                    data[off + i] += scale * chunk[i];
-                }
-                off += n;
-            }
-        }
+        });
     }
 
     /// The ZO half of the Addax/MeZO update (Alg. 1 lines 13-17):
     /// `θ ← θ − lr·coeff·g⁰·z`, replaying `z` from `seed`.
     ///
     /// Equivalent to `perturb(seed, -lr*coeff*g0)`; kept as a named method
-    /// because it is the algorithmically meaningful operation.
+    /// because it is the algorithmically meaningful operation. The fused
+    /// [`ParamStore::restore_and_zo_update`] subsumes it on the hot path.
     pub fn zo_update(&mut self, seed: u64, lr: f32, coeff: f32, g0: f32) {
         self.perturb(seed, -lr * coeff * g0);
+    }
+
+    /// Fused SPSA-restore + ZO-update sweep: from `θ − εz` (where the
+    /// second probe leaves the params), produce `θ − lr·coeff·g⁰·z` in a
+    /// single O(d) pass, replaying `z` once.
+    ///
+    /// Elementwise it computes `(v + ε·z) + (−lr·coeff·g⁰)·z` — two
+    /// dependent adds, not one pre-combined scale — so the result is
+    /// bit-identical to the unfused `perturb(seed, ε)` followed by
+    /// `zo_update(seed, lr, coeff, g0)`, while touching parameter memory
+    /// once instead of twice. This cuts the ZO step from 4 O(d) sweeps
+    /// (+ε, −2ε, +ε restore, update) to 3 — ~25% of MeZO's dominant cost.
+    pub fn restore_and_zo_update(&mut self, seed: u64, eps: f32, lr: f32, coeff: f32, g0: f32) {
+        self.restore_and_zo_update_subset(seed, eps, lr, coeff, g0, |_, _| true);
+    }
+
+    /// Subset form of [`ParamStore::restore_and_zo_update`] (hybrid ZO-FO:
+    /// only the shallow tensors carry ZO noise).
+    pub fn restore_and_zo_update_subset<F: Fn(usize, &str) -> bool>(
+        &mut self,
+        seed: u64,
+        eps: f32,
+        lr: f32,
+        coeff: f32,
+        g0: f32,
+        include: F,
+    ) {
+        self.noise_sweeps += 1;
+        let delta = -lr * coeff * g0;
+        let blocks = noise_blocks(&mut self.params, &include);
+        run_block_sweep(seed, blocks, noise_workers(), move |stream, data| {
+            for v in data.iter_mut() {
+                let z = stream.next_normal();
+                *v = (*v + eps * z) + delta * z;
+            }
+        });
     }
 
     /// The FO half: `θ_m ← θ_m − lr·coeff·g_m`, one tensor at a time
@@ -216,6 +373,15 @@ mod tests {
         ]
     }
 
+    /// Shapes big enough to span several noise blocks per tensor.
+    fn big_specs() -> Vec<(String, Vec<usize>)> {
+        vec![
+            ("w1".into(), vec![NOISE_BLOCK * 2 + 17]),
+            ("w2".into(), vec![NOISE_BLOCK - 1]),
+            ("w3".into(), vec![3 * NOISE_BLOCK + 5]),
+        ]
+    }
+
     #[test]
     fn zeros_and_counts() {
         let s = ParamStore::zeros(&specs());
@@ -248,14 +414,72 @@ mod tests {
         let mut s = ParamStore::zeros(&specs());
         let seed = 99;
         s.zo_update(seed, 0.1, 0.5, 2.0);
-        // manual: θ = -0.1*0.5*2.0 * z
-        let mut stream = NoiseStream::new(seed);
-        for p in s.iter() {
-            for &v in &p.tensor.data {
-                let z = stream.next_normal();
-                assert!((v - (-0.1 * 0.5 * 2.0 * z)).abs() < 1e-7);
+        // manual: θ = -0.1*0.5*2.0 * z, with z replayed block-wise
+        let noise = BlockNoise::new(seed);
+        for (pi, p) in s.iter().enumerate() {
+            let mut z = vec![0.0f32; p.tensor.len()];
+            noise.fill_param(pi, &mut z);
+            for (&v, &zi) in p.tensor.data.iter().zip(z.iter()) {
+                assert!((v - (-0.1 * 0.5 * 2.0 * zi)).abs() < 1e-7);
             }
         }
+    }
+
+    #[test]
+    fn parallel_perturb_bit_identical_at_every_worker_count() {
+        let mut serial = ParamStore::zeros(&big_specs());
+        serial.perturb_with_workers(5, 0.7, 1);
+        for workers in [2, 3, 4, 8, 16] {
+            let mut par = ParamStore::zeros(&big_specs());
+            par.perturb_with_workers(5, 0.7, workers);
+            for (a, b) in par.iter().zip(serial.iter()) {
+                assert_eq!(a.tensor.data, b.tensor.data, "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_restore_update_matches_two_pass_exactly() {
+        let (seed, eps, lr, coeff, g0) = (21u64, 1e-3f32, 0.07f32, 0.4f32, 1.7f32);
+        let mut fused = ParamStore::zeros(&big_specs());
+        fused.perturb(3, 1.0);
+        let mut two_pass = fused.clone();
+        // both start from θ − εz, as after the second SPSA probe
+        fused.perturb(seed, eps);
+        fused.perturb(seed, -2.0 * eps);
+        two_pass.perturb(seed, eps);
+        two_pass.perturb(seed, -2.0 * eps);
+
+        fused.restore_and_zo_update(seed, eps, lr, coeff, g0);
+        two_pass.perturb(seed, eps);
+        two_pass.zo_update(seed, lr, coeff, g0);
+        for (a, b) in fused.iter().zip(two_pass.iter()) {
+            assert_eq!(a.tensor.data, b.tensor.data);
+        }
+    }
+
+    #[test]
+    fn subset_noise_agrees_with_full_perturb() {
+        // Counter addressing: tensor m's noise is independent of the
+        // filter, so a subset perturb equals the full perturb on the
+        // included tensors.
+        let mut full = ParamStore::zeros(&big_specs());
+        full.perturb(9, 0.3);
+        let mut sub = ParamStore::zeros(&big_specs());
+        sub.perturb_subset(9, 0.3, |idx, _| idx != 1);
+        assert_eq!(sub.get(0).tensor.data, full.get(0).tensor.data);
+        assert!(sub.get(1).tensor.data.iter().all(|&v| v == 0.0));
+        assert_eq!(sub.get(2).tensor.data, full.get(2).tensor.data);
+    }
+
+    #[test]
+    fn noise_sweep_counter_counts_full_passes() {
+        let mut s = ParamStore::zeros(&specs());
+        assert_eq!(s.noise_sweeps(), 0);
+        s.perturb(1, 0.1);
+        s.perturb_subset(1, 0.1, |i, _| i == 0);
+        s.restore_and_zo_update(1, 0.1, 0.01, 1.0, 0.5);
+        assert_eq!(s.noise_sweeps(), 3);
     }
 
     #[test]

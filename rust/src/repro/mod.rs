@@ -127,8 +127,11 @@ impl Harness {
         zo_mult: usize,
         seed: u64,
     ) -> Result<CellResult> {
+        // `rngv2` = counter-addressed block noise + Lemire next_below:
+        // trajectories differ from the original sequential-stream scheme,
+        // so pre-rework cache entries must miss, not be served as current.
         let cache_key = format!(
-            "{model_key}|{}|{:?}|{base_steps}|{zo_mult}|{seed}",
+            "rngv2|{model_key}|{}|{:?}|{base_steps}|{zo_mult}|{seed}",
             task.name, method
         );
         if let Some(v) = self.cache.get(&cache_key) {
@@ -159,6 +162,7 @@ impl Harness {
                 eval_examples: 120,
                 log_path: None,
                 verbose: false,
+                noise_workers: 0,
             };
             // L_T: Addax partitions at the task's scaled 60th percentile
             // when the task is long; others never partition.
@@ -205,6 +209,7 @@ impl Harness {
             eval_examples: 120,
             log_path: None,
             verbose: false,
+            noise_workers: 0,
         };
         train(exec, &mut params, &mut *opt, &ds, lt, &cfg)
     }

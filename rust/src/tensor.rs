@@ -35,8 +35,12 @@ impl HostTensor {
     }
 
     /// `self += alpha * other` (in place).
+    ///
+    /// Length mismatches panic in release builds too: `zip` would silently
+    /// truncate and corrupt an update. One compare per call (not per
+    /// element) — unmeasurable against the O(n) loop (EXPERIMENTS.md §Perf).
     pub fn axpy(&mut self, alpha: f32, other: &[f32]) {
-        debug_assert_eq!(self.data.len(), other.len());
+        assert_eq!(self.data.len(), other.len(), "axpy length mismatch");
         for (a, b) in self.data.iter_mut().zip(other.iter()) {
             *a += alpha * *b;
         }
@@ -54,9 +58,10 @@ impl HostTensor {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
     }
 
-    /// Dot product with a slice of the same length.
+    /// Dot product with a slice of the same length (loud on mismatch, like
+    /// [`HostTensor::axpy`]).
     pub fn dot(&self, other: &[f32]) -> f64 {
-        debug_assert_eq!(self.data.len(), other.len());
+        assert_eq!(self.data.len(), other.len(), "dot length mismatch");
         self.data
             .iter()
             .zip(other.iter())
@@ -108,6 +113,20 @@ mod tests {
         assert!((t.norm_sq() - 25.0).abs() < 1e-9);
         let u = HostTensor::from_vec(&[1], vec![0.0]);
         assert!((global_norm(&[t, u]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "axpy length mismatch")]
+    fn axpy_rejects_length_mismatch_in_release() {
+        let mut t = HostTensor::zeros(&[4]);
+        t.axpy(1.0, &[1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dot length mismatch")]
+    fn dot_rejects_length_mismatch_in_release() {
+        let t = HostTensor::zeros(&[4]);
+        t.dot(&[1.0]);
     }
 
     #[test]

@@ -7,11 +7,11 @@
 use addax::data::{generate, opt_task, partition, training_batch, Example, OPT_TASKS};
 use addax::jsonlite::Json;
 use addax::memory::{footprint, geometry, Method, Workload};
-use addax::optim::{spsa_g0, Addax, IpSgd, MeZo, Optimizer, StepBatches};
+use addax::optim::{spsa_g0, z_dot_grads, Addax, IpSgd, MeZo, Optimizer, StepBatches};
 use addax::params::ParamStore;
 use addax::runtime::mock::QuadraticExec;
 use addax::runtime::{ModelExec, TokenBatch};
-use addax::zorng::{NoiseStream, Xoshiro256};
+use addax::zorng::{Xoshiro256, NOISE_BLOCK};
 
 const CASES: usize = 60;
 
@@ -120,17 +120,122 @@ fn prop_spsa_matches_directional_derivative() {
         let seed = rng.next_u64();
         let (g0, _) = spsa_g0(&mut p, &mut exec, &b, 1e-4, seed).unwrap();
         let g = exec.grads(&p, &b).unwrap();
-        let mut stream = NoiseStream::new(seed);
-        let mut dir = 0.0f64;
-        for t in &g.grads {
-            for &gi in t {
-                dir += gi as f64 * stream.next_normal() as f64;
-            }
-        }
+        let dir = z_dot_grads(seed, &g.grads);
         assert!(
             (g0 - dir).abs() <= 0.05 * dir.abs().max(1.0),
             "case {case} d {d}: {g0} vs {dir}"
         );
+    }
+}
+
+/// Random stores whose tensors straddle noise-block boundaries.
+fn random_store(rng: &mut Xoshiro256, n_tensors: usize) -> ParamStore {
+    let shapes: Vec<(String, Vec<usize>)> = (0..n_tensors)
+        .map(|i| {
+            // sizes from sub-block to several blocks, hugging the edges
+            let n = match rng.next_below(4) {
+                0 => 1 + rng.next_below(NOISE_BLOCK - 1),
+                1 => NOISE_BLOCK + rng.next_below(3) - 1, // BLOCK-1 .. BLOCK+1
+                2 => NOISE_BLOCK * (1 + rng.next_below(3)) + rng.next_below(50),
+                _ => 2 * NOISE_BLOCK - rng.next_below(7),
+            };
+            (format!("t{i}"), vec![n])
+        })
+        .collect();
+    ParamStore::zeros(&shapes)
+}
+
+/// Parallel-vs-serial invariant: the counter-addressed sweep produces
+/// bit-identical stores at every worker count, for random shapes that
+/// straddle block boundaries.
+#[test]
+fn prop_parallel_perturb_bit_identical() {
+    for case in 0..20 {
+        let mut rng = rng_for(case);
+        let n_tensors = 1 + rng.next_below(5);
+        let seed = rng.next_u64();
+        let scale = 0.1 + rng.next_f64() as f32;
+        let mut serial = random_store(&mut rng.clone(), n_tensors);
+        serial.perturb_with_workers(seed, scale, 1);
+        for workers in [2, 4, 8] {
+            let mut par = random_store(&mut rng.clone(), n_tensors);
+            par.perturb_with_workers(seed, scale, workers);
+            for (a, b) in par.iter().zip(serial.iter()) {
+                assert_eq!(
+                    a.tensor.data, b.tensor.data,
+                    "case {case} workers {workers}: parallel != serial"
+                );
+            }
+        }
+    }
+}
+
+/// Fusion invariant: `restore_and_zo_update` equals the unfused
+/// restore-then-update two-pass exactly (bit for bit), from any probe
+/// state.
+#[test]
+fn prop_fused_restore_update_exact() {
+    for case in 0..20 {
+        let mut rng = rng_for(case);
+        let n_tensors = 1 + rng.next_below(4);
+        let mut fused = random_store(&mut rng, n_tensors);
+        fused.perturb(case as u64, 1.0);
+        let mut two_pass = fused.clone();
+        let seed = rng.next_u64();
+        let eps = 10f32.powi(-(1 + rng.next_below(4) as i32));
+        let (lr, coeff, g0) = (
+            rng.next_f64() as f32 * 0.1,
+            rng.next_f64() as f32,
+            (rng.next_f64() as f32 - 0.5) * 4.0,
+        );
+        // both sit at θ − εz after the probe sweeps
+        fused.perturb(seed, eps);
+        fused.perturb(seed, -2.0 * eps);
+        two_pass.perturb(seed, eps);
+        two_pass.perturb(seed, -2.0 * eps);
+
+        fused.restore_and_zo_update(seed, eps, lr, coeff, g0);
+        two_pass.perturb(seed, eps);
+        two_pass.zo_update(seed, lr, coeff, g0);
+        for (a, b) in fused.iter().zip(two_pass.iter()) {
+            assert_eq!(a.tensor.data, b.tensor.data, "case {case}: fused != two-pass");
+        }
+    }
+}
+
+/// Subset-replay invariant (hybrid baseline): a subset probe pair plus the
+/// fused subset restore with lr_zo = 0 returns the store to θ within float
+/// tolerance, and the noise of an included tensor matches the full-sweep
+/// noise regardless of the filter.
+#[test]
+fn prop_subset_replay_lines_up() {
+    for case in 0..20 {
+        let mut rng = rng_for(case);
+        let n_tensors = 2 + rng.next_below(4);
+        let mut p = random_store(&mut rng, n_tensors);
+        p.perturb(case as u64, 1.0);
+        let before = p.clone();
+        let seed = rng.next_u64();
+        let eps = 1e-3f32;
+        let keep = rng.next_below(n_tensors);
+        let filt = move |idx: usize, _: &str| idx != keep;
+        p.perturb_subset(seed, eps, filt);
+        p.perturb_subset(seed, -2.0 * eps, filt);
+        p.restore_and_zo_update_subset(seed, eps, 0.0, 1.0, 0.7, filt);
+        let drift = p.dist_sq(&before);
+        assert!(drift < 1e-6, "case {case}: subset roundtrip drift {drift}");
+
+        // filter independence: included tensors get the same noise as a
+        // full perturb would give them
+        let mut sub = random_store(&mut rng_for(case), n_tensors);
+        let mut full = sub.clone();
+        sub.perturb_subset(seed, 0.5, filt);
+        full.perturb(seed, 0.5);
+        for (idx, (a, b)) in sub.iter().zip(full.iter()).enumerate() {
+            if idx != keep {
+                assert_eq!(a.tensor.data, b.tensor.data, "case {case} tensor {idx}");
+            }
+        }
     }
 }
 

@@ -8,7 +8,7 @@
 use addax::params::ParamStore;
 use addax::runtime::manifest::{default_artifacts_dir, ArtifactKind};
 use addax::runtime::{ModelExec, TokenBatch, XlaExec};
-use addax::zorng::{NoiseStream, Xoshiro256};
+use addax::zorng::Xoshiro256;
 
 fn artifacts_ready() -> bool {
     default_artifacts_dir().join("manifest.json").exists()
@@ -147,15 +147,10 @@ fn zo_estimate_matches_directional_derivative() {
     params.perturb(seed, eps);
     let g0 = (lp - lm) / (2.0 * eps as f64);
 
-    // True directional derivative z·∇L from the grads artifact.
+    // True directional derivative z·∇L from the grads artifact, with z
+    // replayed under the counter-addressed block scheme.
     let g = exec.grads(&params, &b).unwrap();
-    let mut stream = NoiseStream::new(seed);
-    let mut dir = 0.0f64;
-    for t in &g.grads {
-        for &gi in t {
-            dir += gi as f64 * stream.next_normal() as f64;
-        }
-    }
+    let dir = addax::optim::z_dot_grads(seed, &g.grads);
     let rel = (g0 - dir).abs() / dir.abs().max(1e-3);
     assert!(
         rel < 0.15,

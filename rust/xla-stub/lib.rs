@@ -1,0 +1,124 @@
+//! Build-time stub of the PJRT `xla` crate.
+//!
+//! The real backend (xla-rs + a PJRT plugin) needs the XLA C++ libraries
+//! and cannot be vendored offline. This stub mirrors the exact API
+//! surface `addax::runtime::XlaExec` uses, so the crate builds and the
+//! mock-backed test suite runs everywhere; every entry point returns a
+//! descriptive error at runtime. The artifact-backed tests and examples
+//! already skip when `make artifacts` has not produced a manifest, so a
+//! stubbed build passes the full tier-1 suite. To execute real artifacts,
+//! point the `xla` path dependency in `rust/Cargo.toml` at the real crate.
+
+use std::fmt;
+
+/// Error carrying the "stubbed backend" explanation.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT backend unavailable (offline `xla` stub). Link the real \
+         xla crate in rust/Cargo.toml to execute AOT artifacts."
+    ))
+}
+
+/// Element types transferable to/from device buffers.
+pub trait Element: Copy {}
+impl Element for f32 {}
+impl Element for f64 {}
+impl Element for i32 {}
+impl Element for i64 {}
+impl Element for u8 {}
+impl Element for u32 {}
+
+/// Types accepted as execution inputs.
+pub trait ExecInput {}
+impl ExecInput for PjRtBuffer {}
+impl ExecInput for Literal {}
+
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: Element>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _priv: () }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: ExecInput>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
