@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare a BENCH_hotpath.json smoke run against
+the committed baseline and fail on hot-path regressions.
+
+Usage:
+    python3 ci/bench_gate.py BASELINE.json OBSERVED.json [--tolerance 1.25]
+    python3 ci/bench_gate.py BASELINE.json OBSERVED.json --update
+
+The baseline stores *ceilings*, not typical timings: recorded dev-box
+numbers (EXPERIMENTS.md §Perf) scaled with generous headroom for slower
+CI runners, since absolute wall-clock varies across machines. The gate
+fails when an observed `ms_per_iter` exceeds `ceiling * tolerance` —
+catching order-of-magnitude regressions (an accidental O(d) copy, a
+de-fused sweep, a serial fallback) without flaking on runner variance.
+
+`--update` rewrites the baseline's ceilings from the observed run
+(observed * headroom) — run locally when the bench set changes, then
+commit the result.
+"""
+
+import argparse
+import json
+import sys
+
+HEADROOM = 8.0  # observed -> ceiling multiplier used by --update
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: r for r in doc.get("results", [])}, doc
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("observed")
+    ap.add_argument("--tolerance", type=float, default=1.25,
+                    help="fail when observed > ceiling * tolerance (default 1.25)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline ceilings from the observed run")
+    args = ap.parse_args()
+
+    observed, _ = load(args.observed)
+    if not observed:
+        print(f"error: no results in {args.observed}", file=sys.stderr)
+        return 2
+
+    if args.update:
+        doc = {
+            "bench": "hotpath",
+            "note": (
+                "Per-bench ms/iter CEILINGS for the --smoke run "
+                f"(observed x {HEADROOM:g} headroom). Regenerate with "
+                "`cargo bench --bench hotpath -- --smoke && "
+                "python3 ci/bench_gate.py rust/BENCH_baseline.json "
+                "rust/BENCH_hotpath.json --update`."
+            ),
+            "results": [
+                {"name": name, "ms_per_iter": round(r["ms_per_iter"] * HEADROOM, 4)}
+                for name, r in observed.items()
+            ],
+        }
+        with open(args.baseline, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"updated {args.baseline} with {len(observed)} ceilings")
+        return 0
+
+    baseline, _ = load(args.baseline)
+    failures, missing = [], []
+    for name, obs in sorted(observed.items()):
+        base = baseline.get(name)
+        if base is None:
+            missing.append(name)
+            continue
+        ceiling = base["ms_per_iter"] * args.tolerance
+        status = "FAIL" if obs["ms_per_iter"] > ceiling else "ok"
+        print(f"  {status:>4}  {name:<44} {obs['ms_per_iter']:>10.3f} ms "
+              f"(ceiling {ceiling:.3f} ms)")
+        if status == "FAIL":
+            failures.append(name)
+    for name in missing:
+        print(f"  warn  {name:<44} not in baseline (new bench? "
+              f"re-run with --update)")
+
+    if failures:
+        print(f"\nbench gate: {len(failures)} regression(s) past the "
+              f"{args.tolerance:g}x tolerance: {', '.join(failures)}",
+              file=sys.stderr)
+        return 1
+    print(f"\nbench gate: {len(observed) - len(missing)} benches within ceilings"
+          f" ({len(missing)} unbaselined)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

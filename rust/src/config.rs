@@ -29,7 +29,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::TrainConfig;
-use crate::optim::{Adam, Addax, HybridZoFo, IpSgd, MeZo, Optimizer, Sgd, ZoSgdNaive};
+use crate::optim::{OptSpec, Optimizer};
 
 /// Flat `section.key -> raw string value` map.
 #[derive(Clone, Debug, Default)]
@@ -115,6 +115,44 @@ impl Config {
         }
     }
 
+    /// Comma-separated string list (whitespace-trimmed, empties dropped).
+    /// Sweep grids use these: `optimizers = "addax, mezo"`.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(s) => s
+                .split(',')
+                .map(str::trim)
+                .filter(|t| !t.is_empty())
+                .map(str::to_string)
+                .collect(),
+        }
+    }
+
+    /// Comma-separated f32 list.
+    pub fn f32_list_or(&self, key: &str, default: &[f32]) -> Result<Vec<f32>> {
+        self.list_or(key, &[])
+            .iter()
+            .map(|s| {
+                s.parse()
+                    .with_context(|| format!("{key}: {s:?} is not a float"))
+            })
+            .collect::<Result<Vec<f32>>>()
+            .map(|v| if v.is_empty() { default.to_vec() } else { v })
+    }
+
+    /// Comma-separated u64 list.
+    pub fn u64_list_or(&self, key: &str, default: &[u64]) -> Result<Vec<u64>> {
+        self.list_or(key, &[])
+            .iter()
+            .map(|s| {
+                s.parse()
+                    .with_context(|| format!("{key}: {s:?} is not an int"))
+            })
+            .collect::<Result<Vec<u64>>>()
+            .map(|v| if v.is_empty() { default.to_vec() } else { v })
+    }
+
     // -- typed views -------------------------------------------------------
 
     pub fn model_key(&self) -> String {
@@ -143,34 +181,26 @@ impl Config {
         })
     }
 
+    /// The declarative optimizer recipe configured under `[optim]`.
+    /// Defaults are [`OptSpec::named`]'s (unchanged from the historical
+    /// inline construction).
+    pub fn opt_spec(&self) -> Result<OptSpec> {
+        let mut o = OptSpec::named(&self.str_or("optim.name", "addax"));
+        o.lr = self.f32_or("optim.lr", o.lr)?;
+        o.eps = self.f32_or("optim.eps", o.eps)?;
+        o.batch = self.usize_or("optim.batch", o.batch)?;
+        o.alpha = self.f32_or("optim.alpha", o.alpha)?;
+        o.k0 = self.usize_or("optim.k0", o.k0)?;
+        o.k1 = self.usize_or("optim.k1", o.k1)?;
+        o.clip = self.f32_or("optim.clip", o.clip)?;
+        o.lr_zo = self.f32_or("optim.lr_zo", o.lr_zo)?;
+        o.split = self.f32_or("optim.split", o.split)?;
+        Ok(o)
+    }
+
     /// Instantiate the configured optimizer.
     pub fn optimizer(&self) -> Result<Box<dyn Optimizer>> {
-        let name = self.str_or("optim.name", "addax");
-        let lr = self.f32_or("optim.lr", 1e-2)?;
-        let eps = self.f32_or("optim.eps", 1e-3)?;
-        let batch = self.usize_or("optim.batch", 8)?;
-        Ok(match name.as_str() {
-            "addax" => Box::new(Addax::new(
-                lr,
-                eps,
-                self.f32_or("optim.alpha", 0.05)?,
-                self.usize_or("optim.k0", 6)?,
-                self.usize_or("optim.k1", 4)?,
-            )),
-            "mezo" => Box::new(MeZo::new(lr, eps, batch)),
-            "zo-sgd" => Box::new(ZoSgdNaive::new(lr, eps, batch)),
-            "sgd" => Box::new(Sgd::new(lr, batch, Some(self.f32_or("optim.clip", 1.0)?))),
-            "ip-sgd" => Box::new(IpSgd::new(lr, batch)),
-            "adam" => Box::new(Adam::new(lr, batch)),
-            "hybrid-zofo" => Box::new(HybridZoFo::new(
-                lr,
-                self.f32_or("optim.lr_zo", 1e-3)?,
-                eps,
-                batch,
-                self.f32_or("optim.split", 0.5)?,
-            )),
-            other => bail!("unknown optimizer {other:?}"),
-        })
+        self.opt_spec()?.build()
     }
 }
 
@@ -238,6 +268,27 @@ verbose = false
     fn perf_noise_workers_parses() {
         let c = Config::parse("[perf]\nnoise_workers = 4").unwrap();
         assert_eq!(c.train_config().unwrap().noise_workers, 4);
+    }
+
+    #[test]
+    fn list_helpers_split_and_default() {
+        let c = Config::parse("[grid]\noptimizers = \"addax, mezo ,ip-sgd\"\nlrs = 0.07,1e-3")
+            .unwrap();
+        assert_eq!(c.list_or("grid.optimizers", &[]), vec!["addax", "mezo", "ip-sgd"]);
+        assert_eq!(c.f32_list_or("grid.lrs", &[]).unwrap(), vec![0.07, 1e-3]);
+        assert_eq!(c.list_or("grid.tasks", &["sst2"]), vec!["sst2"]);
+        assert_eq!(c.u64_list_or("grid.seeds", &[0, 1]).unwrap(), vec![0, 1]);
+        assert!(c.f32_list_or("grid.optimizers", &[]).is_err());
+    }
+
+    #[test]
+    fn opt_spec_reads_overrides() {
+        let c = Config::parse("[optim]\nname = \"addax\"\nlr = 0.07\nk0 = 12").unwrap();
+        let o = c.opt_spec().unwrap();
+        assert_eq!(o.name, "addax");
+        assert_eq!(o.lr, 0.07);
+        assert_eq!(o.k0, 12);
+        assert_eq!(o.k1, 4); // default preserved
     }
 
     #[test]

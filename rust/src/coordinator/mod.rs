@@ -174,7 +174,13 @@ pub fn train(
 ) -> Result<RunResult> {
     let needs = opt.needs();
     // Pin the noise-sweep pool for the whole run (0 keeps auto selection).
+    // NOTE: this is a process-global; concurrent runs (the sweep
+    // scheduler) must all pass the same value — the scheduler pins 1 and
+    // parallelizes across runs instead.
     crate::params::set_noise_workers(cfg.noise_workers);
+    // Paper cadence is steps/20 (App. D.5); for step budgets under 20 the
+    // division truncates to 0, which would be a modulo-by-zero below — it
+    // must fall back to evaluating every step.
     let eval_every = if cfg.eval_every == 0 {
         (cfg.steps / 20).max(1)
     } else {
@@ -302,6 +308,20 @@ mod tests {
         assert!(r.val_curve.points.len() >= 5);
         // quadratic mock: loss decreases
         assert!(r.final_train_loss < r.loss_curve.points[0].1);
+    }
+
+    #[test]
+    fn eval_cadence_falls_back_to_one_below_twenty_steps() {
+        // eval_every = 0 with steps < 20: steps/20 truncates to 0 and must
+        // fall back to a cadence of 1, not divide-by-zero in the modulo.
+        let (mut exec, mut params, ds) = quad_setup(8);
+        let mut opt = IpSgd::new(0.1, 2);
+        let cfg = TrainConfig { steps: 5, eval_every: 0, ..Default::default() };
+        let r = train(&mut exec, &mut params, &mut opt, &ds, 9999, &cfg).unwrap();
+        assert_eq!(r.loss_curve.points.len(), 5);
+        // cadence 1 ⇒ an eval point after every step
+        assert_eq!(r.val_curve.points.len(), 5);
+        assert_eq!(r.val_curve.points.first().map(|&(s, _)| s), Some(1));
     }
 
     #[test]

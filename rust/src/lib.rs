@@ -12,8 +12,10 @@
 //! * **L3** (this crate): the training coordinator — data partitioning by
 //!   sequence length, seed-replay zeroth-order perturbation, in-place
 //!   optimizers (Addax, MeZO, IP-SGD, SGD, Adam, hybrid ZO-FO), the GPU
-//!   memory simulator, and the experiment harness regenerating every
-//!   table/figure of the paper.
+//!   memory simulator, the memory-aware sweep scheduler (`sched/`) that
+//!   packs concurrent runs onto device budgets behind a resumable
+//!   manifest, and the experiment harness regenerating every table/figure
+//!   of the paper as pure aggregations over that manifest.
 //!
 //! Python never runs on the training path: the `addax` binary is
 //! self-contained once `make artifacts` has produced `artifacts/`.
@@ -28,6 +30,7 @@ pub mod optim;
 pub mod params;
 pub mod repro;
 pub mod runtime;
+pub mod sched;
 pub mod tensor;
 pub mod theory;
 pub mod zorng;

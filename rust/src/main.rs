@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! addax train  [--config FILE] [--set k=v ...]     fine-tune one run
+//! addax sweep  [--spec FILE | --smoke] [--budget-gb G] [--gpus N]
+//!              [--workers W] [--resume] [--manifest PATH] [--dry-run]
 //! addax repro  <id|all> [--fast] [--model KEY]     regenerate a paper table/figure
 //! addax memory --geometry G --method M [-b B] [-l L] [--gpus N] [--device D]
 //! addax list                                       models, tasks, experiments
@@ -19,11 +21,13 @@ use addax::memory::{self, footprint, geometry, Device, Method, Workload};
 use addax::repro::{self, Harness};
 use addax::runtime::manifest::{default_artifacts_dir, Manifest};
 use addax::runtime::XlaExec;
+use addax::sched::{pack, run_sweep, SweepOptions, SweepSpec};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("train") => cmd_train(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
         Some("repro") => cmd_repro(&args[1..]),
         Some("memory") => cmd_memory(&args[1..]),
         Some("list") => cmd_list(),
@@ -42,9 +46,19 @@ fn print_help() {
     println!(
         "addax — rust coordinator for the Addax reproduction\n\n\
          USAGE:\n  addax train  [--config FILE] [--set section.key=value ...]\n  \
+         addax sweep  [--spec FILE | --smoke] [--budget-gb G] [--gpus N] [--workers W]\n  \
+         \x20            [--resume] [--manifest PATH] [--dry-run] [--set section.key=value ...]\n  \
          addax repro  <id|all> [--fast] [--model KEY]\n  \
          addax memory --geometry G --method M [--batch B] [--len L] [--gpus N] [--hbm GB]\n  \
-         addax list\n\nEXPERIMENT IDS:\n  \
+         addax list\n\nSWEEP:\n  \
+         Expands the spec's (optimizer x task x seed x lr x eps) grid, prices each\n  \
+         run with the analytic memory model, bin-packs runs that co-fit onto the\n  \
+         simulated device budget (--budget-gb x --gpus), and executes each wave\n  \
+         concurrently (--workers). Results append to a crash-safe JSONL manifest;\n  \
+         --resume skips runs already recorded, and the compacted manifest is\n  \
+         byte-identical for a spec at any worker count. `repro` tables/figures\n  \
+         aggregate from the same manifest. --smoke runs the built-in 12-run grid\n  \
+         (see configs/sweep_smoke.toml).\n\nEXPERIMENT IDS:\n  \
          fig3 fig4 fig5 fig6 fig8 fig11 theory table11 table12 table13 table14 table15 all"
     );
 }
@@ -120,6 +134,80 @@ fn cmd_train(args: &[String]) -> Result<()> {
         std::fs::write(out, r.to_json().dump())?;
         println!("wrote {out}");
     }
+    Ok(())
+}
+
+/// The built-in smoke sweep: a 12-run mock grid small enough for CI but
+/// wide enough to exercise packing, concurrency and resume end to end.
+/// The embedded text IS `configs/sweep_smoke.toml` — `--smoke` and the
+/// CI `--spec` path cannot diverge.
+const SMOKE_SPEC: &str = include_str!("../../configs/sweep_smoke.toml");
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let text = if has(args, "--smoke") {
+        SMOKE_SPEC.to_string()
+    } else {
+        let path = flag(args, "--spec").context("sweep wants --spec FILE (or --smoke)")?;
+        std::fs::read_to_string(path).with_context(|| format!("reading spec {path}"))?
+    };
+    let mut cfg = Config::parse(&text)?;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--set" {
+            let kv = args.get(i + 1).context("--set wants key=value")?;
+            cfg.set(kv)?;
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    let sweep = SweepSpec::from_config(&cfg)?;
+    let specs = sweep.expand()?;
+
+    let opts = SweepOptions {
+        budget_gb: match flag(args, "--budget-gb") {
+            Some(s) => s.parse().context("--budget-gb wants a number")?,
+            None => sweep.budget_gb,
+        },
+        gpus: match flag(args, "--gpus") {
+            Some(s) => s.parse().context("--gpus wants an integer")?,
+            None => sweep.gpus,
+        },
+        workers: match flag(args, "--workers") {
+            Some(s) => s.parse().context("--workers wants an integer")?,
+            None => 4,
+        },
+        resume: has(args, "--resume"),
+        manifest_path: flag(args, "--manifest")
+            .unwrap_or("results/sweep/manifest.jsonl")
+            .into(),
+        verbose: true,
+    };
+    println!(
+        "sweep {:?}: {} runs over {} optimizer(s) x {} task(s) x {} seed(s), \
+         budget {:.0} GB x {} device(s), {} worker(s)",
+        sweep.name,
+        specs.len(),
+        sweep.optimizers.len(),
+        sweep.tasks.len(),
+        sweep.seeds.len(),
+        opts.budget_gb,
+        opts.gpus,
+        opts.workers,
+    );
+    if has(args, "--dry-run") {
+        let waves = pack(specs, opts.budget_gb * 1e9 * opts.gpus as f64)?;
+        for (i, w) in waves.iter().enumerate() {
+            println!("wave {:>2}: {:>5.1} GB", i + 1, w.bytes / 1e9);
+            for r in &w.runs {
+                println!("    {:>6.1} GB  {}", r.bytes / 1e9, r.spec.run_id);
+            }
+        }
+        println!("(dry run: nothing executed)");
+        return Ok(());
+    }
+    let summary = run_sweep(specs, &opts)?;
+    println!("{}", summary.line());
     Ok(())
 }
 

@@ -80,6 +80,19 @@ impl Curve {
                 .collect(),
         )
     }
+
+    /// Parse the [`Curve::to_json`] form back ( `[[step, value], ...]` ).
+    /// The sweep manifest stores per-run curves keyed by run id; the
+    /// figure harnesses read them back through here.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut c = Curve::default();
+        for p in v.as_arr()? {
+            let pair = p.as_arr()?;
+            anyhow::ensure!(pair.len() == 2, "curve point is not a [step, value] pair");
+            c.push(pair[0].as_usize()?, pair[1].as_f64()?);
+        }
+        Ok(c)
+    }
 }
 
 /// Buffered JSONL writer for per-step telemetry.
@@ -200,6 +213,17 @@ mod tests {
         let acc = accuracy(&pred, &truth);
         let f1 = macro_f1(&pred, &truth, 2);
         assert!(acc > 0.85 && f1 < 0.55, "acc {acc} f1 {f1}");
+    }
+
+    #[test]
+    fn curve_json_roundtrip() {
+        let mut c = Curve::default();
+        for (s, v) in [(0, 3.5), (10, 2.25), (20, 1.0)] {
+            c.push(s, v);
+        }
+        let back = Curve::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.points, c.points);
+        assert!(Curve::from_json(&Json::Arr(vec![Json::from(1.0)])).is_err());
     }
 
     #[test]

@@ -20,8 +20,9 @@ pub use hybrid::HybridZoFo;
 pub use mezo::{MeZo, ZoSgdNaive};
 pub use sgd::{IpSgd, Sgd};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::jsonlite::{obj, Json};
 use crate::memory::Method;
 use crate::params::ParamStore;
 use crate::runtime::{ModelExec, TokenBatch};
@@ -83,6 +84,164 @@ pub trait Optimizer: Send {
 
     /// Learning rate accessor (for schedules / logging).
     fn lr(&self) -> f64;
+}
+
+/// Declarative optimizer recipe: everything needed to (re)build an
+/// optimizer, serializable into sweep specs and the run manifest.
+///
+/// One `OptSpec` is one column of the paper's hyper-parameter grids: the
+/// sweep scheduler expands grids into `OptSpec`s, prices each with the
+/// memory model (via [`OptSpec::method`]) and builds the live optimizer
+/// on the assigned worker (via [`OptSpec::build`]). The repro harness
+/// uses the same recipes, so every table/figure cell is reproducible from
+/// its manifest row alone.
+///
+/// The pseudo-name `"zero-shot"` is accepted for evaluation-only runs
+/// (steps = 0): it builds an inert optimizer and prices as inference.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OptSpec {
+    pub name: String,
+    pub lr: f32,
+    pub eps: f32,
+    pub batch: usize,
+    /// Addax ZO/FO mixing weight α.
+    pub alpha: f32,
+    /// Addax ZO batch `K⁰`.
+    pub k0: usize,
+    /// Addax FO batch `K¹`.
+    pub k1: usize,
+    /// SGD global-norm clip.
+    pub clip: f32,
+    /// Hybrid ZO-FO zeroth-order learning rate.
+    pub lr_zo: f32,
+    /// Hybrid ZO-FO layer split fraction.
+    pub split: f32,
+}
+
+/// Shortest-round-trip float formatting (stable across platforms; used in
+/// run ids and manifest rows so identical specs hash identically).
+pub fn fmt_f32(v: f32) -> String {
+    format!("{v}")
+}
+
+impl OptSpec {
+    /// Recipe with the config-file defaults for `name` (same defaults as
+    /// `Config::optimizer`); validity is checked at [`OptSpec::build`].
+    pub fn named(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            lr: 1e-2,
+            eps: 1e-3,
+            batch: 8,
+            alpha: 0.05,
+            k0: 6,
+            k1: 4,
+            clip: 1.0,
+            lr_zo: 1e-3,
+            split: 0.5,
+        }
+    }
+
+    /// Compact human-readable identity: only the fields the named
+    /// optimizer actually consumes, so equivalent recipes share an id.
+    pub fn id(&self) -> String {
+        let mut s = self.name.clone();
+        match self.name.as_str() {
+            "zero-shot" => return s,
+            "addax" => {
+                s += &format!(
+                    "~lr{}~e{}~a{}~k{}-{}",
+                    fmt_f32(self.lr),
+                    fmt_f32(self.eps),
+                    fmt_f32(self.alpha),
+                    self.k0,
+                    self.k1
+                );
+            }
+            "mezo" | "zo-sgd" => {
+                s += &format!("~lr{}~e{}~b{}", fmt_f32(self.lr), fmt_f32(self.eps), self.batch);
+            }
+            "sgd" => {
+                s += &format!("~lr{}~b{}~c{}", fmt_f32(self.lr), self.batch, fmt_f32(self.clip));
+            }
+            "hybrid-zofo" => {
+                s += &format!(
+                    "~lr{}-{}~e{}~b{}~s{}",
+                    fmt_f32(self.lr),
+                    fmt_f32(self.lr_zo),
+                    fmt_f32(self.eps),
+                    self.batch,
+                    fmt_f32(self.split)
+                );
+            }
+            _ => {
+                // ip-sgd, adam, and anything future: lr + batch
+                s += &format!("~lr{}~b{}", fmt_f32(self.lr), self.batch);
+            }
+        }
+        s
+    }
+
+    /// ZO-only optimizers run `zo_mult ×` the FO step budget in sweeps
+    /// (the paper's 20k-vs-1k step protocol).
+    pub fn is_zo_only(&self) -> bool {
+        matches!(self.name.as_str(), "mezo" | "zo-sgd")
+    }
+
+    /// The memory-model method this recipe prices as.
+    pub fn method(&self) -> Result<Method> {
+        Ok(match self.name.as_str() {
+            "addax" => Method::Addax,
+            "mezo" => Method::MeZo,
+            "zo-sgd" => Method::ZoSgdNaive,
+            "sgd" => Method::Sgd,
+            "ip-sgd" => Method::IpSgd,
+            "adam" => Method::Adam,
+            "hybrid-zofo" => Method::HybridZoFo,
+            // evaluation-only: inference footprint, same as MeZO's phase
+            "zero-shot" => Method::MeZo,
+            other => bail!("unknown optimizer {other:?}"),
+        })
+    }
+
+    /// Instantiate the live optimizer.
+    pub fn build(&self) -> Result<Box<dyn Optimizer>> {
+        Ok(match self.name.as_str() {
+            "addax" => Box::new(Addax::new(self.lr, self.eps, self.alpha, self.k0, self.k1)),
+            "mezo" => Box::new(MeZo::new(self.lr, self.eps, self.batch)),
+            "zo-sgd" => Box::new(ZoSgdNaive::new(self.lr, self.eps, self.batch)),
+            "sgd" => Box::new(Sgd::new(self.lr, self.batch, Some(self.clip))),
+            "ip-sgd" => Box::new(IpSgd::new(self.lr, self.batch)),
+            "adam" => Box::new(Adam::new(self.lr, self.batch)),
+            "hybrid-zofo" => Box::new(HybridZoFo::new(
+                self.lr,
+                self.lr_zo,
+                self.eps,
+                self.batch,
+                self.split,
+            )),
+            // inert: lr 0, batch 1 — the executor never steps it anyway
+            "zero-shot" => Box::new(IpSgd::new(0.0, 1)),
+            other => bail!("unknown optimizer {other:?}"),
+        })
+    }
+
+    /// Manifest/sweep-spec serialization. Floats go through [`fmt_f32`]
+    /// strings so rows are canonical and round-trip exactly.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::from(self.name.clone())),
+            ("lr", Json::from(fmt_f32(self.lr))),
+            ("eps", Json::from(fmt_f32(self.eps))),
+            ("batch", Json::from(self.batch)),
+            ("alpha", Json::from(fmt_f32(self.alpha))),
+            ("k0", Json::from(self.k0)),
+            ("k1", Json::from(self.k1)),
+            ("clip", Json::from(fmt_f32(self.clip))),
+            ("lr_zo", Json::from(fmt_f32(self.lr_zo))),
+            ("split", Json::from(fmt_f32(self.split))),
+        ])
+    }
 }
 
 /// SPSA zeroth-order probe (Algorithm 2, first two sweeps) via seed replay.
@@ -252,5 +411,44 @@ mod tests {
     fn grad_norm_helper() {
         let g = vec![vec![3.0f32], vec![4.0f32]];
         assert!((grad_global_norm(&g) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn opt_spec_builds_every_family() {
+        for name in ["addax", "mezo", "zo-sgd", "sgd", "ip-sgd", "adam", "hybrid-zofo"] {
+            let spec = OptSpec::named(name);
+            let opt = spec.build().unwrap();
+            assert_eq!(opt.name(), name);
+            assert_eq!(opt.method(), spec.method().unwrap());
+        }
+        assert!(OptSpec::named("nope").build().is_err());
+        assert!(OptSpec::named("nope").method().is_err());
+        // zero-shot is the eval-only pseudo-optimizer
+        let zs = OptSpec::named("zero-shot");
+        assert!(zs.build().is_ok());
+        assert_eq!(zs.method().unwrap(), Method::MeZo);
+    }
+
+    #[test]
+    fn opt_spec_id_tracks_relevant_fields_only() {
+        let a = OptSpec { lr: 0.07, ..OptSpec::named("addax") };
+        let b = OptSpec { lr: 0.07, batch: 99, ..OptSpec::named("addax") };
+        // addax ignores `batch` (it uses k0/k1), so the ids agree
+        assert_eq!(a.id(), b.id());
+        let c = OptSpec { k0: 12, ..a.clone() };
+        assert_ne!(a.id(), c.id());
+        let m = OptSpec { batch: 99, ..OptSpec::named("mezo") };
+        assert_ne!(OptSpec::named("mezo").id(), m.id());
+        assert!(OptSpec::named("mezo").is_zo_only());
+        assert!(!OptSpec::named("addax").is_zo_only());
+    }
+
+    #[test]
+    fn fmt_f32_is_shortest_roundtrip() {
+        for v in [0.07f32, 1e-3, 3e-4, 0.5, 1.0] {
+            let s = fmt_f32(v);
+            assert_eq!(s.parse::<f32>().unwrap(), v, "{s}");
+        }
+        assert_eq!(fmt_f32(0.07), "0.07");
     }
 }

@@ -1,4 +1,10 @@
 //! Figures 3, 4, 5, 6, 8, 11.
+//!
+//! Measured panels go through the sweep scheduler like the tables: cells
+//! expand to `RunSpec`s, one packed sweep executes whatever the manifest
+//! is missing, and the figure renders from manifest rows (curves
+//! included — they are stored per run id). Analytic panels (fig4, fig6,
+//! fig5-left) stay closed-form.
 
 use anyhow::Result;
 
@@ -6,12 +12,27 @@ use crate::data::{self, generate, Example};
 use crate::jsonlite::{obj, Json};
 use crate::memory::{footprint, geometry, Method, Workload, BS_GRID};
 use crate::metrics::Table;
-use crate::optim::{Addax, IpSgd, MeZo, Sgd};
+use crate::optim::OptSpec;
+use crate::sched::RunSpec;
 use crate::zorng::NoiseStream;
 
-use super::{emit, Harness, MethodKind};
+use super::{emit, plan_for, CellSpec, Harness, MethodKind, RunPlan};
 
 const FP16: f64 = 2.0;
+
+/// Shorthand: a sealed spec for one figure cell on the harness backend.
+fn fig_cell(h: &Harness, task: &str, opt: OptSpec, steps: usize, seed: u64) -> RunSpec {
+    let plan = RunPlan { steps, opt };
+    h.cell_spec(&CellSpec {
+        task,
+        plan: &plan,
+        seed,
+        geometry: "opt-13b",
+        catalog: "opt",
+        lt_auto: false,
+        price_lt: 0,
+    })
+}
 
 /// Figure 3. Left: memory vs batch size (OPT-13B, L=300) for IP-SGD vs
 /// MeZO. Right: IP-SGD with small batches vs Adam on RTE/CB/COPA.
@@ -49,29 +70,39 @@ pub fn fig3(h: &mut Harness) -> Result<()> {
         })
         .copied();
 
-    // Right panel: IP-SGD (small batch, fp16) vs Adam (fp32) accuracy.
+    // Right panel: IP-SGD (small batch, fp16) vs Adam (fp32) accuracy —
+    // cells shared with table12 via the manifest.
     let base_steps = if h.fast { 300 } else { 600 };
+    let tasks = ["rte", "cb", "copa"];
+    let ip_plan = plan_for(MethodKind::IpSgd, base_steps, 1);
+    let adam_plan = plan_for(MethodKind::Adam, base_steps, 1);
+    let mut specs: Vec<RunSpec> = Vec::new();
+    for tname in tasks {
+        specs.push(fig_cell(h, tname, ip_plan.opt.clone(), ip_plan.steps, 0));
+        specs.push(fig_cell(h, tname, adam_plan.opt.clone(), adam_plan.steps, 0));
+    }
+    let rows = h.runs(specs.clone())?;
+
     let mut right = Table::new(&["task", "IP-SGD acc", "Adam acc", "IP-SGD GB", "Adam GB"]);
     let mut raw_right = Vec::new();
-    let model_key = h.model_key.clone();
-    for tname in ["rte", "cb", "copa"] {
+    for (i, tname) in tasks.iter().enumerate() {
         let task = *data::opt_task(tname).unwrap();
-        let ip = h.run_cell(&model_key, &task, MethodKind::IpSgd, base_steps, 1, 0)?;
-        let adam = h.run_cell(&model_key, &task, MethodKind::Adam, base_steps, 1, 0)?;
+        let ip_acc = rows[&specs[2 * i].run_id].outcome.test_acc;
+        let adam_acc = rows[&specs[2 * i + 1].run_id].outcome.test_acc;
         let l = task.lengths.l_max;
         let ip_mem = footprint(&geometry::OPT_13B, Method::IpSgd, Workload::fo(2, l), FP16);
         let adam_mem = footprint(&geometry::OPT_13B, Method::Adam, Workload::fo(8, l), 4.0);
         right.row(vec![
             tname.to_string(),
-            format!("{:.1}", 100.0 * ip.test_acc),
-            format!("{:.1}", 100.0 * adam.test_acc),
+            format!("{:.1}", 100.0 * ip_acc),
+            format!("{:.1}", 100.0 * adam_acc),
             format!("{:.1}", ip_mem.gb()),
             format!("{:.0}", adam_mem.gb()),
         ]);
         raw_right.push(obj(vec![
-            ("task", Json::from(tname)),
-            ("ip_sgd_acc", Json::from(ip.test_acc)),
-            ("adam_acc", Json::from(adam.test_acc)),
+            ("task", Json::from(*tname)),
+            ("ip_sgd_acc", Json::from(ip_acc)),
+            ("adam_acc", Json::from(adam_acc)),
         ]));
     }
     let md = format!(
@@ -149,23 +180,30 @@ pub fn fig5(h: &mut Harness) -> Result<()> {
 
     // Right: K⁰ sweep at fixed K¹ = 4 on sst2 + rte.
     let steps = if h.fast { 300 } else { 600 };
+    let k0s = [0usize, 2, 4, 8, 16];
+    let tasks = ["sst2", "rte"];
+    let opt_for = |k0: usize| -> OptSpec {
+        if k0 == 0 {
+            // Addax with K⁰=0 degenerates to IP-SGD (paper Fig. 5).
+            OptSpec { lr: 7e-2, batch: 4, ..OptSpec::named("ip-sgd") }
+        } else {
+            OptSpec { lr: 7e-2, eps: 1e-3, alpha: 0.03, k0, k1: 4, ..OptSpec::named("addax") }
+        }
+    };
+    let mut specs = Vec::new();
+    for &k0 in &k0s {
+        for tname in tasks {
+            specs.push((k0, tname, fig_cell(h, tname, opt_for(k0), steps, 1)));
+        }
+    }
+    let rows = h.runs(specs.iter().map(|(_, _, r)| r.clone()).collect())?;
+
     let mut right = Table::new(&["K0", "sst2 acc", "rte acc"]);
     let mut raw_right = Vec::new();
-    for k0 in [0usize, 2, 4, 8, 16] {
+    for &k0 in &k0s {
         let mut accs = Vec::new();
-        for tname in ["sst2", "rte"] {
-            let task = *data::opt_task(tname).unwrap();
-            let acc = if k0 == 0 {
-                // Addax with K⁰=0 degenerates to IP-SGD (paper Fig. 5).
-                let mut opt = IpSgd::new(7e-2, 4);
-                h.run_curves(&h.model_key.clone(), &task, &mut opt, steps, usize::MAX, 1)?
-                    .test_acc
-            } else {
-                let mut opt = Addax::new(7e-2, 1e-3, 0.03, k0, 4);
-                h.run_curves(&h.model_key.clone(), &task, &mut opt, steps, usize::MAX, 1)?
-                    .test_acc
-            };
-            accs.push(acc);
+        for (_, _, rs) in specs.iter().filter(|(k, _, _)| *k == k0) {
+            accs.push(rows[&rs.run_id].outcome.test_acc);
         }
         right.row(vec![
             k0.to_string(),
@@ -239,28 +277,33 @@ pub fn fig8(h: &mut Harness) -> Result<()> {
     };
     let ratios: &[f64] = if h.fast { &[0.125, 0.25, 0.5] } else { &[0.1, 0.2, 0.3, 0.4, 0.5] };
     let total = 16usize; // K⁰ + K¹ fixed (paper uses 64 on RoBERTa)
-    let task = *data::opt_task("sst2").unwrap();
-    let mut tbl = Table::new(
-        &[&["alpha \\ K1/(K0+K1)"][..], &ratios
-            .iter()
-            .map(|r| Box::leak(format!("{r:.2}").into_boxed_str()) as &str)
-            .collect::<Vec<_>>()[..]]
-            .concat(),
-    );
-    let mut raw = Vec::new();
+
+    let mut specs = Vec::new();
     for &a in alphas {
-        let mut row = vec![format!("{a:.0e}")];
         for &r in ratios {
             let k1 = ((total as f64 * r).round() as usize).max(1);
             let k0 = (total - k1).max(1);
-            let mut opt = Addax::new(7e-2, 1e-3, a, k0, k1);
-            let res =
-                h.run_curves(&h.model_key.clone(), &task, &mut opt, steps, usize::MAX, 2)?;
-            row.push(format!("{:.1}", 100.0 * res.test_acc));
+            let opt = OptSpec { lr: 7e-2, eps: 1e-3, alpha: a, k0, k1, ..OptSpec::named("addax") };
+            specs.push((a, r, fig_cell(h, "sst2", opt, steps, 2)));
+        }
+    }
+    let rows = h.runs(specs.iter().map(|(_, _, r)| r.clone()).collect())?;
+
+    let ratio_labels: Vec<String> = ratios.iter().map(|r| format!("{r:.2}")).collect();
+    let header: Vec<&str> = std::iter::once("alpha \\ K1/(K0+K1)")
+        .chain(ratio_labels.iter().map(String::as_str))
+        .collect();
+    let mut tbl = Table::new(&header);
+    let mut raw = Vec::new();
+    for &a in alphas {
+        let mut row = vec![format!("{a:.0e}")];
+        for (_, r, rs) in specs.iter().filter(|(sa, _, _)| *sa == a) {
+            let acc = rows[&rs.run_id].outcome.test_acc;
+            row.push(format!("{:.1}", 100.0 * acc));
             raw.push(obj(vec![
                 ("alpha", Json::from(a as f64)),
-                ("ratio", Json::from(r)),
-                ("acc", Json::from(res.test_acc)),
+                ("ratio", Json::from(*r)),
+                ("acc", Json::from(acc)),
             ]));
         }
         tbl.row(row);
@@ -275,29 +318,34 @@ pub fn fig8(h: &mut Harness) -> Result<()> {
 }
 
 /// Figure 11: convergence curves — Addax (K¹,K⁰)=(4,12) vs MeZO / SGD
-/// with batch 16.
+/// with batch 16. Curves come straight off the manifest rows.
 pub fn fig11(h: &mut Harness) -> Result<()> {
     let steps = if h.fast { 300 } else { 600 };
     let zo_mult = if h.fast { 3 } else { 5 };
+    let tasks = ["sst2", "boolq"];
+
+    let mut specs = Vec::new();
+    for tname in tasks {
+        let addax =
+            OptSpec { lr: 7e-2, eps: 1e-3, alpha: 0.03, k0: 12, k1: 4, ..OptSpec::named("addax") };
+        let sgd = OptSpec { lr: 7e-2, batch: 16, clip: 1.0, ..OptSpec::named("sgd") };
+        let mezo = OptSpec { lr: 3e-4, eps: 1e-3, batch: 16, ..OptSpec::named("mezo") };
+        specs.push((tname, "addax", fig_cell(h, tname, addax, steps, 3)));
+        specs.push((tname, "sgd", fig_cell(h, tname, sgd, steps, 3)));
+        specs.push((tname, "mezo", fig_cell(h, tname, mezo, steps * zo_mult, 3)));
+    }
+    let rows = h.runs(specs.iter().map(|(_, _, r)| r.clone()).collect())?;
+    let curve = |task: &str, opt: &str| {
+        let rs = specs.iter().find(|(t, o, _)| *t == task && *o == opt).unwrap();
+        &rows[&rs.2.run_id].outcome
+    };
+
     let mut raw = Vec::new();
     let mut md = String::from("# fig11 — convergence speed (loss vs step)\n\n");
-    for tname in ["sst2", "boolq"] {
-        let task = *data::opt_task(tname).unwrap();
-        let mut addax = Addax::new(7e-2, 1e-3, 0.03, 12, 4);
-        let r_addax =
-            h.run_curves(&h.model_key.clone(), &task, &mut addax, steps, usize::MAX, 3)?;
-        let mut sgd = Sgd::new(7e-2, 16, Some(1.0));
-        let r_sgd =
-            h.run_curves(&h.model_key.clone(), &task, &mut sgd, steps, usize::MAX, 3)?;
-        let mut mezo = MeZo::new(3e-4, 1e-3, 16);
-        let r_mezo = h.run_curves(
-            &h.model_key.clone(),
-            &task,
-            &mut mezo,
-            steps * zo_mult,
-            usize::MAX,
-            3,
-        )?;
+    for tname in tasks {
+        let r_addax = curve(tname, "addax");
+        let r_sgd = curve(tname, "sgd");
+        let r_mezo = curve(tname, "mezo");
         // loss threshold = halfway between init and Addax's floor
         let init = r_addax.loss_curve.points.first().map(|&(_, v)| v).unwrap_or(0.0);
         let floor = r_addax.final_train_loss;

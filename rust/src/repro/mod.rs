@@ -1,10 +1,19 @@
 //! The experiment harness: one subcommand per paper table/figure.
 //!
-//! Every harness prints the same rows/series the paper reports and writes
-//! `results/<id>.json` + `results/<id>.md`. Large-model memory columns
-//! come from the analytic memory model at the paper's geometries; accuracy
-//! and wall-clock columns come from real training runs of the same
-//! algorithms at laptop scale (DESIGN.md §3 records the substitution).
+//! Control flow is inverted relative to the original harness: experiments
+//! no longer own training loops. Each table/figure expands its cells into
+//! [`RunSpec`]s, hands the whole batch to the sweep scheduler (`sched/`),
+//! and then renders as a *pure aggregation over manifest rows*. The
+//! scheduler prices every run with the analytic memory model, packs the
+//! ones that co-fit onto the simulated device budget, executes them
+//! concurrently, and records each result once in the resumable manifest —
+//! so cells shared between experiments (fig3's IP-SGD cells are table12's)
+//! train exactly once, and a finished manifest regenerates every report
+//! with zero training.
+//!
+//! Accuracy/time cells run at laptop scale (`tiny` mock/artifacts;
+//! DESIGN.md §3 records the substitution); memory and batch-size columns
+//! come from the analytic model at the paper's geometries.
 
 pub mod figures;
 pub mod tables;
@@ -12,15 +21,12 @@ pub mod theory_exp;
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::coordinator::{evaluate, train, RunResult, TrainConfig};
-use crate::data::{Dataset, TaskDef};
-use crate::jsonlite::{obj, Json};
+use crate::jsonlite::Json;
 use crate::metrics::write_result;
-use crate::optim::{Adam, Addax, IpSgd, MeZo, Optimizer, Sgd};
-use crate::runtime::manifest::default_artifacts_dir;
-use crate::runtime::XlaExec;
+use crate::optim::OptSpec;
+use crate::sched::{run_sweep_collect, Backend, ManifestRow, RunSpec, SweepManifest, SweepOptions};
 
 /// Methods compared in the OPT tables.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -46,205 +52,146 @@ impl MethodKind {
     }
 }
 
-/// Laptop-scale hyper-parameters per method (tuned on the `tiny` preset;
-/// the *relative* settings mirror App. D.5: MeZO gets a much smaller lr
-/// and many more steps, Addax uses (K¹,K⁰) = (4,6)).
+/// Per-method run shape at laptop scale.
 pub struct RunPlan {
     pub steps: usize,
-    pub make: Box<dyn Fn() -> Box<dyn Optimizer>>,
+    pub opt: OptSpec,
 }
 
 /// Build the per-method plan. `base_steps` is the FO-method step count;
-/// MeZO runs `zo_mult ×` that (paper: 20k vs 1k).
+/// MeZO runs `zo_mult ×` that (paper: 20k vs 1k). The hyper-parameters
+/// are the tuned `tiny`-preset values; the *relative* settings mirror
+/// App. D.5 (MeZO: much smaller lr, many more steps; Addax:
+/// (K¹,K⁰) = (4,6)).
 pub fn plan_for(method: MethodKind, base_steps: usize, zo_mult: usize) -> RunPlan {
     match method {
-        MethodKind::ZeroShot => RunPlan { steps: 0, make: Box::new(|| Box::new(IpSgd::new(0.0, 1))) },
+        MethodKind::ZeroShot => RunPlan { steps: 0, opt: OptSpec::named("zero-shot") },
         MethodKind::MeZo => RunPlan {
             steps: base_steps * zo_mult,
-            make: Box::new(|| Box::new(MeZo::new(3e-4, 1e-3, 16))),
+            opt: OptSpec { lr: 3e-4, eps: 1e-3, batch: 16, ..OptSpec::named("mezo") },
         },
         MethodKind::Sgd => RunPlan {
             steps: base_steps,
-            make: Box::new(|| Box::new(Sgd::new(7e-2, 16, Some(1.0)))),
+            opt: OptSpec { lr: 7e-2, batch: 16, clip: 1.0, ..OptSpec::named("sgd") },
         },
         MethodKind::IpSgd => RunPlan {
             steps: base_steps,
-            make: Box::new(|| Box::new(IpSgd::new(7e-2, 4))),
+            opt: OptSpec { lr: 7e-2, batch: 4, ..OptSpec::named("ip-sgd") },
         },
         MethodKind::Adam => RunPlan {
             steps: base_steps,
-            make: Box::new(|| Box::new(Adam::new(5e-3, 8))),
+            opt: OptSpec { lr: 5e-3, batch: 8, ..OptSpec::named("adam") },
         },
         MethodKind::Addax => RunPlan {
             steps: base_steps,
-            make: Box::new(|| Box::new(Addax::new(7e-2, 1e-3, 0.03, 6, 4))),
+            opt: OptSpec {
+                lr: 7e-2,
+                eps: 1e-3,
+                alpha: 0.03,
+                k0: 6,
+                k1: 4,
+                ..OptSpec::named("addax")
+            },
         },
     }
 }
 
-/// A lazily-created, shared XLA execution context per model key.
+/// Shared experiment context: which backend/model cells execute on, and
+/// the sweep-scheduler knobs every experiment's batch runs under.
 pub struct Harness {
-    execs: BTreeMap<String, XlaExec>,
     pub fast: bool,
     pub model_key: String,
-    cache: BTreeMap<String, Json>,
-    cache_path: std::path::PathBuf,
+    pub backend: Backend,
+    /// Concurrent runs per packing wave.
+    pub workers: usize,
+    /// Simulated per-device budget for packing (GB) × device count.
+    pub budget_gb: f64,
+    pub gpus: usize,
+    pub manifest_path: std::path::PathBuf,
 }
 
 impl Harness {
     pub fn new(model_key: &str, fast: bool) -> Self {
-        let cache_path = std::path::PathBuf::from("results/runs_cache.json");
-        let cache = std::fs::read_to_string(&cache_path)
-            .ok()
-            .and_then(|t| Json::parse(&t).ok())
-            .and_then(|j| j.as_obj().ok().cloned())
-            .unwrap_or_default();
-        Self { execs: BTreeMap::new(), fast, model_key: model_key.to_string(), cache, cache_path }
-    }
-
-    pub fn exec(&mut self, key: &str) -> Result<&mut XlaExec> {
-        if !self.execs.contains_key(key) {
-            let e = XlaExec::new(&default_artifacts_dir(), key)?;
-            self.execs.insert(key.to_string(), e);
+        Self {
+            fast,
+            model_key: model_key.to_string(),
+            // Xla when artifacts exist, the quadratic mock otherwise — so
+            // `repro` runs end-to-end (and in CI) without `make artifacts`.
+            backend: Backend::auto(),
+            workers: 4,
+            // 5×80 GB: the paper's Adam-on-OPT-13B footprint (~325 GB at
+            // fp32, Table 12 note) must co-exist with the rest of a
+            // table's runs, exactly like its 5-GPU Adam baselines.
+            budget_gb: 80.0,
+            gpus: 5,
+            manifest_path: std::path::PathBuf::from("results/sweep/manifest.jsonl"),
         }
-        Ok(self.execs.get_mut(key).unwrap())
     }
 
-    fn save_cache(&self) {
-        std::fs::create_dir_all("results").ok();
-        let j = Json::Obj(self.cache.clone());
-        std::fs::write(&self.cache_path, j.dump()).ok();
-    }
-
-    /// Train (or fetch cached) one (model, task, method) cell and return
-    /// (test_acc, test_f1, time_to_best_secs, steps, best_val_step).
-    pub fn run_cell(
-        &mut self,
-        model_key: &str,
-        task: &TaskDef,
-        method: MethodKind,
-        base_steps: usize,
-        zo_mult: usize,
-        seed: u64,
-    ) -> Result<CellResult> {
-        // `rngv2` = counter-addressed block noise + Lemire next_below:
-        // trajectories differ from the original sequential-stream scheme,
-        // so pre-rework cache entries must miss, not be served as current.
-        let cache_key = format!(
-            "rngv2|{model_key}|{}|{:?}|{base_steps}|{zo_mult}|{seed}",
-            task.name, method
+    /// A sealed cell spec on this harness's backend/model.
+    ///
+    /// `geometry`/`price_lt` parameterize memory pricing (the table's
+    /// paper-scale device); `lt_auto` switches on the Addax 60th-percentile
+    /// partition for long tasks; `catalog` picks the task table.
+    pub fn cell_spec(&self, cell: &CellSpec<'_>) -> RunSpec {
+        let mut s = RunSpec::new(
+            self.backend,
+            cell.task,
+            cell.plan.opt.clone(),
+            cell.plan.steps,
+            cell.seed,
         );
-        if let Some(v) = self.cache.get(&cache_key) {
-            if let Ok(c) = CellResult::from_json(v) {
-                return Ok(c);
+        s.model_key = self.model_key.clone();
+        s.geometry = cell.geometry.to_string();
+        s.catalog = cell.catalog.to_string();
+        s.eval_examples = 120;
+        s.lt_auto = cell.lt_auto;
+        s.price_lt = cell.price_lt;
+        s.sealed()
+    }
+
+    /// Execute every spec not yet in the manifest (one packed, concurrent
+    /// sweep), then return the rows for all of them, keyed by run id.
+    pub fn runs(&mut self, specs: Vec<RunSpec>) -> Result<BTreeMap<String, ManifestRow>> {
+        let wanted: Vec<String> = specs.iter().map(|s| s.run_id.clone()).collect();
+        let opts = SweepOptions {
+            budget_gb: self.budget_gb,
+            gpus: self.gpus,
+            workers: self.workers,
+            resume: true,
+            manifest_path: self.manifest_path.clone(),
+            verbose: false,
+        };
+        let (summary, manifest) = run_sweep_collect(specs, &opts)?;
+        println!("[repro] {}", summary.line());
+        let mut out = BTreeMap::new();
+        for id in wanted {
+            match manifest.get(&id) {
+                Some(row) => {
+                    out.insert(id, row.clone());
+                }
+                None => bail!("run {id} missing from manifest after sweep"),
             }
         }
-        let plan = plan_for(method, base_steps, zo_mult);
-        let exec = self.exec(model_key)?;
-        let entry = exec.entry().clone();
-        let ds = Dataset::generate(task, entry.vocab, Some(entry.max_len), seed, 1000, 300, 500);
-        let mut params = exec.load_initial_params()?;
-        let cell = if method == MethodKind::ZeroShot {
-            let ev = evaluate(exec, &params, &ds.test, 500)?;
-            CellResult {
-                test_acc: ev.accuracy,
-                test_f1: ev.macro_f1,
-                time_to_best: 0.0,
-                steps: 0,
-                best_val_step: 0,
-            }
-        } else {
-            let mut opt = (plan.make)();
-            let cfg = TrainConfig {
-                steps: plan.steps,
-                eval_every: (plan.steps / 20).max(1),
-                seed,
-                eval_examples: 120,
-                log_path: None,
-                verbose: false,
-                noise_workers: 0,
-            };
-            // L_T: Addax partitions at the task's scaled 60th percentile
-            // when the task is long; others never partition.
-            let lt = if method == MethodKind::Addax && task.long {
-                let mut lens: Vec<usize> =
-                    ds.train.iter().map(|e| e.context.len() + 1).collect();
-                lens.sort_unstable();
-                lens[lens.len() * 6 / 10]
-            } else {
-                usize::MAX
-            };
-            let r = train(exec, &mut params, &mut *opt, &ds, lt, &cfg)?;
-            CellResult {
-                test_acc: r.test_acc,
-                test_f1: r.test_f1,
-                time_to_best: r.time_to_best_secs,
-                steps: r.steps,
-                best_val_step: r.best_val_step,
-            }
-        };
-        self.cache.insert(cache_key, cell.to_json());
-        self.save_cache();
-        Ok(cell)
+        Ok(out)
     }
 
-    /// Full RunResult (uncached) for curve experiments.
-    pub fn run_curves(
-        &mut self,
-        model_key: &str,
-        task: &TaskDef,
-        opt: &mut dyn Optimizer,
-        steps: usize,
-        lt: usize,
-        seed: u64,
-    ) -> Result<RunResult> {
-        let exec = self.exec(model_key)?;
-        let entry = exec.entry().clone();
-        let ds = Dataset::generate(task, entry.vocab, Some(entry.max_len), seed, 1000, 300, 500);
-        let mut params = exec.load_initial_params()?;
-        let cfg = TrainConfig {
-            steps,
-            eval_every: (steps / 20).max(1),
-            seed,
-            eval_examples: 120,
-            log_path: None,
-            verbose: false,
-            noise_workers: 0,
-        };
-        train(exec, &mut params, &mut *opt, &ds, lt, &cfg)
+    /// Wall-clock telemetry (side file; empty when regenerating from a
+    /// manifest alone — time columns then render as `-`).
+    pub fn times(&self) -> BTreeMap<String, (f64, f64)> {
+        SweepManifest::load_times(&self.manifest_path)
     }
 }
 
-/// One accuracy/time cell of a results table.
-#[derive(Clone, Copy, Debug)]
-pub struct CellResult {
-    pub test_acc: f64,
-    pub test_f1: f64,
-    pub time_to_best: f64,
-    pub steps: usize,
-    pub best_val_step: usize,
-}
-
-impl CellResult {
-    pub fn to_json(&self) -> Json {
-        obj(vec![
-            ("test_acc", Json::from(self.test_acc)),
-            ("test_f1", Json::from(self.test_f1)),
-            ("time_to_best", Json::from(self.time_to_best)),
-            ("steps", Json::from(self.steps)),
-            ("best_val_step", Json::from(self.best_val_step)),
-        ])
-    }
-
-    pub fn from_json(v: &Json) -> Result<Self> {
-        Ok(Self {
-            test_acc: v.get("test_acc")?.as_f64()?,
-            test_f1: v.get("test_f1")?.as_f64()?,
-            time_to_best: v.get("time_to_best")?.as_f64()?,
-            steps: v.get("steps")?.as_usize()?,
-            best_val_step: v.get("best_val_step")?.as_usize()?,
-        })
-    }
+/// One experiment cell, declaratively.
+pub struct CellSpec<'a> {
+    pub task: &'a str,
+    pub plan: &'a RunPlan,
+    pub seed: u64,
+    pub geometry: &'a str,
+    pub catalog: &'a str,
+    pub lt_auto: bool,
+    pub price_lt: usize,
 }
 
 /// Write a report (markdown) + raw JSON under results/, echo to stdout.
@@ -285,5 +232,43 @@ pub fn run(id: &str, harness: &mut Harness) -> Result<()> {
         other => anyhow::bail!(
             "unknown experiment {other:?}; see DESIGN.md §5 for the index"
         ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_mirror_the_paper_protocol() {
+        let mezo = plan_for(MethodKind::MeZo, 100, 5);
+        assert_eq!(mezo.steps, 500, "MeZO runs zo_mult x the FO budget");
+        assert!(mezo.opt.lr < 1e-3);
+        let addax = plan_for(MethodKind::Addax, 100, 5);
+        assert_eq!(addax.steps, 100);
+        assert_eq!((addax.opt.k0, addax.opt.k1), (6, 4));
+        let zs = plan_for(MethodKind::ZeroShot, 100, 5);
+        assert_eq!(zs.steps, 0);
+    }
+
+    #[test]
+    fn shared_cells_share_run_ids() {
+        // The same (method, task, seed) cell requested by two experiments
+        // must resolve to the same run id — that is the dedup/caching
+        // contract of the manifest.
+        let h = Harness::new("tiny", true);
+        let plan = plan_for(MethodKind::IpSgd, 300, 1);
+        let cell = CellSpec {
+            task: "rte",
+            plan: &plan,
+            seed: 0,
+            geometry: "opt-13b",
+            catalog: "opt",
+            lt_auto: false,
+            price_lt: 0,
+        };
+        let a = h.cell_spec(&cell);
+        let b = h.cell_spec(&cell);
+        assert_eq!(a.run_id, b.run_id);
     }
 }

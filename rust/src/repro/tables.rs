@@ -4,8 +4,12 @@
 //!  * **memory + batch-size columns** — analytic footprints at the paper's
 //!    model geometry and device, with the App. D.6 grid search (OOM = `*`);
 //!  * **accuracy / time columns** — measured runs of the same algorithms
-//!    at laptop scale (`tiny` by default, `--model small|base-ref` to
-//!    scale up).
+//!    at laptop scale, executed by the sweep scheduler: every non-OOM cell
+//!    becomes a `RunSpec`, the whole batch is packed onto the simulated
+//!    device budget and run concurrently, and the table renders from the
+//!    resulting manifest rows. A complete manifest regenerates the table
+//!    with zero training; wall-clock columns come from the timing side
+//!    file and render `-` when only the manifest is available.
 
 use anyhow::Result;
 
@@ -15,8 +19,9 @@ use crate::memory::{
     footprint, geometry, max_batch_in_grid, Device, Method, Workload,
 };
 use crate::metrics::Table;
+use crate::sched::RunSpec;
 
-use super::{emit, Harness, MethodKind};
+use super::{emit, plan_for, CellSpec, Harness, MethodKind};
 
 const FP16: f64 = 2.0;
 
@@ -82,6 +87,16 @@ fn memory_cell(
     }
 }
 
+/// One rendered cell: the analytic columns plus (for non-OOM cells) the
+/// sealed run spec whose manifest row supplies accuracy/time.
+struct Cell {
+    method: MethodKind,
+    task: &'static str,
+    mem: String,
+    bs: String,
+    run: Option<RunSpec>,
+}
+
 fn render_opt_table(spec: &TableSpec, h: &mut Harness) -> Result<()> {
     let base_steps = if h.fast { 300 } else { 600 };
     let zo_mult = if h.fast { 3 } else { 5 };
@@ -104,54 +119,79 @@ fn render_opt_table(spec: &TableSpec, h: &mut Harness) -> Result<()> {
         ]
     };
 
-    let mut acc_tbl = Table::new(
-        &[&["method"], spec.tasks].concat().iter().map(|s| *s).collect::<Vec<_>>(),
-    );
-    let mut mem_tbl = acc_tbl_clone_header(&acc_tbl);
-    let mut bs_tbl = acc_tbl_clone_header(&acc_tbl);
-    let mut time_tbl = acc_tbl_clone_header(&acc_tbl);
+    // Phase 1: analytic columns + the run list (OOM cells never run —
+    // that is the paper's `*`).
+    let mut cells: Vec<Cell> = Vec::new();
+    for method in &methods {
+        for tname in spec.tasks {
+            let task = *data::opt_task(tname).expect("task");
+            let (mem, bs) = memory_cell(spec, &task, *method);
+            let run = if mem == "*" {
+                None
+            } else {
+                let plan = plan_for(*method, base_steps, zo_mult);
+                Some(h.cell_spec(&CellSpec {
+                    task: tname,
+                    plan: &plan,
+                    seed: 0,
+                    geometry: spec.geometry.name,
+                    catalog: "opt",
+                    lt_auto: *method == MethodKind::Addax && task.long,
+                    price_lt: spec.lt,
+                }))
+            };
+            cells.push(Cell { method: *method, task: tname, mem, bs, run });
+        }
+    }
+
+    // Phase 2: one packed, concurrent sweep over every missing cell.
+    let specs: Vec<RunSpec> = cells.iter().filter_map(|c| c.run.clone()).collect();
+    let rows = h.runs(specs)?;
+    let times = h.times();
+
+    // Phase 3: pure aggregation over manifest rows.
+    let header: Vec<&str> = [&["method"][..], spec.tasks].concat();
+    let mut acc_tbl = Table::new(&header);
+    let mut mem_tbl = Table::new(&header);
+    let mut bs_tbl = Table::new(&header);
+    let mut time_tbl = Table::new(&header);
     let mut raw_rows = Vec::new();
-    let model_key = h.model_key.clone();
 
     for method in &methods {
         let mut acc_row = vec![method.label().to_string()];
         let mut mem_row = acc_row.clone();
         let mut bs_row = acc_row.clone();
         let mut time_row = acc_row.clone();
-        for tname in spec.tasks {
-            let task = *data::opt_task(tname).expect("task");
-            let (mem, bs) = memory_cell(spec, &task, *method);
-            let oom = mem == "*";
-            mem_row.push(mem.clone());
-            bs_row.push(bs.clone());
-            if oom {
-                // The paper's `*`: the method cannot run at this scale.
+        for cell in cells.iter().filter(|c| c.method == *method) {
+            mem_row.push(cell.mem.clone());
+            bs_row.push(cell.bs.clone());
+            let Some(run) = &cell.run else {
                 acc_row.push("*".into());
                 time_row.push("*".into());
                 raw_rows.push(obj(vec![
                     ("method", Json::from(method.label())),
-                    ("task", Json::from(*tname)),
+                    ("task", Json::from(cell.task)),
                     ("oom", Json::from(true)),
                 ]));
                 continue;
-            }
-            let cell =
-                h.run_cell(&model_key, &task, *method, base_steps, zo_mult, 0)?;
-            acc_row.push(format!("{:.1}", 100.0 * cell.test_acc));
-            time_row.push(if *method == MethodKind::ZeroShot {
-                "-".into()
-            } else {
-                format!("{:.1}m", cell.time_to_best / 60.0)
+            };
+            let row = &rows[&run.run_id];
+            let time_to_best = times.get(&run.run_id).map(|&(_, b)| b);
+            acc_row.push(format!("{:.1}", 100.0 * row.outcome.test_acc));
+            time_row.push(match (*method, time_to_best) {
+                (MethodKind::ZeroShot, _) | (_, None) => "-".into(),
+                (_, Some(b)) => format!("{:.1}m", b / 60.0),
             });
             raw_rows.push(obj(vec![
                 ("method", Json::from(method.label())),
-                ("task", Json::from(*tname)),
-                ("acc", Json::from(cell.test_acc)),
-                ("f1", Json::from(cell.test_f1)),
-                ("time_to_best_secs", Json::from(cell.time_to_best)),
-                ("steps", Json::from(cell.steps)),
-                ("mem_gb", Json::from(mem.clone())),
-                ("bs", Json::from(bs.clone())),
+                ("task", Json::from(cell.task)),
+                ("run_id", Json::from(run.run_id.clone())),
+                ("acc", Json::from(row.outcome.test_acc)),
+                ("f1", Json::from(row.outcome.test_f1)),
+                ("time_to_best_secs", Json::from(time_to_best.unwrap_or(0.0))),
+                ("steps", Json::from(row.outcome.steps)),
+                ("mem_gb", Json::from(cell.mem.clone())),
+                ("bs", Json::from(cell.bs.clone())),
             ]));
         }
         acc_tbl.row(acc_row);
@@ -163,8 +203,10 @@ fn render_opt_table(spec: &TableSpec, h: &mut Harness) -> Result<()> {
     let md = format!(
         "# {} — {}\n\nGeometry: {} on {}×{} ({} GB total). Memory/BS from the \
          analytic model + App. D.6 grid; accuracy & time measured at laptop \
-         scale (model `{}`, {} FO steps, MeZO ×{}). `*` = OOM even at the \
-         smallest grid batch.\n\n## Accuracy / F1 (%)\n{}\n## Simulated memory (GB)\n{}\n\
+         scale (model `{}`, {} backend, {} FO steps, MeZO ×{}) via the sweep \
+         scheduler's manifest. `*` = OOM even at the smallest grid batch; \
+         time `-` = no timing telemetry (table regenerated from the \
+         manifest alone).\n\n## Accuracy / F1 (%)\n{}\n## Simulated memory (GB)\n{}\n\
          ## Batch size (grid-searched)\n{}\n## Wall-clock to best validation\n{}\n",
         spec.id,
         spec.title,
@@ -172,7 +214,8 @@ fn render_opt_table(spec: &TableSpec, h: &mut Harness) -> Result<()> {
         spec.device.count,
         spec.device.name,
         spec.device.total_bytes() / 1e9,
-        model_key,
+        h.model_key,
+        h.backend.label(),
         base_steps,
         zo_mult,
         acc_tbl.render(),
@@ -181,10 +224,6 @@ fn render_opt_table(spec: &TableSpec, h: &mut Harness) -> Result<()> {
         time_tbl.render()
     );
     emit(spec.id, &md, Json::Arr(raw_rows))
-}
-
-fn acc_tbl_clone_header(t: &Table) -> Table {
-    Table { header: t.header.clone(), rows: Vec::new() }
 }
 
 /// Table 12 / Figure 1: OPT-13B on one A100-40GB, nine tasks.
@@ -318,20 +357,44 @@ pub fn table11(h: &mut Harness) -> Result<()> {
         MethodKind::Addax,
         MethodKind::Adam,
     ];
-    let mut tbl = Table::new(
-        &[&["method"][..], &tasks[..]].concat().iter().map(|s| *s).collect::<Vec<_>>(),
-    );
+
+    // The mlm preset runs on the roberta catalog; keep the harness's
+    // backend but pin the model key for these cells.
+    let saved_model = h.model_key.clone();
+    h.model_key = "mlm".to_string();
+    let mut cell_specs: Vec<(MethodKind, &str, RunSpec)> = Vec::new();
+    for method in methods {
+        let plan = plan_for(method, base_steps, zo_mult);
+        for tname in tasks {
+            let rs = h.cell_spec(&CellSpec {
+                task: tname,
+                plan: &plan,
+                seed: 0,
+                geometry: "roberta-large",
+                catalog: "roberta",
+                lt_auto: false,
+                price_lt: 0,
+            });
+            cell_specs.push((method, tname, rs));
+        }
+    }
+    let rows = h.runs(cell_specs.iter().map(|(_, _, r)| r.clone()).collect());
+    h.model_key = saved_model;
+    let rows = rows?;
+
+    let header: Vec<&str> = [&["method"][..], &tasks[..]].concat();
+    let mut tbl = Table::new(&header);
     let mut raw = Vec::new();
     for method in methods {
         let mut row = vec![method.label().to_string()];
-        for tname in tasks {
-            let task = *data::roberta_task(tname).expect("task");
-            let cell = h.run_cell("mlm", &task, method, base_steps, zo_mult, 0)?;
-            row.push(format!("{:.1}", 100.0 * cell.test_acc));
+        for (_, tname, rs) in cell_specs.iter().filter(|(m, _, _)| *m == method) {
+            let r = &rows[&rs.run_id];
+            row.push(format!("{:.1}", 100.0 * r.outcome.test_acc));
             raw.push(obj(vec![
                 ("method", Json::from(method.label())),
-                ("task", Json::from(tname)),
-                ("acc", Json::from(cell.test_acc)),
+                ("task", Json::from(*tname)),
+                ("run_id", Json::from(rs.run_id.clone())),
+                ("acc", Json::from(r.outcome.test_acc)),
             ]));
         }
         tbl.row(row);

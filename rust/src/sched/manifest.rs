@@ -1,0 +1,409 @@
+//! The sweep manifest: one JSON line per completed run, crash-safe and
+//! canonical.
+//!
+//! Contract:
+//!
+//! * **Append-only while running** — each completed run is serialized as
+//!   one line and appended (`O_APPEND` + flush) the moment it finishes,
+//!   so a killed sweep loses at most the in-flight runs. A torn final
+//!   line from a crash is skipped (and counted) on load.
+//! * **Skip-completed on restart** — the scheduler loads the manifest
+//!   first and only executes runs whose id is absent.
+//! * **Canonical at rest** — after a sweep completes, the file is
+//!   compacted: rows rewritten sorted by run id (tmp file + rename).
+//!   Rows contain only deterministic quantities — accuracy, losses,
+//!   curves — never wall-clock, so the compacted manifest is
+//!   *byte-identical* for the same spec regardless of worker count,
+//!   interruptions, or hardware. Timings go to a sibling
+//!   `<stem>.times.jsonl` side file that is explicitly outside the
+//!   determinism contract.
+//!
+//! Tables and figures aggregate over these rows alone; a manifest (plus
+//! the analytic memory model) is sufficient to regenerate every report.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{EvalOut, RunResult};
+use crate::jsonlite::{obj, Json};
+use crate::metrics::Curve;
+
+use super::spec::RunSpec;
+
+/// Deterministic results of one run (the paper-reported quantities).
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    /// "train" or "eval" (zero-shot, steps = 0).
+    pub kind: String,
+    pub best_val_acc: f64,
+    pub best_val_step: usize,
+    pub test_acc: f64,
+    pub test_f1: f64,
+    pub final_train_loss: f64,
+    pub steps: usize,
+    pub loss_curve: Curve,
+    pub val_curve: Curve,
+}
+
+/// Clamp non-finite values (a NaN would corrupt the JSON line).
+fn finite(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+/// [`finite`] over every point of a curve: a diverged run (inf/NaN loss,
+/// e.g. an aggressive lr grid point) must still produce a parseable —
+/// and therefore resumable — manifest row.
+fn finite_curve(c: &Curve) -> Curve {
+    Curve { points: c.points.iter().map(|&(s, v)| (s, finite(v))).collect() }
+}
+
+/// One manifest line: the run's identity (full spec) plus its outcome.
+#[derive(Clone, Debug)]
+pub struct ManifestRow {
+    pub run_id: String,
+    pub spec: Json,
+    pub outcome: Outcome,
+}
+
+impl ManifestRow {
+    pub fn from_train(spec: &RunSpec, r: &RunResult) -> Self {
+        Self {
+            run_id: spec.run_id.clone(),
+            spec: spec.to_json(),
+            outcome: Outcome {
+                kind: "train".to_string(),
+                best_val_acc: finite(r.best_val_acc),
+                best_val_step: r.best_val_step,
+                test_acc: finite(r.test_acc),
+                test_f1: finite(r.test_f1),
+                final_train_loss: finite(r.final_train_loss),
+                steps: r.steps,
+                loss_curve: finite_curve(&r.loss_curve),
+                val_curve: finite_curve(&r.val_curve),
+            },
+        }
+    }
+
+    pub fn from_eval(spec: &RunSpec, ev: &EvalOut) -> Self {
+        Self {
+            run_id: spec.run_id.clone(),
+            spec: spec.to_json(),
+            outcome: Outcome {
+                kind: "eval".to_string(),
+                best_val_acc: 0.0,
+                best_val_step: 0,
+                test_acc: finite(ev.accuracy),
+                test_f1: finite(ev.macro_f1),
+                final_train_loss: 0.0,
+                steps: 0,
+                loss_curve: Curve::default(),
+                val_curve: Curve::default(),
+            },
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let o = &self.outcome;
+        obj(vec![
+            ("run_id", Json::from(self.run_id.clone())),
+            ("spec", self.spec.clone()),
+            (
+                "outcome",
+                obj(vec![
+                    ("kind", Json::from(o.kind.clone())),
+                    ("best_val_acc", Json::from(o.best_val_acc)),
+                    ("best_val_step", Json::from(o.best_val_step)),
+                    ("test_acc", Json::from(o.test_acc)),
+                    ("test_f1", Json::from(o.test_f1)),
+                    ("final_train_loss", Json::from(o.final_train_loss)),
+                    ("steps", Json::from(o.steps)),
+                    ("loss_curve", o.loss_curve.to_json()),
+                    ("val_curve", o.val_curve.to_json()),
+                ]),
+            ),
+        ])
+    }
+
+    /// One-line serialization (newline-free by construction: `jsonlite`
+    /// emits compact JSON).
+    pub fn to_line(&self) -> String {
+        self.to_json().dump()
+    }
+
+    pub fn from_line(line: &str) -> Result<Self> {
+        let v = Json::parse(line)?;
+        let o = v.get("outcome")?;
+        Ok(Self {
+            run_id: v.get("run_id")?.as_str()?.to_string(),
+            spec: v.get("spec")?.clone(),
+            outcome: Outcome {
+                kind: o.get("kind")?.as_str()?.to_string(),
+                best_val_acc: o.get("best_val_acc")?.as_f64()?,
+                best_val_step: o.get("best_val_step")?.as_usize()?,
+                test_acc: o.get("test_acc")?.as_f64()?,
+                test_f1: o.get("test_f1")?.as_f64()?,
+                final_train_loss: o.get("final_train_loss")?.as_f64()?,
+                steps: o.get("steps")?.as_usize()?,
+                loss_curve: Curve::from_json(o.get("loss_curve")?)?,
+                val_curve: Curve::from_json(o.get("val_curve")?)?,
+            },
+        })
+    }
+
+    /// Convenience: a spec field as a string (e.g. `"task"`).
+    pub fn spec_str(&self, key: &str) -> Result<&str> {
+        self.spec.get(key)?.as_str()
+    }
+}
+
+/// The on-disk manifest plus its in-memory index by run id.
+#[derive(Debug)]
+pub struct SweepManifest {
+    pub path: PathBuf,
+    rows: BTreeMap<String, ManifestRow>,
+    /// Unparseable lines skipped on load (a crash tears at most one).
+    pub corrupt_lines: usize,
+}
+
+impl SweepManifest {
+    /// Load (a missing file is an empty manifest).
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut m = Self { path: path.to_path_buf(), rows: BTreeMap::new(), corrupt_lines: 0 };
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(m),
+            Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+        };
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match ManifestRow::from_line(line) {
+                Ok(row) => {
+                    m.rows.insert(row.run_id.clone(), row);
+                }
+                Err(_) => m.corrupt_lines += 1,
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn contains(&self, run_id: &str) -> bool {
+        self.rows.contains_key(run_id)
+    }
+
+    pub fn get(&self, run_id: &str) -> Option<&ManifestRow> {
+        self.rows.get(run_id)
+    }
+
+    /// Rows sorted by run id (BTreeMap order).
+    pub fn rows(&self) -> impl Iterator<Item = &ManifestRow> {
+        self.rows.values()
+    }
+
+    /// Crash-safe append: one line, flushed, then indexed.
+    pub fn append(&mut self, row: ManifestRow) -> Result<()> {
+        if let Some(dir) = self.path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("opening {} for append", self.path.display()))?;
+        writeln!(f, "{}", row.to_line())?;
+        f.flush()?;
+        self.rows.insert(row.run_id.clone(), row);
+        Ok(())
+    }
+
+    /// Rewrite the file in canonical order (sorted by run id) via a temp
+    /// file + atomic rename. Run after a sweep completes; the result is
+    /// byte-identical for identical row sets.
+    pub fn compact(&self) -> Result<()> {
+        if let Some(dir) = self.path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let tmp = self.path.with_extension("jsonl.tmp");
+        let mut out = String::new();
+        for row in self.rows.values() {
+            out.push_str(&row.to_line());
+            out.push('\n');
+        }
+        std::fs::write(&tmp, out).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("renaming {} into place", tmp.display()))?;
+        Ok(())
+    }
+
+    /// Sibling timing side file (`manifest.jsonl` → `manifest.times.jsonl`).
+    /// Timings are telemetry, not results: append-only, last write wins,
+    /// and deliberately outside the bit-identical contract.
+    pub fn times_path(manifest: &Path) -> PathBuf {
+        manifest.with_extension("times.jsonl")
+    }
+
+    /// Append one timing record to the side file.
+    pub fn append_time(
+        manifest: &Path,
+        run_id: &str,
+        total_secs: f64,
+        time_to_best_secs: f64,
+    ) -> Result<()> {
+        let path = Self::times_path(manifest);
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        let row = obj(vec![
+            ("run_id", Json::from(run_id)),
+            ("total_secs", Json::from(finite(total_secs))),
+            ("time_to_best_secs", Json::from(finite(time_to_best_secs))),
+        ]);
+        writeln!(f, "{}", row.dump())?;
+        f.flush()?;
+        Ok(())
+    }
+
+    /// Load timings: run id → (total, time-to-best); empty when absent.
+    pub fn load_times(manifest: &Path) -> BTreeMap<String, (f64, f64)> {
+        let mut out = BTreeMap::new();
+        let Ok(text) = std::fs::read_to_string(Self::times_path(manifest)) else {
+            return out;
+        };
+        for line in text.lines() {
+            let Ok(v) = Json::parse(line) else { continue };
+            let (Ok(id), Ok(t), Ok(b)) = (
+                v.get("run_id").and_then(|j| j.as_str()),
+                v.get("total_secs").and_then(|j| j.as_f64()),
+                v.get("time_to_best_secs").and_then(|j| j.as_f64()),
+            ) else {
+                continue;
+            };
+            out.insert(id.to_string(), (t, b));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spec::{Backend, RunSpec};
+    use super::*;
+    use crate::optim::OptSpec;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("addax_manifest_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn row(seed: u64) -> ManifestRow {
+        let spec = RunSpec::new(Backend::Mock, "sst2", OptSpec::named("mezo"), 10, seed);
+        let mut loss_curve = Curve::default();
+        loss_curve.push(0, 2.5);
+        loss_curve.push(1, 1.25);
+        ManifestRow {
+            run_id: spec.run_id.clone(),
+            spec: spec.to_json(),
+            outcome: Outcome {
+                kind: "train".to_string(),
+                best_val_acc: 0.75,
+                best_val_step: 1,
+                test_acc: 0.5,
+                test_f1: 0.5,
+                final_train_loss: 1.25,
+                steps: 2,
+                loss_curve,
+                val_curve: Curve::default(),
+            },
+        }
+    }
+
+    #[test]
+    fn line_roundtrip() {
+        let r = row(0);
+        let back = ManifestRow::from_line(&r.to_line()).unwrap();
+        assert_eq!(back.run_id, r.run_id);
+        assert_eq!(back.outcome.loss_curve.points, r.outcome.loss_curve.points);
+        assert_eq!(back.spec_str("task").unwrap(), "sst2");
+        assert_eq!(back.to_line(), r.to_line(), "serialization is canonical");
+    }
+
+    #[test]
+    fn append_load_and_torn_tail() {
+        let dir = tmpdir("torn");
+        let path = dir.join("m.jsonl");
+        std::fs::remove_file(&path).ok();
+        let mut m = SweepManifest::load(&path).unwrap();
+        m.append(row(0)).unwrap();
+        m.append(row(1)).unwrap();
+        // simulate a crash mid-append: torn partial line at the tail
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"run_id\": \"zz").unwrap();
+        }
+        let loaded = SweepManifest::load(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded.corrupt_lines, 1);
+        assert!(loaded.contains(&row(0).run_id));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn compact_is_sorted_and_idempotent() {
+        let dir = tmpdir("compact");
+        let path = dir.join("m.jsonl");
+        std::fs::remove_file(&path).ok();
+        // append out of order relative to run-id sort
+        let mut m = SweepManifest::load(&path).unwrap();
+        for seed in [3u64, 1, 2, 0] {
+            m.append(row(seed)).unwrap();
+        }
+        m.compact().unwrap();
+        let a = std::fs::read_to_string(&path).unwrap();
+        // reload + recompact must not change a byte
+        let m2 = SweepManifest::load(&path).unwrap();
+        m2.compact().unwrap();
+        let b = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(a, b);
+        let ids: Vec<String> =
+            a.lines().map(|l| ManifestRow::from_line(l).unwrap().run_id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort();
+        assert_eq!(ids, sorted);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn times_side_file_roundtrip() {
+        let dir = tmpdir("times");
+        let path = dir.join("m.jsonl");
+        let times = SweepManifest::times_path(&path);
+        std::fs::remove_file(&times).ok();
+        SweepManifest::append_time(&path, "a", 1.5, 0.5).unwrap();
+        SweepManifest::append_time(&path, "a", 2.5, 1.0).unwrap(); // last wins
+        SweepManifest::append_time(&path, "b", 3.0, 2.0).unwrap();
+        let t = SweepManifest::load_times(&path);
+        assert_eq!(t.get("a"), Some(&(2.5, 1.0)));
+        assert_eq!(t.get("b"), Some(&(3.0, 2.0)));
+        assert!(SweepManifest::load_times(&dir.join("missing.jsonl")).is_empty());
+        std::fs::remove_file(&times).ok();
+    }
+}

@@ -1,0 +1,34 @@
+//! The sweep scheduler: memory-aware packing of many training runs onto
+//! simulated device budgets, with a resumable manifest.
+//!
+//! Addax's core idea is memory-aware assignment *within* a run (Alg. 1:
+//! ZO gradients for the examples that would blow the budget, FO for the
+//! rest). This subsystem applies the same idea *across* runs: the repro's
+//! tables and figures each need dozens of (optimizer × task × seed ×
+//! hyper-parameter) runs, and the analytic model in `memory/` prices
+//! exactly which of them co-fit on a device.
+//!
+//! Layers (one file each):
+//!
+//! * [`spec`] — declarative sweep grids and their expansion into sealed,
+//!   deterministically-seeded [`RunSpec`]s;
+//! * [`pack`] — per-run footprint pricing + first-fit-decreasing packing
+//!   into concurrency waves under `--budget-gb × --gpus`;
+//! * [`worker`] — the wave executor: a scoped worker pool, one manifest
+//!   writer, resumable on kill;
+//! * [`manifest`] — the crash-safe JSONL manifest whose compacted form is
+//!   byte-identical for a given spec at any worker count.
+//!
+//! The repro layer (`repro/`) is a client: every table/figure expands its
+//! cells into `RunSpec`s, hands them to [`run_sweep`], and aggregates
+//! over manifest rows — the sweep engine owns the training loop.
+
+pub mod manifest;
+pub mod pack;
+pub mod spec;
+pub mod worker;
+
+pub use manifest::{ManifestRow, SweepManifest};
+pub use pack::{pack, price, PricedRun, Wave};
+pub use spec::{Backend, LT_NONE, RunSpec, SweepSpec};
+pub use worker::{execute_run, run_sweep, run_sweep_collect, SweepOptions, SweepSummary};

@@ -1,0 +1,170 @@
+//! Memory-aware packing: price each run with the analytic memory model,
+//! then bin-pack runs into concurrency "waves" under a device budget.
+//!
+//! This is Addax's data-assignment idea lifted one level: within a run,
+//! Algorithm 1 sends memory-heavy examples down the cheap (ZO) path;
+//! across runs, the scheduler uses the same `memory::footprint` model to
+//! decide which runs may share a device at the same time. A wave is a set
+//! of runs whose simulated peak footprints sum to at most the budget
+//! (`--budget-gb × --gpus`); waves execute in order, runs inside a wave
+//! concurrently on the worker pool.
+//!
+//! Packing is first-fit decreasing with a deterministic total order
+//! (bytes descending, run id ascending on ties), so the plan — like
+//! everything else in the scheduler — is a pure function of the spec.
+
+use anyhow::{bail, Context, Result};
+
+use crate::memory::{footprint, geometry, Method, Workload};
+
+use super::spec::RunSpec;
+
+/// A run plus its simulated peak footprint in bytes.
+#[derive(Clone, Debug)]
+pub struct PricedRun {
+    pub spec: RunSpec,
+    pub bytes: f64,
+}
+
+/// One concurrency group: co-resident under the device budget.
+#[derive(Clone, Debug, Default)]
+pub struct Wave {
+    pub runs: Vec<PricedRun>,
+    pub bytes: f64,
+}
+
+/// Simulated peak footprint of one run at its pricing geometry.
+///
+/// The workload mirrors `main.rs memory` / the table harnesses: ZO
+/// methods price as inference at the task's `L_max`, Addax as the
+/// two-phase mixed workload with the FO side capped at `price_lt`
+/// (default: the 60th percentile of `L_max`), FO methods as a full
+/// backward at `L_max`. Adam prices in fp32, everything else fp16.
+pub fn price(spec: &RunSpec) -> Result<f64> {
+    let g = geometry::by_name(&spec.geometry)
+        .with_context(|| format!("unknown geometry {:?}", spec.geometry))?;
+    let task = spec.task_def()?;
+    let method = spec.optimizer.method()?;
+    let l = task.lengths.l_max;
+    let b = spec.optimizer.batch;
+    let wl = match method {
+        Method::MeZo | Method::ZoSgdNaive => Workload::zo(b, l),
+        Method::Addax => {
+            let lt = if spec.price_lt > 0 { spec.price_lt } else { l * 6 / 10 };
+            Workload::mixed(spec.optimizer.k1, lt.min(l), spec.optimizer.k0, l)
+        }
+        _ => Workload::fo(b, l),
+    };
+    let bytes_per = if method == Method::Adam { 4.0 } else { 2.0 };
+    Ok(footprint(&g, method, wl, bytes_per).total)
+}
+
+/// Price every run and pack them into waves under `budget_bytes`.
+///
+/// Errors if any single run exceeds the budget — the scheduler's analogue
+/// of the paper's OOM verdict (raise `--budget-gb`/`--gpus`, or shrink
+/// the run).
+pub fn pack(specs: Vec<RunSpec>, budget_bytes: f64) -> Result<Vec<Wave>> {
+    if budget_bytes <= 0.0 {
+        bail!("device budget must be positive");
+    }
+    let mut priced = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let bytes = price(&spec)?;
+        if bytes > budget_bytes {
+            bail!(
+                "run {} needs {:.1} GB but the device budget is {:.1} GB — \
+                 raise --budget-gb/--gpus or shrink the run",
+                spec.run_id,
+                bytes / 1e9,
+                budget_bytes / 1e9,
+            );
+        }
+        priced.push(PricedRun { spec, bytes });
+    }
+    // First-fit decreasing over a deterministic order.
+    priced.sort_by(|a, b| {
+        b.bytes
+            .partial_cmp(&a.bytes)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.spec.run_id.cmp(&b.spec.run_id))
+    });
+    let mut waves: Vec<Wave> = Vec::new();
+    for run in priced {
+        match waves.iter().position(|w| w.bytes + run.bytes <= budget_bytes) {
+            Some(i) => {
+                waves[i].bytes += run.bytes;
+                waves[i].runs.push(run);
+            }
+            None => waves.push(Wave { bytes: run.bytes, runs: vec![run] }),
+        }
+    }
+    Ok(waves)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spec::Backend;
+    use super::*;
+    use crate::optim::OptSpec;
+
+    fn run(opt: &str, task: &str, seed: u64) -> RunSpec {
+        RunSpec::new(Backend::Mock, task, OptSpec::named(opt), 10, seed)
+    }
+
+    #[test]
+    fn pricing_matches_the_memory_model_shape() {
+        // The scheduler sees what the paper sees: on a long task, the ZO
+        // path is far cheaper than a full backward, and Addax sits close
+        // to MeZO (the headline memory claim).
+        let mezo = price(&run("mezo", "multirc", 0)).unwrap();
+        let ip = price(&run("ip-sgd", "multirc", 0)).unwrap();
+        let addax = price(&run("addax", "multirc", 0)).unwrap();
+        assert!(ip > 2.0 * mezo, "ip {ip} vs mezo {mezo}");
+        assert!(addax < 1.6 * mezo, "addax {addax} vs mezo {mezo}");
+        // zero-shot prices as inference
+        let zs = price(&run("zero-shot", "multirc", 0)).unwrap();
+        assert!(zs <= mezo * 1.01);
+    }
+
+    #[test]
+    fn waves_respect_the_budget() {
+        let specs: Vec<RunSpec> = (0..6)
+            .flat_map(|seed| ["mezo", "ip-sgd", "addax"].map(|o| run(o, "sst2", seed)))
+            .collect();
+        let budget = 60e9;
+        let waves = pack(specs.clone(), budget).unwrap();
+        let total: usize = waves.iter().map(|w| w.runs.len()).sum();
+        assert_eq!(total, specs.len());
+        for w in &waves {
+            assert!(w.bytes <= budget);
+            let sum: f64 = w.runs.iter().map(|r| r.bytes).sum();
+            assert!((sum - w.bytes).abs() < 1.0);
+        }
+        // packing actually packs: fewer waves than runs
+        assert!(waves.len() < specs.len(), "{} waves", waves.len());
+    }
+
+    #[test]
+    fn packing_is_deterministic() {
+        let specs: Vec<RunSpec> =
+            (0..5).flat_map(|s| ["mezo", "addax"].map(|o| run(o, "rte", s))).collect();
+        let a = pack(specs.clone(), 60e9).unwrap();
+        let b = pack(specs, 60e9).unwrap();
+        let ids = |waves: &[Wave]| -> Vec<Vec<String>> {
+            waves
+                .iter()
+                .map(|w| w.runs.iter().map(|r| r.spec.run_id.clone()).collect())
+                .collect()
+        };
+        assert_eq!(ids(&a), ids(&b));
+    }
+
+    #[test]
+    fn oversized_run_is_an_error() {
+        let err = pack(vec![run("adam", "multirc", 0)], 10e9).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("GB"), "{msg}");
+        assert!(pack(vec![], 0.0).is_err());
+    }
+}

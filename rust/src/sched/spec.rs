@@ -1,0 +1,492 @@
+//! Declarative sweep specs and their expansion into priced, seeded runs.
+//!
+//! A sweep is a grid over (optimizer × task × seed × lr × eps) plus the
+//! shared run shape (steps, eval budget, data sizes, backend). The spec
+//! is a plain config file (the same TOML subset `config.rs` parses):
+//!
+//! ```toml
+//! [sweep]
+//! name = "smoke"
+//! backend = "mock"          # mock | xla | auto
+//! model = "tiny"
+//! geometry = "opt-13b"      # memory-pricing geometry
+//! steps = 40                # FO step budget; ZO-only methods run zo_mult x
+//! zo_mult = 2
+//! budget_gb = 60            # per simulated device
+//!
+//! [grid]
+//! optimizers = "addax, mezo, ip-sgd"
+//! tasks = "sst2, rte"
+//! seeds = "0, 1"
+//! lrs = "0.07"              # optional; empty keeps per-optimizer defaults
+//! epss = ""                 # optional
+//! ```
+//!
+//! Expansion is a fixed nested iteration (optimizer → task → seed → lr →
+//! eps), so run ids and derived seeds are independent of worker count,
+//! resume history, and everything else that varies between invocations.
+//! Each run's training seed is `derive_seed(grid_seed, fnv1a(run_id))` —
+//! a pure function of the run's identity, so the same logical run
+//! requested by two different experiments replays identically (and its
+//! manifest row is shared).
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Config;
+use crate::data::{self, TaskDef};
+use crate::jsonlite::{obj, Json};
+use crate::memory::geometry;
+use crate::optim::OptSpec;
+use crate::zorng::derive_seed;
+
+/// `lt` sentinel: no length partitioning (Addax-WA / single-phase runs).
+pub const LT_NONE: usize = usize::MAX;
+
+/// Which execution substrate a run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// The closed-form quadratic objective (`runtime::mock`) — runs
+    /// everywhere, including CI, with no artifacts.
+    Mock,
+    /// AOT HLO artifacts through PJRT (`runtime::XlaExec`).
+    Xla,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "mock" => Backend::Mock,
+            "xla" => Backend::Xla,
+            "auto" => Backend::auto(),
+            other => bail!("unknown backend {other:?} (want mock | xla | auto)"),
+        })
+    }
+
+    /// `Xla` when AOT artifacts exist on this machine, else `Mock`.
+    pub fn auto() -> Self {
+        let manifest = crate::runtime::manifest::default_artifacts_dir().join("manifest.json");
+        if manifest.exists() {
+            Backend::Xla
+        } else {
+            Backend::Mock
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::Mock => "mock",
+            Backend::Xla => "xla",
+        }
+    }
+}
+
+/// FNV-1a over a string — the stable hash behind run-id → seed derivation.
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in s.as_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Everything needed to execute (and re-execute, identically) one run.
+///
+/// Construct with [`RunSpec::new`] and adjust fields via struct update,
+/// then call [`RunSpec::sealed`] to (re)derive `run_id` and `train_seed`
+/// from the other fields. An unsealed spec (empty `run_id`) is rejected
+/// by the scheduler.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    /// Identity: readable prefix + FNV hash of the full serialized spec.
+    pub run_id: String,
+    pub backend: Backend,
+    /// AOT model key (xla backend); a label only under mock.
+    pub model_key: String,
+    /// Memory-pricing geometry (`memory::geometry::by_name`).
+    pub geometry: String,
+    /// Task catalog: "opt" or "roberta" (names overlap between the two).
+    pub catalog: String,
+    pub task: String,
+    pub optimizer: OptSpec,
+    /// Training steps; 0 = evaluation-only (zero-shot).
+    pub steps: usize,
+    /// The grid's seed coordinate (also the dataset seed).
+    pub grid_seed: u64,
+    /// Derived training seed: `derive_seed(grid_seed, fnv1a(run_id))`.
+    pub train_seed: u64,
+    /// Validation cadence; 0 = steps/20 (coordinator default).
+    pub eval_every: usize,
+    pub eval_examples: usize,
+    /// `L_T` partition threshold at run scale; [`LT_NONE`] = none.
+    pub lt: usize,
+    /// Compute `L_T` at run time as the 60th percentile of training
+    /// lengths (the repro's Addax policy for long tasks); overrides `lt`.
+    pub lt_auto: bool,
+    /// Paper-scale `L_T` used only for memory pricing (0 = 60% of L_max).
+    pub price_lt: usize,
+    /// Mock-backend problem dimension.
+    pub mock_dim: usize,
+    pub n_train: usize,
+    pub n_val: usize,
+    pub n_test: usize,
+}
+
+impl RunSpec {
+    /// A run with repro-harness defaults; already sealed.
+    pub fn new(
+        backend: Backend,
+        task: &str,
+        optimizer: OptSpec,
+        steps: usize,
+        grid_seed: u64,
+    ) -> Self {
+        Self {
+            run_id: String::new(),
+            backend,
+            model_key: "tiny".to_string(),
+            geometry: "opt-13b".to_string(),
+            catalog: "opt".to_string(),
+            task: task.to_string(),
+            optimizer,
+            steps,
+            grid_seed,
+            train_seed: 0,
+            eval_every: 0,
+            eval_examples: 120,
+            lt: LT_NONE,
+            lt_auto: false,
+            price_lt: 0,
+            mock_dim: 48,
+            n_train: 1000,
+            n_val: 300,
+            n_test: 500,
+        }
+        .sealed()
+    }
+
+    /// Re-derive `run_id` and `train_seed` from the identity fields. Call
+    /// after changing any field post-construction.
+    ///
+    /// `geometry` and `price_lt` parameterize memory *pricing* only — they
+    /// cannot change a run's outcome — so they are excluded from the
+    /// identity: the same logical cell priced at different paper
+    /// geometries (table12 vs table13) resolves to one manifest row.
+    pub fn sealed(mut self) -> Self {
+        self.run_id = String::new();
+        self.train_seed = 0;
+        let ident = {
+            let mut i = self.clone();
+            i.geometry = String::new();
+            i.price_lt = 0;
+            let mut j = i.to_json();
+            // The optimizer contributes its *relevant* fields only
+            // (`OptSpec::id`), so e.g. an lr grid collapses for zero-shot
+            // and `batch` doesn't split addax identities.
+            if let Json::Obj(m) = &mut j {
+                m.insert("optimizer".to_string(), Json::from(i.optimizer.id()));
+            }
+            j.dump()
+        };
+        self.run_id = format!(
+            "{}.{}.{}.{}.s{}.t{}.h{:08x}",
+            self.backend.label(),
+            self.model_key,
+            self.task,
+            self.optimizer.id(),
+            self.grid_seed,
+            self.steps,
+            fnv1a(&ident) as u32,
+        );
+        self.train_seed = derive_seed(self.grid_seed, fnv1a(&self.run_id));
+        self
+    }
+
+    /// The task definition this run trains on.
+    pub fn task_def(&self) -> Result<&'static TaskDef> {
+        let t = match self.catalog.as_str() {
+            "roberta" => data::roberta_task(&self.task).or_else(|| data::opt_task(&self.task)),
+            _ => data::opt_task(&self.task).or_else(|| data::roberta_task(&self.task)),
+        };
+        t.with_context(|| format!("unknown task {:?} (catalog {:?})", self.task, self.catalog))
+    }
+
+    /// Canonical serialization (embedded in manifest rows). Seeds are
+    /// strings (u64 does not fit losslessly in a JSON number); `lt` is
+    /// `"none"` or a number-as-string.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("run_id", Json::from(self.run_id.clone())),
+            ("backend", Json::from(self.backend.label())),
+            ("model", Json::from(self.model_key.clone())),
+            ("geometry", Json::from(self.geometry.clone())),
+            ("catalog", Json::from(self.catalog.clone())),
+            ("task", Json::from(self.task.clone())),
+            ("optimizer", self.optimizer.to_json()),
+            ("steps", Json::from(self.steps)),
+            ("grid_seed", Json::from(self.grid_seed.to_string())),
+            ("train_seed", Json::from(self.train_seed.to_string())),
+            ("eval_every", Json::from(self.eval_every)),
+            ("eval_examples", Json::from(self.eval_examples)),
+            (
+                "lt",
+                if self.lt == LT_NONE {
+                    Json::from("none")
+                } else {
+                    Json::from(self.lt.to_string())
+                },
+            ),
+            ("lt_auto", Json::from(self.lt_auto)),
+            ("price_lt", Json::from(self.price_lt)),
+            ("mock_dim", Json::from(self.mock_dim)),
+            ("n_train", Json::from(self.n_train)),
+            ("n_val", Json::from(self.n_val)),
+            ("n_test", Json::from(self.n_test)),
+        ])
+    }
+}
+
+/// A declarative sweep: the grid plus the shared run shape.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub name: String,
+    pub backend: Backend,
+    pub model_key: String,
+    pub geometry: String,
+    pub catalog: String,
+    pub optimizers: Vec<String>,
+    pub tasks: Vec<String>,
+    pub seeds: Vec<u64>,
+    /// Learning-rate grid; empty keeps each optimizer's default.
+    pub lrs: Vec<f32>,
+    /// SPSA ε grid; empty keeps the default.
+    pub epss: Vec<f32>,
+    pub steps: usize,
+    /// ZO-only optimizers run `zo_mult ×` the step budget.
+    pub zo_mult: usize,
+    pub eval_examples: usize,
+    /// Per-device budget used when no `--budget-gb` override is given.
+    pub budget_gb: f64,
+    pub gpus: usize,
+    pub mock_dim: usize,
+    pub n_train: usize,
+    pub n_val: usize,
+    pub n_test: usize,
+    /// Addax on long tasks partitions at the 60th length percentile.
+    pub lt_auto: bool,
+}
+
+impl SweepSpec {
+    /// Parse from the config-file form (sections `[sweep]` and `[grid]`).
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let spec = Self {
+            name: cfg.str_or("sweep.name", "sweep"),
+            backend: Backend::parse(&cfg.str_or("sweep.backend", "auto"))?,
+            model_key: cfg.str_or("sweep.model", "tiny"),
+            geometry: cfg.str_or("sweep.geometry", "opt-13b"),
+            catalog: cfg.str_or("sweep.catalog", "opt"),
+            optimizers: cfg.list_or("grid.optimizers", &["addax", "mezo", "ip-sgd"]),
+            tasks: cfg.list_or("grid.tasks", &["sst2"]),
+            seeds: cfg.u64_list_or("grid.seeds", &[0])?,
+            lrs: cfg.f32_list_or("grid.lrs", &[])?,
+            epss: cfg.f32_list_or("grid.epss", &[])?,
+            steps: cfg.usize_or("sweep.steps", 100)?,
+            zo_mult: cfg.usize_or("sweep.zo_mult", 3)?.max(1),
+            eval_examples: cfg.usize_or("sweep.eval_examples", 100)?,
+            budget_gb: cfg.f32_or("sweep.budget_gb", 40.0)? as f64,
+            gpus: cfg.usize_or("sweep.gpus", 1)?.max(1),
+            mock_dim: cfg.usize_or("sweep.mock_dim", 48)?,
+            n_train: cfg.usize_or("sweep.train", 1000)?,
+            n_val: cfg.usize_or("sweep.val", 300)?,
+            n_test: cfg.usize_or("sweep.test", 500)?,
+            lt_auto: cfg.bool_or("sweep.lt_auto", true)?,
+        };
+        // Fail early on anything the executor would reject mid-sweep.
+        geometry::by_name(&spec.geometry)
+            .with_context(|| format!("unknown geometry {:?}", spec.geometry))?;
+        for name in &spec.optimizers {
+            OptSpec::named(name).build()?;
+        }
+        for task in &spec.tasks {
+            let found = match spec.catalog.as_str() {
+                "roberta" => data::roberta_task(task).is_some(),
+                _ => data::opt_task(task).is_some(),
+            };
+            if !found {
+                bail!("unknown task {task:?} in catalog {:?}", spec.catalog);
+            }
+        }
+        if spec.optimizers.is_empty() || spec.tasks.is_empty() || spec.seeds.is_empty() {
+            bail!("empty sweep grid (need ≥1 optimizer, task and seed)");
+        }
+        Ok(spec)
+    }
+
+    /// Expand the grid in fixed order (optimizer → task → seed → lr →
+    /// eps), deduplicated by run id (e.g. zero-shot ignores the lr grid).
+    pub fn expand(&self) -> Result<Vec<RunSpec>> {
+        let lrs: Vec<Option<f32>> = if self.lrs.is_empty() {
+            vec![None]
+        } else {
+            self.lrs.iter().copied().map(Some).collect()
+        };
+        let epss: Vec<Option<f32>> = if self.epss.is_empty() {
+            vec![None]
+        } else {
+            self.epss.iter().copied().map(Some).collect()
+        };
+        let mut out: Vec<RunSpec> = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for opt_name in &self.optimizers {
+            for task in &self.tasks {
+                for &seed in &self.seeds {
+                    for &lr in &lrs {
+                        for &eps in &epss {
+                            let mut o = OptSpec::named(opt_name);
+                            if let Some(lr) = lr {
+                                o.lr = lr;
+                            }
+                            if let Some(eps) = eps {
+                                o.eps = eps;
+                            }
+                            let steps = if opt_name == "zero-shot" {
+                                0
+                            } else if o.is_zo_only() {
+                                self.steps * self.zo_mult
+                            } else {
+                                self.steps
+                            };
+                            let task_def = match self.catalog.as_str() {
+                                "roberta" => data::roberta_task(task),
+                                _ => data::opt_task(task),
+                            }
+                            .expect("validated in from_config");
+                            let mut r = RunSpec::new(self.backend, task, o, steps, seed);
+                            r.model_key = self.model_key.clone();
+                            r.geometry = self.geometry.clone();
+                            r.catalog = self.catalog.clone();
+                            r.eval_examples = self.eval_examples;
+                            r.lt_auto = self.lt_auto && opt_name == "addax" && task_def.long;
+                            r.mock_dim = self.mock_dim;
+                            r.n_train = self.n_train;
+                            r.n_val = self.n_val;
+                            r.n_test = self.n_test;
+                            let r = r.sealed();
+                            if seen.insert(r.run_id.clone()) {
+                                out.push(r);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke() -> SweepSpec {
+        let cfg = Config::parse(
+            "[sweep]\nbackend = \"mock\"\nsteps = 40\nzo_mult = 2\n\
+             [grid]\noptimizers = \"addax,mezo,ip-sgd\"\ntasks = \"sst2,rte\"\nseeds = \"0,1\"",
+        )
+        .unwrap();
+        SweepSpec::from_config(&cfg).unwrap()
+    }
+
+    #[test]
+    fn expansion_is_the_grid_product() {
+        let specs = smoke().expand().unwrap();
+        assert_eq!(specs.len(), 3 * 2 * 2);
+        let ids: std::collections::BTreeSet<_> = specs.iter().map(|s| s.run_id.clone()).collect();
+        assert_eq!(ids.len(), specs.len(), "run ids must be unique");
+        // ZO-only optimizers get the multiplied step budget
+        for s in &specs {
+            let want = if s.optimizer.is_zo_only() { 80 } else { 40 };
+            assert_eq!(s.steps, want, "{}", s.run_id);
+        }
+    }
+
+    #[test]
+    fn expansion_order_and_seeds_are_stable() {
+        let a = smoke().expand().unwrap();
+        let b = smoke().expand().unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.run_id, y.run_id);
+            assert_eq!(x.train_seed, y.train_seed);
+        }
+        // train seeds are spread (derive_seed over distinct ids)
+        let seeds: std::collections::BTreeSet<_> = a.iter().map(|s| s.train_seed).collect();
+        assert_eq!(seeds.len(), a.len());
+    }
+
+    #[test]
+    fn sealed_tracks_field_changes() {
+        let base = RunSpec::new(Backend::Mock, "sst2", OptSpec::named("addax"), 40, 0);
+        let mut changed = base.clone();
+        changed.eval_examples = 7;
+        let changed = changed.sealed();
+        assert_ne!(base.run_id, changed.run_id, "identity must cover eval_examples");
+        assert_ne!(base.train_seed, changed.train_seed);
+        // sealing twice is a fixpoint
+        let again = changed.clone().sealed();
+        assert_eq!(again.run_id, changed.run_id);
+        assert_eq!(again.train_seed, changed.train_seed);
+    }
+
+    #[test]
+    fn pricing_fields_are_not_identity() {
+        // geometry/price_lt steer packing, not outcomes: the same logical
+        // cell priced for different paper devices is one run.
+        let base = RunSpec::new(Backend::Mock, "sst2", OptSpec::named("addax"), 40, 0);
+        let mut priced = base.clone();
+        priced.geometry = "opt-66b".to_string();
+        priced.price_lt = 260;
+        let priced = priced.sealed();
+        assert_eq!(base.run_id, priced.run_id);
+        assert_eq!(base.train_seed, priced.train_seed);
+    }
+
+    #[test]
+    fn zero_shot_dedups_across_lr_grid() {
+        let cfg = Config::parse(
+            "[sweep]\nbackend = \"mock\"\n[grid]\noptimizers = \"zero-shot\"\n\
+             tasks = \"sst2\"\nseeds = \"0\"\nlrs = \"0.1,0.2,0.3\"",
+        )
+        .unwrap();
+        let specs = SweepSpec::from_config(&cfg).unwrap().expand().unwrap();
+        assert_eq!(specs.len(), 1, "zero-shot ignores lr, so the grid collapses");
+        assert_eq!(specs[0].steps, 0);
+    }
+
+    #[test]
+    fn from_config_validates_early() {
+        for bad in [
+            "[sweep]\ngeometry = \"gpt-5\"",
+            "[grid]\noptimizers = \"nope\"",
+            "[grid]\ntasks = \"nope\"",
+            "[grid]\nseeds = \"\"\n[sweep]\nbackend = \"mock\"",
+            "[sweep]\nbackend = \"quantum\"",
+        ] {
+            let cfg = Config::parse(bad).unwrap();
+            if bad.contains("seeds") {
+                // empty seeds list falls back to the default [0] — fine
+                assert!(SweepSpec::from_config(&cfg).is_ok());
+            } else {
+                assert!(SweepSpec::from_config(&cfg).is_err(), "{bad}");
+            }
+        }
+    }
+
+    #[test]
+    fn task_catalog_disambiguates() {
+        let mut r = RunSpec::new(Backend::Mock, "snli", OptSpec::named("mezo"), 10, 0);
+        r.catalog = "roberta".to_string();
+        let r = r.sealed();
+        assert_eq!(r.task_def().unwrap().name, "snli");
+        let opt_only = RunSpec::new(Backend::Mock, "squad", OptSpec::named("mezo"), 10, 0);
+        assert_eq!(opt_only.task_def().unwrap().name, "squad");
+    }
+}

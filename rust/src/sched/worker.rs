@@ -1,0 +1,367 @@
+//! The sweep executor: waves of runs on a scoped worker pool, one
+//! manifest writer.
+//!
+//! Control flow per `run_sweep` call:
+//!
+//! 1. load the manifest; drop every spec whose run id is already present
+//!    (skip-completed — this is what `--resume` resumes);
+//! 2. price + pack the remaining runs into waves (`pack.rs`);
+//! 3. per wave, spawn up to `workers` scoped threads that pull runs off a
+//!    shared counter and send finished rows over a channel; the main
+//!    thread is the only manifest writer (crash-safe appends);
+//! 4. compact the manifest into canonical order.
+//!
+//! Determinism: every run is executed with a single in-run noise worker
+//! (parallelism lives *across* runs), seeds derive from run identity, and
+//! rows carry no wall-clock — so the compacted manifest is byte-identical
+//! for the same spec at any `--workers`, across kills/resumes, and across
+//! machines (per backend).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{evaluate, train, TrainConfig};
+use crate::data::Dataset;
+use crate::params::ParamStore;
+use crate::runtime::manifest::default_artifacts_dir;
+use crate::runtime::mock::QuadraticExec;
+use crate::runtime::{ModelExec, XlaExec};
+use crate::zorng::derive_seed;
+
+use super::manifest::{ManifestRow, SweepManifest};
+use super::pack::pack;
+use super::spec::{Backend, RunSpec};
+
+/// Scheduler knobs (the `sweep` subcommand's flags).
+#[derive(Clone, Debug)]
+pub struct SweepOptions {
+    /// Per simulated device, in GB.
+    pub budget_gb: f64,
+    /// Simulated device count; the packing budget is `budget_gb × gpus`.
+    pub gpus: usize,
+    /// Concurrent runs per wave.
+    pub workers: usize,
+    /// Skip runs already in the manifest. Without it, an existing
+    /// non-empty manifest is an error (no silent clobbering).
+    pub resume: bool,
+    pub manifest_path: std::path::PathBuf,
+    /// Print the packing plan and per-run completions.
+    pub verbose: bool,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        Self {
+            budget_gb: 40.0,
+            gpus: 1,
+            workers: 4,
+            resume: true,
+            manifest_path: std::path::PathBuf::from("results/sweep/manifest.jsonl"),
+            verbose: false,
+        }
+    }
+}
+
+/// What a sweep did.
+#[derive(Clone, Debug)]
+pub struct SweepSummary {
+    pub total: usize,
+    pub executed: usize,
+    pub skipped: usize,
+    pub waves: usize,
+    pub manifest_path: std::path::PathBuf,
+}
+
+impl SweepSummary {
+    /// Stable one-line form (CI greps `executed=`).
+    pub fn line(&self) -> String {
+        format!(
+            "sweep: total={} executed={} skipped={} waves={} manifest={}",
+            self.total,
+            self.executed,
+            self.skipped,
+            self.waves,
+            self.manifest_path.display()
+        )
+    }
+}
+
+/// Execute `specs` under `opts`. See module docs for the contract.
+pub fn run_sweep(specs: Vec<RunSpec>, opts: &SweepOptions) -> Result<SweepSummary> {
+    run_sweep_collect(specs, opts).map(|(summary, _)| summary)
+}
+
+/// [`run_sweep`] returning the post-sweep manifest as well, so callers
+/// that aggregate rows (the repro harness) skip a full re-load/re-parse
+/// of the file they just wrote.
+pub fn run_sweep_collect(
+    specs: Vec<RunSpec>,
+    opts: &SweepOptions,
+) -> Result<(SweepSummary, SweepManifest)> {
+    if opts.workers == 0 {
+        bail!("--workers must be ≥ 1");
+    }
+    // Dedup by run id, first occurrence wins (different experiments may
+    // request the same logical run; it executes once).
+    let mut deduped: Vec<RunSpec> = Vec::with_capacity(specs.len());
+    {
+        let mut seen = std::collections::BTreeSet::new();
+        for s in specs {
+            if s.run_id.is_empty() {
+                bail!("unsealed RunSpec (empty run_id) — call RunSpec::sealed()");
+            }
+            if seen.insert(s.run_id.clone()) {
+                deduped.push(s);
+            }
+        }
+    }
+    let total = deduped.len();
+
+    let mut manifest = SweepManifest::load(&opts.manifest_path)?;
+    if !opts.resume && !manifest.is_empty() {
+        bail!(
+            "manifest {} already holds {} runs — pass --resume to skip \
+             completed runs, or remove the file to start fresh",
+            opts.manifest_path.display(),
+            manifest.len()
+        );
+    }
+    let pending: Vec<RunSpec> =
+        deduped.into_iter().filter(|s| !manifest.contains(&s.run_id)).collect();
+    let skipped = total - pending.len();
+
+    let budget_bytes = opts.budget_gb * 1e9 * opts.gpus as f64;
+    let waves = pack(pending, budget_bytes)?;
+    let n_waves = waves.len();
+    if opts.verbose {
+        println!(
+            "[sweep] {} runs pending ({} skipped) in {} wave(s) under {:.0} GB",
+            total - skipped,
+            skipped,
+            n_waves,
+            budget_bytes / 1e9
+        );
+    }
+
+    let mut executed = 0usize;
+    for (wi, wave) in waves.into_iter().enumerate() {
+        if opts.verbose {
+            println!(
+                "[sweep] wave {}/{}: {} run(s), {:.1}/{:.0} GB",
+                wi + 1,
+                n_waves,
+                wave.runs.len(),
+                wave.bytes / 1e9,
+                budget_bytes / 1e9
+            );
+        }
+        let runs: Vec<RunSpec> = wave.runs.into_iter().map(|p| p.spec).collect();
+        let n_workers = opts.workers.min(runs.len()).max(1);
+        let next = AtomicUsize::new(0);
+        let stop = AtomicBool::new(false);
+        let mut first_err: Option<anyhow::Error> = None;
+
+        std::thread::scope(|scope| {
+            let (tx, rx) = mpsc::channel::<(String, Result<(ManifestRow, RunTiming)>)>();
+            let runs_ref = &runs;
+            let next_ref = &next;
+            let stop_ref = &stop;
+            for _ in 0..n_workers {
+                let tx = tx.clone();
+                scope.spawn(move || loop {
+                    if stop_ref.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let i = next_ref.fetch_add(1, Ordering::SeqCst);
+                    if i >= runs_ref.len() {
+                        break;
+                    }
+                    let spec = &runs_ref[i];
+                    let res = execute_run(spec);
+                    if tx.send((spec.run_id.clone(), res)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            for (run_id, res) in rx {
+                match res {
+                    Ok((row, timing)) => {
+                        if let Err(e) = manifest.append(row) {
+                            stop.store(true, Ordering::Relaxed);
+                            first_err.get_or_insert(e);
+                            continue;
+                        }
+                        SweepManifest::append_time(
+                            &opts.manifest_path,
+                            &run_id,
+                            timing.total_secs,
+                            timing.time_to_best_secs,
+                        )
+                        .ok();
+                        executed += 1;
+                        if opts.verbose {
+                            println!("[sweep]   done {} ({:.1}s)", run_id, timing.total_secs);
+                        }
+                    }
+                    Err(e) => {
+                        stop.store(true, Ordering::Relaxed);
+                        first_err.get_or_insert(e.context(format!("run {run_id} failed")));
+                    }
+                }
+            }
+        });
+        if let Some(e) = first_err {
+            // Completed rows are already on disk — the sweep is resumable
+            // from exactly this point.
+            return Err(e);
+        }
+    }
+
+    manifest.compact()?;
+    let summary = SweepSummary {
+        total,
+        executed,
+        skipped,
+        waves: n_waves,
+        manifest_path: opts.manifest_path.clone(),
+    };
+    Ok((summary, manifest))
+}
+
+/// Wall-clock telemetry for the side file (never enters the manifest).
+pub struct RunTiming {
+    pub total_secs: f64,
+    pub time_to_best_secs: f64,
+}
+
+/// Execute one run on its backend and produce its manifest row.
+///
+/// Re-entrant: all state (executor, params, dataset, optimizer) is built
+/// inside the call, nothing is printed, and the in-run noise pool is
+/// pinned to one worker so run-level parallelism composes with it.
+pub fn execute_run(spec: &RunSpec) -> Result<(ManifestRow, RunTiming)> {
+    match spec.backend {
+        Backend::Mock => {
+            let mut exec = QuadraticExec::new(
+                spec.mock_dim,
+                0.5,
+                2.0,
+                0.1,
+                derive_seed(spec.grid_seed, 0xACE),
+            );
+            let mut params = ParamStore::zeros(&[("w".to_string(), vec![spec.mock_dim])]);
+            run_with_exec(spec, &mut exec, &mut params, 512, 64)
+        }
+        Backend::Xla => {
+            let mut exec = XlaExec::new(&default_artifacts_dir(), &spec.model_key)?;
+            let entry = exec.entry().clone();
+            let mut params = exec.load_initial_params()?;
+            run_with_exec(spec, &mut exec, &mut params, entry.vocab, entry.max_len)
+        }
+    }
+}
+
+fn run_with_exec(
+    spec: &RunSpec,
+    exec: &mut dyn ModelExec,
+    params: &mut ParamStore,
+    vocab: usize,
+    max_len: usize,
+) -> Result<(ManifestRow, RunTiming)> {
+    let task = spec.task_def()?;
+    let ds = Dataset::generate(
+        task,
+        vocab,
+        Some(max_len),
+        spec.grid_seed,
+        spec.n_train,
+        spec.n_val,
+        spec.n_test,
+    );
+    if spec.steps == 0 {
+        // Zero-shot: evaluation only, no training loop. The budget is
+        // exactly `eval_examples` — no silent clamp, since that field is
+        // part of run identity and must actually steer the outcome.
+        let t0 = Instant::now();
+        let ev = evaluate(exec, params, &ds.test, spec.eval_examples)?;
+        return Ok((
+            ManifestRow::from_eval(spec, &ev),
+            RunTiming { total_secs: t0.elapsed().as_secs_f64(), time_to_best_secs: 0.0 },
+        ));
+    }
+    // `LT_NONE` is usize::MAX, which `partition` already treats as "no
+    // partitioning", so `spec.lt` passes straight through.
+    let lt = if spec.lt_auto {
+        // Addax on long tasks: partition at the 60th length percentile of
+        // the (deterministic) training split — the repro's L_T policy.
+        let mut lens: Vec<usize> = ds.train.iter().map(|e| e.context.len() + 1).collect();
+        lens.sort_unstable();
+        lens[lens.len() * 6 / 10]
+    } else {
+        spec.lt
+    };
+    let cfg = TrainConfig {
+        steps: spec.steps,
+        eval_every: spec.eval_every,
+        seed: spec.train_seed,
+        eval_examples: spec.eval_examples,
+        log_path: None,
+        verbose: false,
+        // One in-run noise worker: the sweep parallelizes across runs,
+        // and the shared worker-count global must not race to different
+        // values from concurrent runs.
+        noise_workers: 1,
+    };
+    let mut opt = spec.optimizer.build()?;
+    let r = train(exec, params, &mut *opt, &ds, lt, &cfg)
+        .with_context(|| format!("training {}", spec.run_id))?;
+    let timing = RunTiming { total_secs: r.total_secs, time_to_best_secs: r.time_to_best_secs };
+    Ok((ManifestRow::from_train(spec, &r), timing))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::OptSpec;
+
+    #[test]
+    fn execute_run_is_deterministic() {
+        let spec = {
+            let mut s = RunSpec::new(Backend::Mock, "sst2", OptSpec::named("addax"), 15, 3);
+            s.eval_examples = 30;
+            s.n_train = 120;
+            s.n_val = 40;
+            s.n_test = 40;
+            s.sealed()
+        };
+        let (a, _) = execute_run(&spec).unwrap();
+        let (b, _) = execute_run(&spec).unwrap();
+        assert_eq!(a.to_line(), b.to_line());
+        assert_eq!(a.outcome.loss_curve.points.len(), 15);
+    }
+
+    #[test]
+    fn zero_shot_runs_eval_only() {
+        let mut s = RunSpec::new(Backend::Mock, "sst2", OptSpec::named("zero-shot"), 0, 1);
+        s.n_test = 60;
+        s.eval_examples = 50;
+        let s = s.sealed();
+        let (row, _) = execute_run(&s).unwrap();
+        assert_eq!(row.outcome.kind, "eval");
+        assert_eq!(row.outcome.steps, 0);
+        assert!(row.outcome.loss_curve.points.is_empty());
+        assert!(row.outcome.test_acc > 0.0);
+    }
+
+    #[test]
+    fn unsealed_spec_is_rejected() {
+        let mut s = RunSpec::new(Backend::Mock, "sst2", OptSpec::named("mezo"), 5, 0);
+        s.run_id = String::new();
+        let err = run_sweep(vec![s], &SweepOptions::default()).unwrap_err();
+        assert!(format!("{err}").contains("unsealed"));
+    }
+}

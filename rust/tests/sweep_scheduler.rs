@@ -1,0 +1,165 @@
+//! Scheduler determinism and resume semantics (mock backend — no
+//! artifacts needed; this is exactly what the CI gate exercises).
+//!
+//! Contract under test: for a fixed spec, the compacted manifest is
+//! byte-identical (1) at any worker count, (2) after a kill + resume
+//! (including a torn trailing line), and (3) re-running skips everything
+//! without touching a byte.
+
+use std::path::PathBuf;
+
+use addax::config::Config;
+use addax::sched::{run_sweep, RunSpec, SweepManifest, SweepOptions, SweepSpec};
+
+const SPEC: &str = r#"
+[sweep]
+name = "test"
+backend = "mock"
+steps = 12
+zo_mult = 2
+eval_examples = 24
+mock_dim = 32
+train = 120
+val = 48
+test = 48
+
+[grid]
+optimizers = "addax, mezo, ip-sgd, zero-shot"
+tasks = "sst2, rte"
+seeds = "0, 1"
+"#;
+
+fn specs() -> Vec<RunSpec> {
+    let cfg = Config::parse(SPEC).unwrap();
+    SweepSpec::from_config(&cfg).unwrap().expand().unwrap()
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("addax_sweep_test_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn opts(dir: &std::path::Path, workers: usize) -> SweepOptions {
+    SweepOptions {
+        budget_gb: 60.0,
+        gpus: 1,
+        workers,
+        resume: true,
+        manifest_path: dir.join("manifest.jsonl"),
+        verbose: false,
+    }
+}
+
+#[test]
+fn manifest_is_bit_identical_across_worker_counts() {
+    // 4 optimizers x 2 tasks x 2 seeds (seeds are identity: they seed the
+    // dataset, so even zero-shot differs per seed)
+    let expected_runs = 16;
+    let mut bytes: Vec<String> = Vec::new();
+    for workers in [1usize, 4] {
+        let dir = fresh_dir(&format!("workers{workers}"));
+        let o = opts(&dir, workers);
+        let summary = run_sweep(specs(), &o).unwrap();
+        assert_eq!(summary.total, expected_runs);
+        assert_eq!(summary.executed, expected_runs);
+        assert_eq!(summary.skipped, 0);
+        bytes.push(std::fs::read_to_string(&o.manifest_path).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    assert_eq!(
+        bytes[0], bytes[1],
+        "compacted manifest must not depend on the worker count"
+    );
+}
+
+#[test]
+fn resume_after_kill_matches_uninterrupted_run() {
+    // Reference: one uninterrupted sweep.
+    let ref_dir = fresh_dir("ref");
+    let ref_opts = opts(&ref_dir, 2);
+    run_sweep(specs(), &ref_opts).unwrap();
+    let reference = std::fs::read_to_string(&ref_opts.manifest_path).unwrap();
+
+    // "Killed" sweep: a prefix of the reference rows plus a torn partial
+    // line, exactly what a SIGKILL mid-append leaves behind.
+    let kill_dir = fresh_dir("kill");
+    let kill_opts = opts(&kill_dir, 3);
+    let prefix: String = reference
+        .lines()
+        .take(5)
+        .map(|l| format!("{l}\n"))
+        .collect::<String>()
+        + "{\"run_id\": \"torn-mid-app";
+    std::fs::write(&kill_opts.manifest_path, prefix).unwrap();
+
+    let summary = run_sweep(specs(), &kill_opts).unwrap();
+    assert_eq!(summary.skipped, 5, "prefix rows must be skipped, torn line dropped");
+    assert_eq!(summary.executed, summary.total - 5);
+    let resumed = std::fs::read_to_string(&kill_opts.manifest_path).unwrap();
+    assert_eq!(resumed, reference, "resume must converge to the uninterrupted bytes");
+    std::fs::remove_dir_all(&ref_dir).ok();
+    std::fs::remove_dir_all(&kill_dir).ok();
+}
+
+#[test]
+fn rerun_skips_everything_and_changes_nothing() {
+    let dir = fresh_dir("rerun");
+    let o = opts(&dir, 4);
+    let first = run_sweep(specs(), &o).unwrap();
+    let before = std::fs::read_to_string(&o.manifest_path).unwrap();
+    let second = run_sweep(specs(), &o).unwrap();
+    assert_eq!(second.executed, 0);
+    assert_eq!(second.skipped, first.total);
+    let after = std::fs::read_to_string(&o.manifest_path).unwrap();
+    assert_eq!(before, after);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn without_resume_an_existing_manifest_is_refused() {
+    let dir = fresh_dir("noresume");
+    let mut o = opts(&dir, 2);
+    run_sweep(specs(), &o).unwrap();
+    o.resume = false;
+    let err = run_sweep(specs(), &o).unwrap_err();
+    assert!(format!("{err}").contains("--resume"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn oversized_run_reports_the_budget() {
+    let dir = fresh_dir("oversize");
+    let mut o = opts(&dir, 2);
+    o.budget_gb = 1.0; // nothing at opt-13b pricing fits in 1 GB
+    let err = run_sweep(specs(), &o).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("budget"), "{msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tables_aggregate_from_manifest_rows_alone() {
+    // The inversion contract: after a sweep, every requested row is
+    // reconstructible from the manifest file with no training state.
+    let dir = fresh_dir("aggregate");
+    let o = opts(&dir, 4);
+    let all = specs();
+    run_sweep(all.clone(), &o).unwrap();
+    let manifest = SweepManifest::load(&o.manifest_path).unwrap();
+    assert_eq!(manifest.len(), 16);
+    for spec in &all {
+        let row = manifest.get(&spec.run_id).expect("row present");
+        assert_eq!(row.spec_str("task").unwrap(), spec.task);
+        if spec.steps > 0 {
+            assert_eq!(row.outcome.steps, spec.steps);
+            assert_eq!(row.outcome.loss_curve.points.len(), spec.steps);
+            assert!(row.outcome.final_train_loss.is_finite());
+        } else {
+            assert_eq!(row.outcome.kind, "eval");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
