@@ -68,10 +68,13 @@ def main():
         return 0
 
     baseline, _ = load(args.baseline)
+    # Keys present on only one side are warnings, never errors: adding a
+    # bench row (or retiring one) must not break the gate before the
+    # baseline catches up. Same for a malformed baseline row.
     failures, missing = [], []
     for name, obs in sorted(observed.items()):
         base = baseline.get(name)
-        if base is None:
+        if base is None or not isinstance(base.get("ms_per_iter"), (int, float)):
             missing.append(name)
             continue
         ceiling = base["ms_per_iter"] * args.tolerance
@@ -81,8 +84,11 @@ def main():
         if status == "FAIL":
             failures.append(name)
     for name in missing:
-        print(f"  warn  {name:<44} not in baseline (new bench? "
-              f"re-run with --update)")
+        print(f"  warn  {name:<44} not in baseline / malformed ceiling "
+              f"(new bench? re-run with --update)")
+    for name in sorted(set(baseline) - set(observed)):
+        print(f"  warn  {name:<44} in baseline but not observed "
+              f"(retired bench? re-run with --update)")
 
     if failures:
         print(f"\nbench gate: {len(failures)} regression(s) past the "

@@ -6,8 +6,11 @@
 //! ```
 
 use addax::memory::{
-    footprint, geometry, max_batch_in_grid, Device, Method, Workload, BS_GRID,
+    footprint, geometry, max_batch_in_grid, Device, Dtype, Method, Workload, BS_GRID,
 };
+
+/// The paper's fp16 storage profile (2 B/param) — bf16 in this codebase.
+const FP16: Dtype = Dtype::Bf16;
 
 fn main() {
     let gname = std::env::args().nth(1).unwrap_or_else(|| "opt-13b".to_string());
@@ -22,17 +25,17 @@ fn main() {
     println!("\n-- Figure 3-left: memory (GB) vs batch size at L=300 --");
     println!("{:>6} {:>10} {:>10}", "batch", "IP-SGD", "MeZO");
     for &b in BS_GRID {
-        let ip = footprint(&g, Method::IpSgd, Workload::fo(b, 300), 2.0);
-        let mz = footprint(&g, Method::MeZo, Workload::zo(b, 300), 2.0);
+        let ip = footprint(&g, Method::IpSgd, Workload::fo(b, 300), FP16);
+        let mz = footprint(&g, Method::MeZo, Workload::zo(b, 300), FP16);
         println!("{:>6} {:>10.1} {:>10.1}", b, ip.gb(), mz.gb());
     }
 
     println!("\n-- Figure 4: memory (GB) vs sequence length at batch=8 --");
     println!("{:>6} {:>10} {:>10} {:>10}", "len", "SGD", "IP-SGD", "MeZO");
     for l in (100..=700).step_by(100) {
-        let sgd = footprint(&g, Method::Sgd, Workload::fo(8, l), 2.0);
-        let ip = footprint(&g, Method::IpSgd, Workload::fo(8, l), 2.0);
-        let mz = footprint(&g, Method::MeZo, Workload::zo(8, l), 2.0);
+        let sgd = footprint(&g, Method::Sgd, Workload::fo(8, l), FP16);
+        let ip = footprint(&g, Method::IpSgd, Workload::fo(8, l), FP16);
+        let mz = footprint(&g, Method::MeZo, Workload::zo(8, l), FP16);
         println!("{:>6} {:>10.1} {:>10.1} {:>10.1}", l, sgd.gb(), ip.gb(), mz.gb());
     }
 
@@ -40,9 +43,9 @@ fn main() {
     for (dev, label) in [(Device::a100_40(1), "A100-40"), (Device::h100_80(1), "H100-80")] {
         println!("{label}:");
         for l in [60usize, 300, 739] {
-            let mz = max_batch_in_grid(&g, Method::MeZo, l, &dev, 2.0);
-            let ip = max_batch_in_grid(&g, Method::IpSgd, l, &dev, 2.0);
-            let sg = max_batch_in_grid(&g, Method::Sgd, l, &dev, 2.0);
+            let mz = max_batch_in_grid(&g, Method::MeZo, l, &dev, FP16);
+            let ip = max_batch_in_grid(&g, Method::IpSgd, l, &dev, FP16);
+            let sg = max_batch_in_grid(&g, Method::Sgd, l, &dev, FP16);
             println!(
                 "  L={l:>4}: MeZO max BS {:?}, IP-SGD {:?}, SGD {:?}  (None = OOM)",
                 mz, ip, sg
@@ -52,7 +55,7 @@ fn main() {
 
     println!("\n-- Addax phases at the paper's (K1,K0)=(4,6), L_T=170, L_max=739 --");
     let wl = Workload::mixed(4, 170, 6, 739);
-    let f = footprint(&g, Method::Addax, wl, 2.0);
+    let f = footprint(&g, Method::Addax, wl, FP16);
     println!(
         "weights {:.1} + activations {:.1} + logits {:.1} + grads {:.1} = {:.1} GB",
         f.weights / 1e9,

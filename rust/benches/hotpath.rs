@@ -12,7 +12,7 @@ use std::time::Instant;
 
 use addax::jsonlite::{obj, Json};
 use addax::params::ParamStore;
-use addax::tensor::HostTensor;
+use addax::tensor::{Dtype, HostTensor};
 use addax::zorng::NoiseStream;
 
 /// One recorded measurement.
@@ -57,13 +57,17 @@ fn bench<F: FnMut()>(
     best
 }
 
-fn big_store(d: usize) -> ParamStore {
+fn big_store_in(d: usize, dtype: Dtype) -> ParamStore {
     let specs: Vec<(String, Vec<usize>)> = (0..8)
         .map(|i| (format!("w{i}"), vec![d / 8]))
         .collect();
-    let mut s = ParamStore::zeros(&specs);
+    let mut s = ParamStore::zeros_in(&specs, dtype);
     s.perturb(1, 0.1);
     s
+}
+
+fn big_store(d: usize) -> ParamStore {
+    big_store_in(d, Dtype::F32)
 }
 
 fn main() {
@@ -88,6 +92,7 @@ fn main() {
     // counter-addressed blocks make every worker count bit-identical; the
     // sweep shows how far from serial the wall clock moves).
     let mut serial_ms = 0.0;
+    let mut f32_ms_at = [0.0f64; 2]; // [serial, 8 workers] for the bf16 ratio
     for workers in [1usize, 2, 4, 8] {
         let t = bench(
             r,
@@ -98,13 +103,38 @@ fn main() {
         );
         if workers == 1 {
             serial_ms = t * 1e3;
+            f32_ms_at[0] = t * 1e3;
         } else {
             println!(
                 "{:<44} {:>10.2}x vs serial",
                 format!("  speedup @ {workers} workers"),
                 serial_ms / (t * 1e3)
             );
+            if workers == 8 {
+                f32_ms_at[1] = t * 1e3;
+            }
         }
+    }
+
+    // 2b. bf16 storage: the same counter-addressed sweep moving half the
+    // bytes (decode → f32 math → round-nearest-even encode). Serial is
+    // RNG-bound, so the dtype win shows at the bandwidth-bound end of
+    // the worker sweep; both worker counts stay bit-identical.
+    let mut store16 = big_store_in(d, Dtype::Bf16);
+    let bytes16 = (d * 2) as f64;
+    for (slot, workers) in [1usize, 8].into_iter().enumerate() {
+        let t = bench(
+            r,
+            &format!("perturb: seed-replay bf16, {workers} worker(s)"),
+            bytes16,
+            iters,
+            || store16.perturb_with_workers(42, 1e-3, workers),
+        );
+        println!(
+            "{:<44} {:>10.2}x vs f32 @ same workers",
+            format!("  bf16 speedup @ {workers} workers"),
+            f32_ms_at[slot] / (t * 1e3)
+        );
     }
 
     // 3. Materialized-z perturbation (the O(d) ablation of §2.2).
@@ -139,12 +169,29 @@ fn main() {
         store.perturb(43, -2.0 * eps);
         store.restore_and_zo_update(43, eps, 0.0, 1.0, 0.0);
     });
+    // bf16 edition of the fused step (half the parameter traffic; the
+    // probe/restore no longer cancel exactly, so reset the store after).
+    bench(r, "zo-step: fused bf16 (3 O(d) sweeps)", 3.0 * bytes16, iters, || {
+        store16.perturb(43, eps);
+        store16.perturb(43, -2.0 * eps);
+        store16.restore_and_zo_update(43, eps, 0.0, 1.0, 0.0);
+    });
+    store16 = big_store_in(d, Dtype::Bf16);
 
-    // 5. FO in-place update (axpy over all tensors).
+    // 5. FO in-place update (axpy over all tensors) — the RNG-free,
+    // purely bandwidth-bound sweep, in both precisions.
     let grads: Vec<Vec<f32>> = (0..8).map(|_| vec![0.01f32; d / 8]).collect();
-    bench(r, "fo_update_all: axpy over all params", bytes, iters, || {
+    let t32 = bench(r, "fo_update_all: axpy over all params", bytes, iters, || {
         store.fo_update_all(1e-3, 1.0, &grads);
     });
+    let t16 = bench(r, "fo_update_all: axpy bf16", bytes16, iters, || {
+        store16.fo_update_all(1e-3, 1.0, &grads);
+    });
+    println!(
+        "{:<44} {:>10.2}x vs f32",
+        "  bf16 fo-update speedup",
+        t32 / t16
+    );
 
     // 6. Tensor primitives.
     let mut t = HostTensor::zeros(&[1 << 20]);
@@ -193,5 +240,7 @@ fn main() {
     std::fs::write("BENCH_hotpath.json", doc.dump()).expect("writing BENCH_hotpath.json");
     println!("\nwrote BENCH_hotpath.json ({} entries)", results.len());
     println!("(The perturb/update loops should sit near memory bandwidth;");
-    println!(" the fused ZO step removes one of the four O(d) sweeps.)");
+    println!(" the fused ZO step removes one of the four O(d) sweeps, and");
+    println!(" bf16 storage halves the bytes each remaining sweep moves —");
+    println!(" the win shows once the worker pool saturates bandwidth.)");
 }

@@ -30,6 +30,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::TrainConfig;
 use crate::optim::{OptSpec, Optimizer};
+use crate::tensor::Dtype;
 
 /// Flat `section.key -> raw string value` map.
 #[derive(Clone, Debug, Default)]
@@ -163,6 +164,13 @@ impl Config {
         self.str_or("task.name", "sst2")
     }
 
+    /// Parameter-store precision: `[model] dtype = "f32" | "bf16"`.
+    /// Defaults to f32 (the AOT dump precision); bf16 stores weights at
+    /// 2 bytes with all math still in f32.
+    pub fn dtype(&self) -> Result<Dtype> {
+        Dtype::parse(&self.str_or("model.dtype", "f32"))
+    }
+
     /// `L_T` threshold; 0 / absent means "no partitioning" (Addax-WA).
     pub fn lt(&self) -> Result<usize> {
         self.usize_or("optim.lt", usize::MAX)
@@ -252,6 +260,18 @@ verbose = false
         let mut c = Config::parse(SAMPLE).unwrap();
         c.set("optim.lr=0.5").unwrap();
         assert_eq!(c.f32_or("optim.lr", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn dtype_parses_and_defaults() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.dtype().unwrap(), Dtype::F32);
+        let mut c = Config::parse("[model]\ndtype = \"bf16\"").unwrap();
+        assert_eq!(c.dtype().unwrap(), Dtype::Bf16);
+        c.set("model.dtype=f32").unwrap();
+        assert_eq!(c.dtype().unwrap(), Dtype::F32);
+        c.set("model.dtype=fp16").unwrap();
+        assert!(c.dtype().is_err());
     }
 
     #[test]

@@ -43,9 +43,10 @@ pub struct TrainConfig {
     pub log_path: Option<std::path::PathBuf>,
     /// Print progress lines.
     pub verbose: bool,
-    /// Worker threads for the ZO noise sweeps; 0 = auto
-    /// (`ADDAX_NOISE_WORKERS`, then `min(cores, 8)`). Bit-exact at any
-    /// value — the block noise is counter-addressed.
+    /// Worker threads for the ZO noise sweeps, pinned per run on the
+    /// parameter store; 0 = auto (`ADDAX_NOISE_WORKERS`, then
+    /// `min(cores, 8)`). Bit-exact at any value — the block noise is
+    /// counter-addressed.
     pub noise_workers: usize,
 }
 
@@ -174,10 +175,9 @@ pub fn train(
 ) -> Result<RunResult> {
     let needs = opt.needs();
     // Pin the noise-sweep pool for the whole run (0 keeps auto selection).
-    // NOTE: this is a process-global; concurrent runs (the sweep
-    // scheduler) must all pass the same value — the scheduler pins 1 and
-    // parallelizes across runs instead.
-    crate::params::set_noise_workers(cfg.noise_workers);
+    // The pin lives on the store itself, so concurrent runs in one
+    // process (the sweep scheduler) cannot race each other's setting.
+    params.set_noise_workers(cfg.noise_workers);
     // Paper cadence is steps/20 (App. D.5); for step budgets under 20 the
     // division truncates to 0, which would be a modulo-by-zero below — it
     // must fall back to evaluating every step.

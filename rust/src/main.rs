@@ -17,7 +17,7 @@ use addax::config::Config;
 use addax::coordinator::train;
 use addax::data;
 use addax::jsonlite::Json;
-use addax::memory::{self, footprint, geometry, Device, Method, Workload};
+use addax::memory::{self, footprint, geometry, Device, Dtype, Method, Workload};
 use addax::repro::{self, Harness};
 use addax::runtime::manifest::{default_artifacts_dir, Manifest};
 use addax::runtime::XlaExec;
@@ -50,14 +50,16 @@ fn print_help() {
          \x20            [--resume] [--manifest PATH] [--dry-run] [--set section.key=value ...]\n  \
          addax repro  <id|all> [--fast] [--model KEY]\n  \
          addax memory --geometry G --method M [--batch B] [--len L] [--gpus N] [--hbm GB]\n  \
+         \x20            [--dtype f32|bf16]\n  \
          addax list\n\nSWEEP:\n  \
-         Expands the spec's (optimizer x task x seed x lr x eps) grid, prices each\n  \
-         run with the analytic memory model, bin-packs runs that co-fit onto the\n  \
-         simulated device budget (--budget-gb x --gpus), and executes each wave\n  \
-         concurrently (--workers). Results append to a crash-safe JSONL manifest;\n  \
-         --resume skips runs already recorded, and the compacted manifest is\n  \
-         byte-identical for a spec at any worker count. `repro` tables/figures\n  \
-         aggregate from the same manifest. --smoke runs the built-in 12-run grid\n  \
+         Expands the spec's (optimizer x task x seed x lr x eps x dtype) grid,\n  \
+         prices each run with the analytic memory model at its storage dtype,\n  \
+         bin-packs runs that co-fit onto the simulated device budget\n  \
+         (--budget-gb x --gpus), and executes each wave concurrently (--workers).\n  \
+         Results append to a crash-safe JSONL manifest; --resume skips runs\n  \
+         already recorded, and the compacted manifest is byte-identical for a\n  \
+         spec at any worker count (bf16 cells included). `repro` tables/figures\n  \
+         aggregate from the same manifest. --smoke runs the built-in 24-run grid\n  \
          (see configs/sweep_smoke.toml).\n\nEXPERIMENT IDS:\n  \
          fig3 fig4 fig5 fig6 fig8 fig11 theory table11 table12 table13 table14 table15 all"
     );
@@ -108,15 +110,18 @@ fn cmd_train(args: &[String]) -> Result<()> {
         cfg.usize_or("data.val", 300)?,
         cfg.usize_or("data.test", 500)?,
     );
-    let mut params = exec.load_initial_params()?;
+    // The AOT dump is f32; a bf16 store rounds it nearest-even on load.
+    let dtype = cfg.dtype()?;
+    let mut params = exec.load_initial_params()?.to_dtype(dtype);
     let mut opt = cfg.optimizer()?;
     let tc = cfg.train_config()?;
     println!(
-        "train: model={model_key} task={} optimizer={} steps={} lt={}",
+        "train: model={model_key} task={} optimizer={} steps={} lt={} dtype={}",
         task.name,
         opt.name(),
         tc.steps,
-        if cfg.lt()? == usize::MAX { "inf".to_string() } else { cfg.lt()?.to_string() }
+        if cfg.lt()? == usize::MAX { "inf".to_string() } else { cfg.lt()?.to_string() },
+        dtype.label(),
     );
     let r = train(&mut exec, &mut params, &mut *opt, &ds, cfg.lt()?, &tc)?;
     println!(
@@ -241,20 +246,23 @@ fn cmd_memory(args: &[String]) -> Result<()> {
     let lt: usize = flag(args, "--lt").unwrap_or(&l.to_string()).parse()?;
     let gpus: usize = flag(args, "--gpus").unwrap_or("1").parse()?;
     let hbm: f64 = flag(args, "--hbm").unwrap_or("40").parse()?;
-    let bytes: f64 = if method == Method::Adam { 4.0 } else { 2.0 };
+    // Default to the paper's fp16 storage profile (2 B/param = bf16
+    // here); Adam prices fp32 inside `footprint` regardless.
+    let dtype = Dtype::parse(flag(args, "--dtype").unwrap_or("bf16"))?;
     let wl = match method {
         Method::MeZo | Method::ZoSgdNaive => Workload::zo(b, l),
         Method::Addax => Workload::mixed(b, lt, k0, l),
         _ => Workload::fo(b, l),
     };
-    let f = footprint(&g, method, wl, bytes);
+    let f = footprint(&g, method, wl, dtype);
     let dev = Device { name: "custom", capacity_bytes: hbm * 1e9, count: gpus };
     println!(
-        "{} / {} b={b} l={l}: weights {:.1} GB, activations {:.1} GB, logits \
-         {:.1} GB, grads {:.1} GB, state {:.1} GB => total {:.1} GB ({} on \
-         {}x{:.0}GB)",
+        "{} / {} ({}) b={b} l={l}: weights {:.1} GB, activations {:.1} GB, \
+         logits {:.1} GB, grads {:.1} GB, state {:.1} GB => total {:.1} GB \
+         ({} on {}x{:.0}GB)",
         g.name,
         method.label(),
+        dtype.label(),
         f.weights / 1e9,
         f.activations / 1e9,
         f.logits / 1e9,
@@ -267,7 +275,7 @@ fn cmd_memory(args: &[String]) -> Result<()> {
     );
     // grid search like App. D.6
     if matches!(method, Method::MeZo | Method::Sgd | Method::IpSgd) {
-        let max = memory::max_batch_in_grid(&g, method, l, &dev, bytes);
+        let max = memory::max_batch_in_grid(&g, method, l, &dev, dtype);
         println!("max grid batch at L={l}: {max:?}");
     }
     Ok(())

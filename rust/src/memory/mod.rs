@@ -27,6 +27,16 @@
 //! model against the paper's published anchors (e.g. IP-SGD ≈ 30 GB at
 //! BS=2, L=300 on OPT-13B — Figure 3-left).
 //!
+//! Precision comes from the configured storage [`Dtype`], not a
+//! free-floating byte count: [`footprint`] prices weights at
+//! `dtype.bytes()`, which since the precision-polymorphic `ParamStore`
+//! refactor is exactly what the running store allocates
+//! (`ParamStore::storage_bytes`). The store the simulator describes *is*
+//! the store we run — `Dtype::Bf16` (2 B) reproduces the paper's
+//! fp16-storage profiles, `Dtype::F32` (4 B) the full-precision ones.
+//! Adam is the one exception and prices fp32 throughout, matching the
+//! paper's fp32 Adam runs regardless of the store's dtype.
+//!
 //! Absolute peaks of the paper additionally include allocator caching and
 //! fragmentation, which we do not model; DESIGN.md §3 records this
 //! substitution. Feasibility boundaries (what OOMs where) are the
@@ -34,6 +44,7 @@
 
 pub mod geometry;
 
+pub use crate::tensor::Dtype;
 pub use geometry::ModelGeometry;
 
 /// Stored-activation coefficient per token per layer (fp16 floats):
@@ -137,10 +148,13 @@ fn logits_bytes(g: &ModelGeometry, b: usize, l: usize) -> f64 {
     (b * l) as f64 * g.vocab as f64 * LOGITS_BYTES
 }
 
-/// Peak footprint of one fine-tuning step.
+/// Peak footprint of one fine-tuning step at the store's precision.
 ///
-/// `bytes` is the training precision (2 = fp16, 4 = fp32).
-pub fn footprint(g: &ModelGeometry, method: Method, wl: Workload, bytes: f64) -> Footprint {
+/// `dtype` is the storage precision of weights/activations (bf16 = the
+/// paper's 2-byte fp16 profile, f32 = 4 bytes); Adam always prices fp32
+/// (see module docs).
+pub fn footprint(g: &ModelGeometry, method: Method, wl: Workload, dtype: Dtype) -> Footprint {
+    let bytes = dtype.bytes() as f64;
     let p = g.n_params() as f64;
     let largest = g.largest_tensor() as f64;
     let mut f = Footprint { weights: p * bytes, ..Default::default() };
@@ -237,7 +251,7 @@ pub fn max_batch_in_grid(
     method: Method,
     l: usize,
     device: &Device,
-    bytes: f64,
+    dtype: Dtype,
 ) -> Option<usize> {
     BS_GRID
         .iter()
@@ -247,7 +261,7 @@ pub fn max_batch_in_grid(
                 Method::MeZo | Method::ZoSgdNaive => Workload::zo(b, l),
                 _ => Workload::fo(b, l),
             };
-            device.fits(&footprint(g, method, wl, bytes))
+            device.fits(&footprint(g, method, wl, dtype))
         })
         .copied()
 }
@@ -257,7 +271,8 @@ mod tests {
     use super::geometry::*;
     use super::*;
 
-    const FP16: f64 = 2.0;
+    /// The paper's fp16 storage profile: 2 bytes/element, i.e. bf16 here.
+    const FP16: Dtype = Dtype::Bf16;
 
     /// Figure 3-left anchor: OPT-13B, L=300 — IP-SGD at BS=2 ≈ 30 GB.
     #[test]
@@ -323,7 +338,7 @@ mod tests {
     /// Adam needs ~16 bytes/param: OPT-13B ≈ 205+ GB ⇒ 5 GPUs (Table 12).
     #[test]
     fn adam_needs_many_gpus() {
-        let f = footprint(&OPT_13B, Method::Adam, Workload::fo(8, 300), 4.0);
+        let f = footprint(&OPT_13B, Method::Adam, Workload::fo(8, 300), Dtype::F32);
         assert!(f.gb() > 200.0, "{}", f.gb());
         assert!(!Device::a100_40(1).fits(&f));
         assert!(Device::h100_80(5).fits(&f));
@@ -374,6 +389,22 @@ mod tests {
         let extra = naive.total - mezo.total;
         let weights = OPT_13B.n_params() as f64 * 2.0;
         assert!((extra - weights).abs() / weights < 1e-9);
+    }
+
+    /// The dtype prices exactly the bytes the polymorphic store
+    /// allocates: bf16 weights are half the f32 weights, and both equal
+    /// `n_params × dtype.bytes()`.
+    #[test]
+    fn dtype_prices_the_bytes_the_store_allocates() {
+        let half = footprint(&OPT_13B, Method::MeZo, Workload::zo(1, 60), FP16);
+        let full = footprint(&OPT_13B, Method::MeZo, Workload::zo(1, 60), Dtype::F32);
+        assert_eq!(half.weights * 2.0, full.weights);
+        assert_eq!(half.weights, OPT_13B.n_params() as f64 * Dtype::Bf16.bytes() as f64);
+        assert_eq!(full.weights, OPT_13B.n_params() as f64 * Dtype::F32.bytes() as f64);
+        // Adam ignores the store dtype: it trains fp32 either way.
+        let a16 = footprint(&OPT_13B, Method::Adam, Workload::fo(8, 300), FP16);
+        let a32 = footprint(&OPT_13B, Method::Adam, Workload::fo(8, 300), Dtype::F32);
+        assert_eq!(a16.total, a32.total);
     }
 
     /// Footprint is monotone in batch and length.

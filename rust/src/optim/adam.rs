@@ -80,17 +80,20 @@ impl Optimizer for Adam {
         let b1t = 1.0 - self.beta1.powi(self.t as i32);
         let b2t = 1.0 - self.beta2.powi(self.t as i32);
         let norm = grad_global_norm(&g.grads);
+        let (beta1, beta2, lr, eps) = (self.beta1, self.beta2, self.lr, self.eps);
         for (idx, grad) in g.grads.iter().enumerate() {
             let m = &mut self.m[idx];
             let v = &mut self.v[idx];
-            let data = &mut params.get_mut(idx).tensor.data;
-            for i in 0..grad.len() {
-                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * grad[i];
-                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            // The moments stay fp32 whatever the store's dtype — the
+            // 2·d·4-byte state the memory model charges Adam for; only
+            // the weight write re-encodes at storage precision.
+            params.get_mut(idx).tensor.map_inplace(|i, w| {
+                m[i] = beta1 * m[i] + (1.0 - beta1) * grad[i];
+                v[i] = beta2 * v[i] + (1.0 - beta2) * grad[i] * grad[i];
                 let mhat = m[i] / b1t;
                 let vhat = v[i] / b2t;
-                data[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
-            }
+                w - lr * mhat / (vhat.sqrt() + eps)
+            });
         }
         Ok(StepStats {
             loss: g.loss as f64,

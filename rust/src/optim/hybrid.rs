@@ -128,8 +128,8 @@ mod tests {
         let before = p.clone();
         p.perturb_subset(7, 0.1, |idx, _| idx < 1);
         // tensor 0 changed, tensor 1 identical
-        assert!(p.get(0).tensor.data != before.get(0).tensor.data);
-        assert_eq!(p.get(1).tensor.data, before.get(1).tensor.data);
+        assert!(p.get(0).tensor != before.get(0).tensor);
+        assert_eq!(p.get(1).tensor, before.get(1).tensor);
     }
 
     #[test]

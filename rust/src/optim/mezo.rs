@@ -71,7 +71,10 @@ impl Optimizer for MeZo {
 ///
 /// Produces *identical* parameter trajectories to [`MeZo`] given the same
 /// seeds — asserted by a test below — which is exactly the paper's point:
-/// the seed trick changes memory, not mathematics.
+/// the seed trick changes memory, not mathematics. That bit-identity is
+/// an **f32-store** statement: on a bf16 store the naive restore+update
+/// rounds twice where the fused sweep rounds once, so the trajectories
+/// agree only to quantization precision (EXPERIMENTS.md §Precision).
 #[derive(Clone, Debug)]
 pub struct ZoSgdNaive {
     pub lr: f32,

@@ -4,31 +4,30 @@
 //! perturbation noise discarded immediately — the in-place discipline that
 //! gives IP-SGD/MeZO/Addax their memory profile (paper §2.3, App. B).
 //!
+//! The store is precision-polymorphic: every tensor holds either `f32` or
+//! `bf16` elements ([`Dtype`], uniform across the store), while all sweep
+//! math runs in f32 and rounds nearest-even on write (`tensor::Element`).
 //! The ZO sweeps (`perturb`, `perturb_subset`, `restore_and_zo_update`)
-//! are the hottest loops in the system: each touches all `d` parameters.
+//! are the hottest loops in the system: each touches all `d` parameters,
+//! so bf16 storage halves the bytes they move (EXPERIMENTS.md §Precision).
 //! They run over a flat map of [`NOISE_BLOCK`]-element blocks whose noise
 //! is counter-addressed (`zorng::block_seed`), so the blocks are
 //! distributed across a scoped worker pool and the result is bit-identical
-//! at every worker count — including the serial path (see
+//! at every worker count — in both precisions, because each element is
+//! decoded, updated and re-encoded independently of every other (see
 //! EXPERIMENTS.md §Perf for the scaling numbers).
+//!
+//! The sweep worker count is **per store** (`set_noise_workers`), not a
+//! process global: concurrent runs on one process (the sweep scheduler)
+//! each pin their own store without racing.
 
 use std::io::{Read, Write};
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{bail, Context, Result};
 
-use crate::tensor::HostTensor;
+use crate::tensor::{Bf16, Dtype, Element, HostTensor};
 use crate::zorng::{BlockNoise, NoiseStream, NOISE_BLOCK};
-
-/// Worker-pool override for the noise sweeps; 0 = auto (env, then
-/// `min(cores, 8)`). Set from config at run start.
-static NOISE_WORKERS: AtomicUsize = AtomicUsize::new(0);
-
-/// Pin the noise-sweep worker count (0 restores auto selection).
-pub fn set_noise_workers(n: usize) {
-    NOISE_WORKERS.store(n, Ordering::Relaxed);
-}
 
 /// `ADDAX_NOISE_WORKERS`, read once (0 = unset/invalid).
 fn env_noise_workers() -> usize {
@@ -42,14 +41,8 @@ fn env_noise_workers() -> usize {
     })
 }
 
-/// Effective worker count for the noise sweeps: explicit override (last
-/// `set_noise_workers` wins), then `ADDAX_NOISE_WORKERS`, then
-/// `min(available cores, 8)`.
-pub fn noise_workers() -> usize {
-    let n = NOISE_WORKERS.load(Ordering::Relaxed);
-    if n > 0 {
-        return n;
-    }
+/// Auto worker count: `ADDAX_NOISE_WORKERS`, then `min(cores, 8)`.
+fn auto_noise_workers() -> usize {
     let env = env_noise_workers();
     if env > 0 {
         return env;
@@ -69,24 +62,25 @@ pub struct Param {
 
 /// One unit of sweep work: a [`NOISE_BLOCK`]-element block of one tensor.
 /// `(param_idx, block_idx)` is the noise address; the borrow is the
-/// destination slice.
-struct NoiseBlock<'a> {
+/// destination slice in the store's native element type.
+struct NoiseBlock<'a, E> {
     param_idx: usize,
     block_idx: usize,
-    data: &'a mut [f32],
+    data: &'a mut [E],
 }
 
 /// Flatten the included tensors into the block map the workers consume.
-fn noise_blocks<'a>(
+fn noise_blocks<'a, E: Element>(
     params: &'a mut [Param],
     include: &dyn Fn(usize, &str) -> bool,
-) -> Vec<NoiseBlock<'a>> {
+) -> Vec<NoiseBlock<'a, E>> {
     let mut blocks = Vec::new();
     for (param_idx, p) in params.iter_mut().enumerate() {
         if !include(param_idx, &p.name) {
             continue;
         }
-        for (block_idx, data) in p.tensor.data.chunks_mut(NOISE_BLOCK).enumerate() {
+        let slice = E::slice_mut(p.tensor.raw_mut());
+        for (block_idx, data) in slice.chunks_mut(NOISE_BLOCK).enumerate() {
             blocks.push(NoiseBlock { param_idx, block_idx, data });
         }
     }
@@ -101,9 +95,10 @@ const MIN_BLOCKS_PER_WORKER: usize = 2;
 /// same bits: every block's stream is independent of processing order).
 /// Small stores fall back to the serial path — identical results, no
 /// thread-spawn overhead.
-fn run_block_sweep<Op>(seed: u64, mut blocks: Vec<NoiseBlock<'_>>, workers: usize, op: Op)
+fn run_block_sweep<E, Op>(seed: u64, mut blocks: Vec<NoiseBlock<'_, E>>, workers: usize, op: Op)
 where
-    Op: Fn(&mut NoiseStream, &mut [f32]) + Sync,
+    E: Element,
+    Op: Fn(&mut NoiseStream, &mut [E]) + Sync,
 {
     let noise = BlockNoise::new(seed);
     let workers = workers.min(blocks.len() / MIN_BLOCKS_PER_WORKER);
@@ -128,13 +123,35 @@ where
     });
 }
 
+/// Build the block map for `E` and apply `g(value, z)` elementwise:
+/// decode → f32 math → encode. Per-element independence is what keeps
+/// every worker count (and both precisions) bit-identical.
+fn sweep_elements<E, G>(
+    params: &mut [Param],
+    seed: u64,
+    workers: usize,
+    include: &dyn Fn(usize, &str) -> bool,
+    g: &G,
+) where
+    E: Element,
+    G: Fn(f32, f32) -> f32 + Sync,
+{
+    let blocks = noise_blocks::<E>(params, include);
+    run_block_sweep(seed, blocks, workers, move |stream, data: &mut [E]| {
+        for v in data.iter_mut() {
+            let z = stream.next_normal();
+            *v = E::encode(g(v.decode(), z));
+        }
+    });
+}
+
 /// Ordered collection of model parameters.
 ///
 /// The order is the canonical `param_specs` order from
 /// `python/compile/model.py`, recorded in the manifest; ZO noise is
 /// addressed by `(param_idx, block_idx)` in exactly this order so that
 /// perturbation and update replay line up (Alg. 3 iterates layers in a
-/// fixed order).
+/// fixed order). All tensors share one [`Dtype`].
 #[derive(Clone, Debug)]
 pub struct ParamStore {
     params: Vec<Param>,
@@ -142,55 +159,107 @@ pub struct ParamStore {
     /// fused restore+update) — the traffic metric the fused ZO step
     /// optimizes (4 → 3 sweeps per step; asserted in tests).
     noise_sweeps: u64,
+    /// Uniform storage precision of every tensor.
+    dtype: Dtype,
+    /// Per-store worker override for the noise sweeps; 0 = auto
+    /// (`ADDAX_NOISE_WORKERS`, then `min(cores, 8)`). Stored here — not
+    /// in a process global — so concurrent runs cannot stomp each other.
+    noise_workers: usize,
 }
 
 impl ParamStore {
     pub fn new(params: Vec<Param>) -> Self {
-        Self { params, noise_sweeps: 0 }
+        let dtype = params.first().map(|p| p.tensor.dtype()).unwrap_or_default();
+        for p in &params {
+            assert_eq!(p.tensor.dtype(), dtype, "mixed-dtype store ({})", p.name);
+        }
+        Self { params, noise_sweeps: 0, dtype, noise_workers: 0 }
     }
 
-    /// Build zero-initialized params from (name, shape) specs.
+    /// Build zero-initialized f32 params from (name, shape) specs.
     pub fn zeros(specs: &[(String, Vec<usize>)]) -> Self {
+        Self::zeros_in(specs, Dtype::F32)
+    }
+
+    /// Build zero-initialized params stored at `dtype`.
+    pub fn zeros_in(specs: &[(String, Vec<usize>)], dtype: Dtype) -> Self {
         let params = specs
             .iter()
-            .map(|(n, s)| Param { name: n.clone(), tensor: HostTensor::zeros(s) })
+            .map(|(n, s)| Param { name: n.clone(), tensor: HostTensor::zeros_in(s, dtype) })
             .collect();
         Self::new(params)
     }
 
-    /// Load from the AOT dump: concatenated little-endian f32 in spec order.
-    pub fn load_bin(specs: &[(String, Vec<usize>)], path: &Path) -> Result<Self> {
-        let mut file = std::fs::File::open(path)
-            .with_context(|| format!("opening params file {}", path.display()))?;
-        let mut params = Vec::with_capacity(specs.len());
-        for (name, shape) in specs {
-            let n: usize = shape.iter().product();
-            let mut bytes = vec![0u8; n * 4];
-            file.read_exact(&mut bytes)
-                .with_context(|| format!("reading {name} ({n} f32)"))?;
-            let data: Vec<f32> = bytes
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            params.push(Param { name: name.clone(), tensor: HostTensor::from_vec(shape, data) });
-        }
-        // The file must be fully consumed — a longer file means the specs
-        // and the dump disagree.
-        let mut extra = [0u8; 1];
-        if file.read(&mut extra)? != 0 {
-            bail!("params file {} longer than specs describe", path.display());
-        }
-        Ok(Self::new(params))
+    /// Storage precision of every tensor in the store.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
     }
 
-    /// Save in the same binary format (checkpointing).
+    /// Re-encode the whole store at `dtype` (f32→bf16 rounds nearest-even;
+    /// bf16→f32 is exact). A no-op when the dtype already matches.
+    pub fn to_dtype(mut self, dtype: Dtype) -> Self {
+        if self.dtype != dtype {
+            for p in &mut self.params {
+                p.tensor = p.tensor.to_dtype(dtype);
+            }
+            self.dtype = dtype;
+        }
+        self
+    }
+
+    /// Pin the sweep worker count for this store (0 restores auto).
+    pub fn set_noise_workers(&mut self, n: usize) {
+        self.noise_workers = n;
+    }
+
+    /// Effective worker count for the noise sweeps: this store's pin,
+    /// then `ADDAX_NOISE_WORKERS`, then `min(available cores, 8)`.
+    pub fn noise_workers(&self) -> usize {
+        if self.noise_workers > 0 {
+            self.noise_workers
+        } else {
+            auto_noise_workers()
+        }
+    }
+
+    /// Load from an AOT/checkpoint dump: concatenated little-endian f32
+    /// in spec order (the aot.py format).
+    pub fn load_bin(specs: &[(String, Vec<usize>)], path: &Path) -> Result<Self> {
+        Self::load_bin_in(specs, path, Dtype::F32)
+    }
+
+    /// Load a dump whose elements are stored at `dtype` (f32: 4 bytes
+    /// little-endian, bf16: 2). Pairs with [`ParamStore::save_bin`],
+    /// which writes the store's native precision.
+    pub fn load_bin_in(
+        specs: &[(String, Vec<usize>)],
+        path: &Path,
+        dtype: Dtype,
+    ) -> Result<Self> {
+        match dtype {
+            Dtype::F32 => load_bin_typed::<f32>(specs, path),
+            Dtype::Bf16 => load_bin_typed::<Bf16>(specs, path),
+        }
+    }
+
+    /// Save in the binary dump format at the store's native precision
+    /// (checkpointing; an f32 store writes the exact legacy format).
     pub fn save_bin(&self, path: &Path) -> Result<()> {
         let mut file = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
         for p in &self.params {
-            let mut bytes = Vec::with_capacity(p.tensor.len() * 4);
-            for &v in &p.tensor.data {
-                bytes.extend_from_slice(&v.to_le_bytes());
+            let mut bytes = Vec::with_capacity(p.tensor.len() * self.dtype.bytes());
+            match self.dtype {
+                Dtype::F32 => {
+                    for &v in f32::slice(p.tensor.raw()) {
+                        v.write_le(&mut bytes);
+                    }
+                }
+                Dtype::Bf16 => {
+                    for &v in Bf16::slice(p.tensor.raw()) {
+                        v.write_le(&mut bytes);
+                    }
+                }
             }
             file.write_all(&bytes)?;
         }
@@ -208,6 +277,11 @@ impl ParamStore {
     /// Total scalar parameter count `d`.
     pub fn n_scalars(&self) -> usize {
         self.params.iter().map(|p| p.tensor.len()).sum()
+    }
+
+    /// Bytes of parameter storage actually held (dtype-dependent).
+    pub fn storage_bytes(&self) -> usize {
+        self.n_scalars() * self.dtype.bytes()
     }
 
     /// Full O(d) noise sweeps performed so far (perf accounting).
@@ -235,26 +309,39 @@ impl ParamStore {
         self.params.iter().find(|p| p.name == name)
     }
 
+    /// Dtype-dispatched counter-addressed sweep: apply `g(value, z)` to
+    /// every included element, with `z` replayed block-wise from `seed`.
+    fn noise_sweep<G>(
+        &mut self,
+        seed: u64,
+        workers: usize,
+        include: &dyn Fn(usize, &str) -> bool,
+        g: G,
+    ) where
+        G: Fn(f32, f32) -> f32 + Sync,
+    {
+        self.noise_sweeps += 1;
+        match self.dtype {
+            Dtype::F32 => sweep_elements::<f32, G>(&mut self.params, seed, workers, include, &g),
+            Dtype::Bf16 => sweep_elements::<Bf16, G>(&mut self.params, seed, workers, include, &g),
+        }
+    }
+
     /// In-place Gaussian perturbation: `θ_m ← θ_m + scale·z_m` for every
     /// tensor, with `z_m` replayed block-wise from `seed` (Algorithm 3).
     /// Generation is fused with the apply loop — no transient noise buffer
-    /// — and the blocks run on the configured worker pool.
+    /// — and the blocks run on this store's worker pool.
     pub fn perturb(&mut self, seed: u64, scale: f32) {
-        self.perturb_with_workers(seed, scale, noise_workers());
+        self.perturb_with_workers(seed, scale, self.noise_workers());
     }
 
     /// [`ParamStore::perturb`] with an explicit worker count (1 = serial).
     /// All worker counts produce bit-identical stores: each block's noise
     /// comes from its own counter-addressed stream, independent of which
-    /// thread generates it or in what order.
+    /// thread generates it or in what order — and each element's
+    /// decode/encode depends on nothing but that element.
     pub fn perturb_with_workers(&mut self, seed: u64, scale: f32, workers: usize) {
-        self.noise_sweeps += 1;
-        let blocks = noise_blocks(&mut self.params, &|_, _| true);
-        run_block_sweep(seed, blocks, workers, move |stream, data| {
-            for v in data.iter_mut() {
-                *v += scale * stream.next_normal();
-            }
-        });
+        self.noise_sweep(seed, workers, &|_, _| true, move |v, z| v + scale * z);
     }
 
     /// Perturb only the tensors for which `include(idx, name)` is true.
@@ -271,13 +358,8 @@ impl ParamStore {
         scale: f32,
         include: F,
     ) {
-        self.noise_sweeps += 1;
-        let blocks = noise_blocks(&mut self.params, &include);
-        run_block_sweep(seed, blocks, noise_workers(), move |stream, data| {
-            for v in data.iter_mut() {
-                *v += scale * stream.next_normal();
-            }
-        });
+        let workers = self.noise_workers();
+        self.noise_sweep(seed, workers, &include, move |v, z| v + scale * z);
     }
 
     /// The ZO half of the Addax/MeZO update (Alg. 1 lines 13-17):
@@ -295,11 +377,14 @@ impl ParamStore {
     /// single O(d) pass, replaying `z` once.
     ///
     /// Elementwise it computes `(v + ε·z) + (−lr·coeff·g⁰)·z` — two
-    /// dependent adds, not one pre-combined scale — so the result is
-    /// bit-identical to the unfused `perturb(seed, ε)` followed by
-    /// `zo_update(seed, lr, coeff, g0)`, while touching parameter memory
-    /// once instead of twice. This cuts the ZO step from 4 O(d) sweeps
-    /// (+ε, −2ε, +ε restore, update) to 3 — ~25% of MeZO's dominant cost.
+    /// dependent adds, not one pre-combined scale — so on an f32 store the
+    /// result is bit-identical to the unfused `perturb(seed, ε)` followed
+    /// by `zo_update(seed, lr, coeff, g0)`, while touching parameter
+    /// memory once instead of twice. This cuts the ZO step from 4 O(d)
+    /// sweeps (+ε, −2ε, +ε restore, update) to 3 — ~25% of MeZO's
+    /// dominant cost. On a bf16 store the fused form additionally rounds
+    /// **once** instead of twice, so it is the *defining* semantics of
+    /// the half-precision ZO step (EXPERIMENTS.md §Precision).
     pub fn restore_and_zo_update(&mut self, seed: u64, eps: f32, lr: f32, coeff: f32, g0: f32) {
         self.restore_and_zo_update_subset(seed, eps, lr, coeff, g0, |_, _| true);
     }
@@ -315,15 +400,9 @@ impl ParamStore {
         g0: f32,
         include: F,
     ) {
-        self.noise_sweeps += 1;
         let delta = -lr * coeff * g0;
-        let blocks = noise_blocks(&mut self.params, &include);
-        run_block_sweep(seed, blocks, noise_workers(), move |stream, data| {
-            for v in data.iter_mut() {
-                let z = stream.next_normal();
-                *v = (*v + eps * z) + delta * z;
-            }
-        });
+        let workers = self.noise_workers();
+        self.noise_sweep(seed, workers, &include, move |v, z| (v + eps * z) + delta * z);
     }
 
     /// The FO half: `θ_m ← θ_m − lr·coeff·g_m`, one tensor at a time
@@ -341,16 +420,17 @@ impl ParamStore {
     }
 
     /// Squared L2 distance to another store (tests, theory experiments).
+    /// Values compare in f32, so stores of different dtypes are
+    /// commensurable (bf16 widens exactly).
     pub fn dist_sq(&self, other: &ParamStore) -> f64 {
         self.params
             .iter()
             .zip(other.params.iter())
             .map(|(a, b)| {
                 a.tensor
-                    .data
-                    .iter()
-                    .zip(b.tensor.data.iter())
-                    .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                    .iter_f32()
+                    .zip(b.tensor.iter_f32())
+                    .map(|(x, y)| ((x - y) as f64).powi(2))
                     .sum::<f64>()
             })
             .sum()
@@ -359,6 +439,28 @@ impl ParamStore {
     pub fn all_finite(&self) -> bool {
         self.params.iter().all(|p| p.tensor.all_finite())
     }
+}
+
+fn load_bin_typed<E: Element>(specs: &[(String, Vec<usize>)], path: &Path) -> Result<ParamStore> {
+    let mut file = std::fs::File::open(path)
+        .with_context(|| format!("opening params file {}", path.display()))?;
+    let mut params = Vec::with_capacity(specs.len());
+    for (name, shape) in specs {
+        let n: usize = shape.iter().product();
+        let mut bytes = vec![0u8; n * E::BYTES];
+        file.read_exact(&mut bytes).with_context(|| {
+            format!("reading {name} ({n} x {} byte {})", E::BYTES, E::DTYPE.label())
+        })?;
+        let data: Vec<E> = bytes.chunks_exact(E::BYTES).map(E::read_le).collect();
+        params.push(Param { name: name.clone(), tensor: HostTensor::from_elems(shape, data) });
+    }
+    // The file must be fully consumed — a longer file means the specs
+    // and the dump disagree.
+    let mut extra = [0u8; 1];
+    if file.read(&mut extra)? != 0 {
+        bail!("params file {} longer than specs describe", path.display());
+    }
+    Ok(ParamStore::new(params))
 }
 
 #[cfg(test)]
@@ -387,6 +489,20 @@ mod tests {
         let s = ParamStore::zeros(&specs());
         assert_eq!(s.len(), 3);
         assert_eq!(s.n_scalars(), 6 + 5 + 8);
+        assert_eq!(s.dtype(), Dtype::F32);
+        assert_eq!(s.storage_bytes(), 19 * 4);
+        let b = ParamStore::zeros_in(&specs(), Dtype::Bf16);
+        assert_eq!(b.dtype(), Dtype::Bf16);
+        assert_eq!(b.storage_bytes(), 19 * 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "mixed-dtype store")]
+    fn mixed_dtype_store_is_rejected() {
+        ParamStore::new(vec![
+            Param { name: "a".into(), tensor: HostTensor::zeros(&[2]) },
+            Param { name: "b".into(), tensor: HostTensor::zeros_in(&[2], Dtype::Bf16) },
+        ]);
     }
 
     #[test]
@@ -403,8 +519,30 @@ mod tests {
         s.perturb(seed, -2.0 * eps);
         s.perturb(seed, eps);
         for (a, b) in s.iter().zip(before.iter()) {
-            for (x, y) in a.tensor.data.iter().zip(b.tensor.data.iter()) {
+            for (x, y) in a.tensor.iter_f32().zip(b.tensor.iter_f32()) {
                 assert!((x - y).abs() <= 1e-6, "{} vs {}", x, y);
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_probe_roundtrip_drift_is_quantization_bounded() {
+        // On a bf16 store every sweep re-rounds, so +ε, −2ε, +ε is NOT
+        // exact — the drift must stay within a few ulps of the stored
+        // magnitudes (|θ| ≲ 2 here ⇒ ulp ≤ 2^-7; three roundings ⇒
+        // well under 0.05 per element). Use an ε above the quantization
+        // step so the probes actually move the stored values.
+        let mut s = ParamStore::zeros_in(&big_specs(), Dtype::Bf16);
+        s.perturb(123, 0.5);
+        let before = s.clone();
+        let seed = 777;
+        let eps = 1e-2f32;
+        s.perturb(seed, eps);
+        s.perturb(seed, -2.0 * eps);
+        s.perturb(seed, eps);
+        for (a, b) in s.iter().zip(before.iter()) {
+            for (x, y) in a.tensor.iter_f32().zip(b.tensor.iter_f32()) {
+                assert!((x - y).abs() <= 0.05, "bf16 roundtrip drift {} vs {}", x, y);
             }
         }
     }
@@ -419,21 +557,68 @@ mod tests {
         for (pi, p) in s.iter().enumerate() {
             let mut z = vec![0.0f32; p.tensor.len()];
             noise.fill_param(pi, &mut z);
-            for (&v, &zi) in p.tensor.data.iter().zip(z.iter()) {
+            for (v, &zi) in p.tensor.iter_f32().zip(z.iter()) {
                 assert!((v - (-0.1 * 0.5 * 2.0 * zi)).abs() < 1e-7);
             }
         }
     }
 
     #[test]
+    fn bf16_perturb_is_the_rounded_f32_sweep() {
+        // The bf16 sweep is defined as encode(decode(v) + scale·z): check
+        // it against the replayed z and explicit Bf16 rounding.
+        let mut s = ParamStore::zeros_in(&big_specs(), Dtype::Bf16);
+        s.perturb(7, 0.5);
+        let reference = s.clone();
+        let (seed, scale) = (41u64, 0.3f32);
+        s.perturb(seed, scale);
+        let noise = BlockNoise::new(seed);
+        for (pi, (p, r)) in s.iter().zip(reference.iter()).enumerate() {
+            let mut z = vec![0.0f32; p.tensor.len()];
+            noise.fill_param(pi, &mut z);
+            for ((got, prev), &zi) in
+                p.tensor.iter_f32().zip(r.tensor.iter_f32()).zip(z.iter())
+            {
+                let want = crate::tensor::Bf16::from_f32(prev + scale * zi).to_f32();
+                assert_eq!(got, want, "param {pi}");
+            }
+        }
+    }
+
+    #[test]
     fn parallel_perturb_bit_identical_at_every_worker_count() {
-        let mut serial = ParamStore::zeros(&big_specs());
-        serial.perturb_with_workers(5, 0.7, 1);
-        for workers in [2, 3, 4, 8, 16] {
-            let mut par = ParamStore::zeros(&big_specs());
-            par.perturb_with_workers(5, 0.7, workers);
-            for (a, b) in par.iter().zip(serial.iter()) {
-                assert_eq!(a.tensor.data, b.tensor.data, "workers={workers}");
+        for dtype in [Dtype::F32, Dtype::Bf16] {
+            let mut serial = ParamStore::zeros_in(&big_specs(), dtype);
+            serial.perturb_with_workers(5, 0.7, 1);
+            for workers in [2, 3, 4, 8, 16] {
+                let mut par = ParamStore::zeros_in(&big_specs(), dtype);
+                par.perturb_with_workers(5, 0.7, workers);
+                for (a, b) in par.iter().zip(serial.iter()) {
+                    assert_eq!(a.tensor, b.tensor, "dtype={dtype:?} workers={workers}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_fused_update_bit_identical_across_worker_counts() {
+        // The satellite contract: perturb AND restore_and_zo_update on a
+        // bf16 store agree bitwise at workers ∈ {1, 4, 8}.
+        let (seed, eps, lr, coeff, g0) = (33u64, 1e-2f32, 0.05f32, 0.5f32, 1.3f32);
+        let run = |workers: usize| -> ParamStore {
+            let mut s = ParamStore::zeros_in(&big_specs(), Dtype::Bf16);
+            s.set_noise_workers(workers);
+            s.perturb(3, 1.0);
+            s.perturb(seed, eps);
+            s.perturb(seed, -2.0 * eps);
+            s.restore_and_zo_update(seed, eps, lr, coeff, g0);
+            s
+        };
+        let reference = run(1);
+        for workers in [4usize, 8] {
+            let par = run(workers);
+            for (a, b) in par.iter().zip(reference.iter()) {
+                assert_eq!(a.tensor, b.tensor, "workers={workers}");
             }
         }
     }
@@ -454,7 +639,7 @@ mod tests {
         two_pass.perturb(seed, eps);
         two_pass.zo_update(seed, lr, coeff, g0);
         for (a, b) in fused.iter().zip(two_pass.iter()) {
-            assert_eq!(a.tensor.data, b.tensor.data);
+            assert_eq!(a.tensor, b.tensor);
         }
     }
 
@@ -467,9 +652,9 @@ mod tests {
         full.perturb(9, 0.3);
         let mut sub = ParamStore::zeros(&big_specs());
         sub.perturb_subset(9, 0.3, |idx, _| idx != 1);
-        assert_eq!(sub.get(0).tensor.data, full.get(0).tensor.data);
-        assert!(sub.get(1).tensor.data.iter().all(|&v| v == 0.0));
-        assert_eq!(sub.get(2).tensor.data, full.get(2).tensor.data);
+        assert_eq!(sub.get(0).tensor, full.get(0).tensor);
+        assert!(sub.get(1).tensor.iter_f32().all(|v| v == 0.0));
+        assert_eq!(sub.get(2).tensor, full.get(2).tensor);
     }
 
     #[test]
@@ -480,6 +665,20 @@ mod tests {
         s.perturb_subset(1, 0.1, |i, _| i == 0);
         s.restore_and_zo_update(1, 0.1, 0.01, 1.0, 0.5);
         assert_eq!(s.noise_sweeps(), 3);
+    }
+
+    #[test]
+    fn per_store_noise_workers_do_not_leak_across_stores() {
+        let mut a = ParamStore::zeros(&specs());
+        let b = ParamStore::zeros(&specs());
+        a.set_noise_workers(3);
+        assert_eq!(a.noise_workers(), 3);
+        // The pin is store-local (the old process-global raced here).
+        assert_ne!(b.noise_workers(), 0, "auto resolution must yield ≥ 1");
+        let mut c = a.clone();
+        c.set_noise_workers(0);
+        assert_ne!(c.noise_workers(), 0);
+        assert_eq!(a.noise_workers(), 3);
     }
 
     #[test]
@@ -496,6 +695,45 @@ mod tests {
     }
 
     #[test]
+    fn save_load_roundtrip_bf16() {
+        // A bf16 store writes 2-byte elements and loads back bit-exactly.
+        let dir = std::env::temp_dir().join("addax_test_params_bf16");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p16.bin");
+        let mut s = ParamStore::zeros_in(&specs(), Dtype::Bf16);
+        s.perturb(5, 1.0);
+        s.save_bin(&path).unwrap();
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            (s.n_scalars() * 2) as u64,
+            "bf16 dump must be 2 bytes per element"
+        );
+        let loaded = ParamStore::load_bin_in(&specs(), &path, Dtype::Bf16).unwrap();
+        assert_eq!(loaded.dtype(), Dtype::Bf16);
+        for (a, b) in s.iter().zip(loaded.iter()) {
+            assert_eq!(a.tensor, b.tensor);
+        }
+        // An f32 read of a bf16 dump must fail loudly (wrong size).
+        assert!(ParamStore::load_bin(&specs(), &path).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn to_dtype_roundtrips_and_rounds() {
+        let mut s = ParamStore::zeros(&specs());
+        s.perturb(11, 1.0);
+        let b = s.clone().to_dtype(Dtype::Bf16);
+        assert_eq!(b.dtype(), Dtype::Bf16);
+        // Widening back is exact.
+        let wide = b.clone().to_dtype(Dtype::F32);
+        assert_eq!(wide.dist_sq(&b), 0.0);
+        // Quantization error is bounded by ~2^-8 relative.
+        let err = s.dist_sq(&b).sqrt();
+        let norm = crate::tensor::global_norm(&s.tensors().cloned().collect::<Vec<_>>());
+        assert!(err <= 0.01 * norm.max(1.0), "err {err} vs norm {norm}");
+    }
+
+    #[test]
     fn load_rejects_wrong_size() {
         let dir = std::env::temp_dir().join("addax_test_params2");
         std::fs::create_dir_all(&dir).unwrap();
@@ -507,12 +745,14 @@ mod tests {
 
     #[test]
     fn fo_update_applies_per_tensor() {
-        let mut s = ParamStore::zeros(&specs());
-        let grads: Vec<Vec<f32>> = s.iter().map(|p| vec![1.0; p.tensor.len()]).collect();
-        s.fo_update_all(0.1, 0.5, &grads);
-        for p in s.iter() {
-            for &v in &p.tensor.data {
-                assert!((v + 0.05).abs() < 1e-7);
+        for dtype in [Dtype::F32, Dtype::Bf16] {
+            let mut s = ParamStore::zeros_in(&specs(), dtype);
+            let grads: Vec<Vec<f32>> = s.iter().map(|p| vec![1.0; p.tensor.len()]).collect();
+            s.fo_update_all(0.1, 0.5, &grads);
+            for p in s.iter() {
+                for v in p.tensor.iter_f32() {
+                    assert!((v + 0.05).abs() < 1e-3, "{dtype:?}: {v}");
+                }
             }
         }
     }

@@ -10,7 +10,7 @@ use anyhow::Result;
 
 use crate::data::{self, generate, Example};
 use crate::jsonlite::{obj, Json};
-use crate::memory::{footprint, geometry, Method, Workload, BS_GRID};
+use crate::memory::{footprint, geometry, Dtype, Method, Workload, BS_GRID};
 use crate::metrics::Table;
 use crate::optim::OptSpec;
 use crate::sched::RunSpec;
@@ -18,7 +18,8 @@ use crate::zorng::NoiseStream;
 
 use super::{emit, plan_for, CellSpec, Harness, MethodKind, RunPlan};
 
-const FP16: f64 = 2.0;
+/// The paper's fp16 weight-storage profile: 2 bytes/element (bf16 here).
+const FP16: Dtype = Dtype::Bf16;
 
 /// Shorthand: a sealed spec for one figure cell on the harness backend.
 fn fig_cell(h: &Harness, task: &str, opt: OptSpec, steps: usize, seed: u64) -> RunSpec {
@@ -91,7 +92,7 @@ pub fn fig3(h: &mut Harness) -> Result<()> {
         let adam_acc = rows[&specs[2 * i + 1].run_id].outcome.test_acc;
         let l = task.lengths.l_max;
         let ip_mem = footprint(&geometry::OPT_13B, Method::IpSgd, Workload::fo(2, l), FP16);
-        let adam_mem = footprint(&geometry::OPT_13B, Method::Adam, Workload::fo(8, l), 4.0);
+        let adam_mem = footprint(&geometry::OPT_13B, Method::Adam, Workload::fo(8, l), Dtype::F32);
         right.row(vec![
             tname.to_string(),
             format!("{:.1}", 100.0 * ip_acc),

@@ -119,11 +119,17 @@ impl Harness {
             // `repro` runs end-to-end (and in CI) without `make artifacts`.
             backend: Backend::auto(),
             workers: 4,
-            // 5×80 GB: the paper's Adam-on-OPT-13B footprint (~325 GB at
-            // fp32, Table 12 note) must co-exist with the rest of a
-            // table's runs, exactly like its 5-GPU Adam baselines.
+            // 8×80 GB: the packing budget must admit the *largest single
+            // priced run*. Cells are vetted against the paper device at
+            // the fp16 profile (`tables::FP16`), but the laptop-scale
+            // runs train f32 stores and now price at their real dtype —
+            // the biggest (Llama-2-70B IP-SGD on a long task) is ~460 GB
+            // at 4 B/param, and Adam-on-OPT-13B is ~325 GB fp32, so
+            // 640 GB covers every table with headroom. This knob only
+            // shapes concurrency waves; paper-device OOM verdicts come
+            // from `memory_cell`, not from this budget.
             budget_gb: 80.0,
-            gpus: 5,
+            gpus: 8,
             manifest_path: std::path::PathBuf::from("results/sweep/manifest.jsonl"),
         }
     }

@@ -16,14 +16,15 @@ use anyhow::Result;
 use crate::data::{self, TaskDef};
 use crate::jsonlite::{obj, Json};
 use crate::memory::{
-    footprint, geometry, max_batch_in_grid, Device, Method, Workload,
+    footprint, geometry, max_batch_in_grid, Device, Dtype, Method, Workload,
 };
 use crate::metrics::Table;
 use crate::sched::RunSpec;
 
 use super::{emit, plan_for, CellSpec, Harness, MethodKind};
 
-const FP16: f64 = 2.0;
+/// The paper's fp16 weight-storage profile: 2 bytes/element (bf16 here).
+const FP16: Dtype = Dtype::Bf16;
 
 /// Addax's (K¹, K⁰) across all OPT tables (App. D.6).
 const K1: usize = 4;
@@ -51,7 +52,7 @@ fn memory_cell(
     match method {
         MethodKind::ZeroShot => ("-".into(), "-".into()),
         MethodKind::Adam => {
-            let f = footprint(g, Method::Adam, Workload::fo(8, l), 4.0);
+            let f = footprint(g, Method::Adam, Workload::fo(8, l), Dtype::F32);
             (format!("{:.0}", f.gb()), "8".into())
         }
         MethodKind::Addax => {
@@ -204,9 +205,12 @@ fn render_opt_table(spec: &TableSpec, h: &mut Harness) -> Result<()> {
         "# {} — {}\n\nGeometry: {} on {}×{} ({} GB total). Memory/BS from the \
          analytic model + App. D.6 grid; accuracy & time measured at laptop \
          scale (model `{}`, {} backend, {} FO steps, MeZO ×{}) via the sweep \
-         scheduler's manifest. `*` = OOM even at the smallest grid batch; \
-         time `-` = no timing telemetry (table regenerated from the \
-         manifest alone).\n\n## Accuracy / F1 (%)\n{}\n## Simulated memory (GB)\n{}\n\
+         scheduler's manifest. Precision: memory columns price the paper's \
+         fp16 profile — `{}` weight storage, {} B/param (Adam fp32); the \
+         laptop-scale cells train `{}` stores. `*` = OOM even at the \
+         smallest grid batch; time `-` = no timing telemetry (table \
+         regenerated from the manifest alone).\n\n## Accuracy / F1 (%)\n{}\n\
+         ## Simulated memory (GB)\n{}\n\
          ## Batch size (grid-searched)\n{}\n## Wall-clock to best validation\n{}\n",
         spec.id,
         spec.title,
@@ -218,6 +222,9 @@ fn render_opt_table(spec: &TableSpec, h: &mut Harness) -> Result<()> {
         h.backend.label(),
         base_steps,
         zo_mult,
+        FP16.label(),
+        FP16.bytes(),
+        Dtype::F32.label(),
         acc_tbl.render(),
         mem_tbl.render(),
         bs_tbl.render(),
@@ -401,12 +408,13 @@ pub fn table11(h: &mut Harness) -> Result<()> {
     }
     // RoBERTa-large memory footprint context (fp32, fits any GPU).
     let g = geometry::ROBERTA_LARGE;
-    let mezo = footprint(&g, Method::MeZo, Workload::zo(64, 60), 4.0);
-    let adam = footprint(&g, Method::Adam, Workload::fo(8, 60), 4.0);
+    let mezo = footprint(&g, Method::MeZo, Workload::zo(64, 60), Dtype::F32);
+    let adam = footprint(&g, Method::Adam, Workload::fo(8, 60), Dtype::F32);
     let md = format!(
         "# table11 — RoBERTa-large track (Fig. 7)\n\nMasked-LM preset `mlm` \
          (bidirectional), k-shot style tasks. RoBERTa-large simulated \
-         footprints: MeZO bs64 {:.1} GB, Adam bs8 {:.1} GB.\n\n{}\n",
+         footprints (f32 storage, the paper's RoBERTa precision): MeZO bs64 \
+         {:.1} GB, Adam bs8 {:.1} GB.\n\n{}\n",
         mezo.gb(),
         adam.gb(),
         tbl.render()

@@ -50,7 +50,7 @@ impl QuadraticExec {
         let mut i = 0;
         let mut acc = 0.0f64;
         for t in params.tensors() {
-            for &v in &t.data {
+            for v in t.iter_f32() {
                 let d = (v - self.target[i]) as f64;
                 acc += 0.5 * self.curvature[i] as f64 * d * d;
                 i += 1;
@@ -64,7 +64,7 @@ impl QuadraticExec {
         let mut i = 0;
         let mut acc = 0.0f64;
         for t in params.tensors() {
-            for &v in &t.data {
+            for v in t.iter_f32() {
                 let g = self.curvature[i] as f64 * (v - self.target[i]) as f64;
                 acc += g * g;
                 i += 1;
@@ -78,7 +78,7 @@ impl QuadraticExec {
         let mut i = 0;
         let mut acc = 0.0f64;
         for t in params.tensors() {
-            for &v in &t.data {
+            for v in t.iter_f32() {
                 let d = (v - self.target[i]) as f64;
                 acc += d * d;
                 i += 1;
@@ -97,7 +97,7 @@ impl QuadraticExec {
         let mut g = Vec::new();
         for (param_idx, t) in params.tensors().enumerate() {
             g.clear();
-            for &v in &t.data {
+            for v in t.iter_f32() {
                 g.push(self.curvature[i] * (v - self.target[i]));
                 i += 1;
             }
@@ -119,7 +119,7 @@ impl QuadraticExec {
         let mut i = 0;
         let mut acc = 0.0f64;
         for t in params.tensors() {
-            for &v in &t.data {
+            for v in t.iter_f32() {
                 let d = (v - self.target[i]) as f64;
                 acc += 0.5 * self.curvature[i] as f64 * d * d;
                 acc += self.sigma as f64 * noise.next_normal() as f64 * v as f64;
@@ -150,7 +150,7 @@ impl ModelExec for QuadraticExec {
             let mut noise = NoiseStream::new(self.example_seed(batch, r));
             let mut i = 0;
             for t in params.tensors() {
-                for &v in &t.data {
+                for v in t.iter_f32() {
                     let g = self.curvature[i] * (v - self.target[i])
                         + self.sigma * noise.next_normal();
                     flat[i] += g * inv_b;
@@ -201,9 +201,11 @@ mod tests {
         let eps = 1e-3f32;
         for i in 0..4 {
             let mut p_plus = p.clone();
-            p_plus.get_mut(0).tensor.data[i] += eps;
+            let t = &mut p_plus.get_mut(0).tensor;
+            t.set(i, t.get(i) + eps);
             let mut p_minus = p.clone();
-            p_minus.get_mut(0).tensor.data[i] -= eps;
+            let t = &mut p_minus.get_mut(0).tensor;
+            t.set(i, t.get(i) - eps);
             let lp = exec.forward(&p_plus, &b).unwrap().mean_loss();
             let lm = exec.forward(&p_minus, &b).unwrap().mean_loss();
             let fd = (lp - lm) / (2.0 * eps as f64);
@@ -262,7 +264,7 @@ mod tests {
     fn suboptimality_zero_at_target() {
         let exec = QuadraticExec::new(5, 1.0, 4.0, 0.0, 2);
         let mut p = store(5);
-        p.get_mut(0).tensor.data.copy_from_slice(&exec.target);
+        p.get_mut(0).tensor.copy_from_f32(&exec.target);
         assert!(exec.suboptimality(&p) < 1e-12);
         assert!(exec.grad_norm_sq(&p) < 1e-12);
     }

@@ -239,8 +239,13 @@ impl XlaExec {
 
         let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(params.len() + 2);
         for p in params.iter() {
+            // The artifacts compute in f32: widen on upload (borrowed,
+            // zero-copy for an f32 store; decoded for bf16 — the f32
+            // staging buffer is transient, one tensor at a time, so the
+            // resident store keeps its dtype's footprint).
+            let host = p.tensor.as_f32();
             args.push(self.client.buffer_from_host_buffer(
-                &p.tensor.data,
+                host.as_ref(),
                 &p.tensor.shape,
                 None,
             )?);

@@ -39,7 +39,9 @@ pub struct Wave {
 /// methods price as inference at the task's `L_max`, Addax as the
 /// two-phase mixed workload with the FO side capped at `price_lt`
 /// (default: the 60th percentile of `L_max`), FO methods as a full
-/// backward at `L_max`. Adam prices in fp32, everything else fp16.
+/// backward at `L_max`. Precision is the run's storage dtype — the same
+/// bytes the live `ParamStore` allocates — except Adam, which always
+/// prices fp32 (the paper's Adam runs fp32; `footprint` enforces it).
 pub fn price(spec: &RunSpec) -> Result<f64> {
     let g = geometry::by_name(&spec.geometry)
         .with_context(|| format!("unknown geometry {:?}", spec.geometry))?;
@@ -55,8 +57,7 @@ pub fn price(spec: &RunSpec) -> Result<f64> {
         }
         _ => Workload::fo(b, l),
     };
-    let bytes_per = if method == Method::Adam { 4.0 } else { 2.0 };
-    Ok(footprint(&g, method, wl, bytes_per).total)
+    Ok(footprint(&g, method, wl, spec.dtype).total)
 }
 
 /// Price every run and pack them into waves under `budget_bytes`.
@@ -107,9 +108,13 @@ mod tests {
     use super::super::spec::Backend;
     use super::*;
     use crate::optim::OptSpec;
+    use crate::tensor::Dtype;
 
+    /// A paper-profile (2-byte storage) run, like the tables price.
     fn run(opt: &str, task: &str, seed: u64) -> RunSpec {
-        RunSpec::new(Backend::Mock, task, OptSpec::named(opt), 10, seed)
+        let mut s = RunSpec::new(Backend::Mock, task, OptSpec::named(opt), 10, seed);
+        s.dtype = Dtype::Bf16;
+        s.sealed()
     }
 
     #[test]
@@ -125,6 +130,24 @@ mod tests {
         // zero-shot prices as inference
         let zs = price(&run("zero-shot", "multirc", 0)).unwrap();
         assert!(zs <= mezo * 1.01);
+    }
+
+    #[test]
+    fn price_follows_the_storage_dtype() {
+        let half = price(&run("mezo", "sst2", 0)).unwrap();
+        let mut wide_spec = run("mezo", "sst2", 0);
+        wide_spec.dtype = Dtype::F32;
+        let wide = price(&wide_spec.sealed()).unwrap();
+        assert!(wide > 1.5 * half, "f32 {wide} vs bf16 {half}");
+        // Adam prices fp32 regardless of the store dtype.
+        let mut adam16 = run("adam", "sst2", 0);
+        adam16.dtype = Dtype::Bf16;
+        let mut adam32 = run("adam", "sst2", 0);
+        adam32.dtype = Dtype::F32;
+        assert_eq!(
+            price(&adam16.sealed()).unwrap(),
+            price(&adam32.sealed()).unwrap()
+        );
     }
 
     #[test]

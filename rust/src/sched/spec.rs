@@ -20,11 +20,15 @@
 //! seeds = "0, 1"
 //! lrs = "0.07"              # optional; empty keeps per-optimizer defaults
 //! epss = ""                 # optional
+//! dtypes = "f32, bf16"      # optional storage precisions (default f32)
 //! ```
 //!
 //! Expansion is a fixed nested iteration (optimizer → task → seed → lr →
-//! eps), so run ids and derived seeds are independent of worker count,
-//! resume history, and everything else that varies between invocations.
+//! eps → dtype), so run ids and derived seeds are independent of worker
+//! count, resume history, and everything else that varies between
+//! invocations. The storage dtype is part of run identity: an f32 and a
+//! bf16 cell of the same grid point are distinct runs with distinct
+//! train seeds, and the memory model prices each at its own precision.
 //! Each run's training seed is `derive_seed(grid_seed, fnv1a(run_id))` —
 //! a pure function of the run's identity, so the same logical run
 //! requested by two different experiments replays identically (and its
@@ -37,6 +41,7 @@ use crate::data::{self, TaskDef};
 use crate::jsonlite::{obj, Json};
 use crate::memory::geometry;
 use crate::optim::OptSpec;
+use crate::tensor::Dtype;
 use crate::zorng::derive_seed;
 
 /// `lt` sentinel: no length partitioning (Addax-WA / single-phase runs).
@@ -108,6 +113,9 @@ pub struct RunSpec {
     pub catalog: String,
     pub task: String,
     pub optimizer: OptSpec,
+    /// Parameter-store precision (weights storage; math stays f32).
+    /// Part of run identity and of memory pricing.
+    pub dtype: Dtype,
     /// Training steps; 0 = evaluation-only (zero-shot).
     pub steps: usize,
     /// The grid's seed coordinate (also the dataset seed).
@@ -148,6 +156,7 @@ impl RunSpec {
             catalog: "opt".to_string(),
             task: task.to_string(),
             optimizer,
+            dtype: Dtype::F32,
             steps,
             grid_seed,
             train_seed: 0,
@@ -188,13 +197,14 @@ impl RunSpec {
             j.dump()
         };
         self.run_id = format!(
-            "{}.{}.{}.{}.s{}.t{}.h{:08x}",
+            "{}.{}.{}.{}.s{}.t{}.{}.h{:08x}",
             self.backend.label(),
             self.model_key,
             self.task,
             self.optimizer.id(),
             self.grid_seed,
             self.steps,
+            self.dtype.label(),
             fnv1a(&ident) as u32,
         );
         self.train_seed = derive_seed(self.grid_seed, fnv1a(&self.run_id));
@@ -222,6 +232,7 @@ impl RunSpec {
             ("catalog", Json::from(self.catalog.clone())),
             ("task", Json::from(self.task.clone())),
             ("optimizer", self.optimizer.to_json()),
+            ("dtype", Json::from(self.dtype.label())),
             ("steps", Json::from(self.steps)),
             ("grid_seed", Json::from(self.grid_seed.to_string())),
             ("train_seed", Json::from(self.train_seed.to_string())),
@@ -260,6 +271,8 @@ pub struct SweepSpec {
     pub lrs: Vec<f32>,
     /// SPSA ε grid; empty keeps the default.
     pub epss: Vec<f32>,
+    /// Storage-precision grid (`"f32"`/`"bf16"`); default f32 only.
+    pub dtypes: Vec<String>,
     pub steps: usize,
     /// ZO-only optimizers run `zo_mult ×` the step budget.
     pub zo_mult: usize,
@@ -289,6 +302,7 @@ impl SweepSpec {
             seeds: cfg.u64_list_or("grid.seeds", &[0])?,
             lrs: cfg.f32_list_or("grid.lrs", &[])?,
             epss: cfg.f32_list_or("grid.epss", &[])?,
+            dtypes: cfg.list_or("grid.dtypes", &["f32"]),
             steps: cfg.usize_or("sweep.steps", 100)?,
             zo_mult: cfg.usize_or("sweep.zo_mult", 3)?.max(1),
             eval_examples: cfg.usize_or("sweep.eval_examples", 100)?,
@@ -306,6 +320,9 @@ impl SweepSpec {
         for name in &spec.optimizers {
             OptSpec::named(name).build()?;
         }
+        for d in &spec.dtypes {
+            Dtype::parse(d)?;
+        }
         for task in &spec.tasks {
             let found = match spec.catalog.as_str() {
                 "roberta" => data::roberta_task(task).is_some(),
@@ -318,11 +335,15 @@ impl SweepSpec {
         if spec.optimizers.is_empty() || spec.tasks.is_empty() || spec.seeds.is_empty() {
             bail!("empty sweep grid (need ≥1 optimizer, task and seed)");
         }
+        if spec.dtypes.is_empty() {
+            bail!("empty dtype grid (want e.g. \"f32\" or \"f32, bf16\")");
+        }
         Ok(spec)
     }
 
     /// Expand the grid in fixed order (optimizer → task → seed → lr →
-    /// eps), deduplicated by run id (e.g. zero-shot ignores the lr grid).
+    /// eps → dtype), deduplicated by run id (e.g. zero-shot ignores the
+    /// lr grid).
     pub fn expand(&self) -> Result<Vec<RunSpec>> {
         let lrs: Vec<Option<f32>> = if self.lrs.is_empty() {
             vec![None]
@@ -334,6 +355,11 @@ impl SweepSpec {
         } else {
             self.epss.iter().copied().map(Some).collect()
         };
+        let dtypes: Vec<Dtype> = self
+            .dtypes
+            .iter()
+            .map(|d| Dtype::parse(d))
+            .collect::<Result<_>>()?;
         let mut out: Vec<RunSpec> = Vec::new();
         let mut seen = std::collections::BTreeSet::new();
         for opt_name in &self.optimizers {
@@ -341,38 +367,42 @@ impl SweepSpec {
                 for &seed in &self.seeds {
                     for &lr in &lrs {
                         for &eps in &epss {
-                            let mut o = OptSpec::named(opt_name);
-                            if let Some(lr) = lr {
-                                o.lr = lr;
-                            }
-                            if let Some(eps) = eps {
-                                o.eps = eps;
-                            }
-                            let steps = if opt_name == "zero-shot" {
-                                0
-                            } else if o.is_zo_only() {
-                                self.steps * self.zo_mult
-                            } else {
-                                self.steps
-                            };
-                            let task_def = match self.catalog.as_str() {
-                                "roberta" => data::roberta_task(task),
-                                _ => data::opt_task(task),
-                            }
-                            .expect("validated in from_config");
-                            let mut r = RunSpec::new(self.backend, task, o, steps, seed);
-                            r.model_key = self.model_key.clone();
-                            r.geometry = self.geometry.clone();
-                            r.catalog = self.catalog.clone();
-                            r.eval_examples = self.eval_examples;
-                            r.lt_auto = self.lt_auto && opt_name == "addax" && task_def.long;
-                            r.mock_dim = self.mock_dim;
-                            r.n_train = self.n_train;
-                            r.n_val = self.n_val;
-                            r.n_test = self.n_test;
-                            let r = r.sealed();
-                            if seen.insert(r.run_id.clone()) {
-                                out.push(r);
+                            for &dtype in &dtypes {
+                                let mut o = OptSpec::named(opt_name);
+                                if let Some(lr) = lr {
+                                    o.lr = lr;
+                                }
+                                if let Some(eps) = eps {
+                                    o.eps = eps;
+                                }
+                                let steps = if opt_name == "zero-shot" {
+                                    0
+                                } else if o.is_zo_only() {
+                                    self.steps * self.zo_mult
+                                } else {
+                                    self.steps
+                                };
+                                let task_def = match self.catalog.as_str() {
+                                    "roberta" => data::roberta_task(task),
+                                    _ => data::opt_task(task),
+                                }
+                                .expect("validated in from_config");
+                                let mut r = RunSpec::new(self.backend, task, o, steps, seed);
+                                r.model_key = self.model_key.clone();
+                                r.geometry = self.geometry.clone();
+                                r.catalog = self.catalog.clone();
+                                r.dtype = dtype;
+                                r.eval_examples = self.eval_examples;
+                                r.lt_auto =
+                                    self.lt_auto && opt_name == "addax" && task_def.long;
+                                r.mock_dim = self.mock_dim;
+                                r.n_train = self.n_train;
+                                r.n_val = self.n_val;
+                                r.n_test = self.n_test;
+                                let r = r.sealed();
+                                if seen.insert(r.run_id.clone()) {
+                                    out.push(r);
+                                }
                             }
                         }
                     }
@@ -447,6 +477,38 @@ mod tests {
         let priced = priced.sealed();
         assert_eq!(base.run_id, priced.run_id);
         assert_eq!(base.train_seed, priced.train_seed);
+    }
+
+    #[test]
+    fn dtype_is_run_identity() {
+        let base = RunSpec::new(Backend::Mock, "sst2", OptSpec::named("addax"), 40, 0);
+        assert_eq!(base.dtype, Dtype::F32);
+        assert!(base.run_id.contains(".f32."), "{}", base.run_id);
+        let mut half = base.clone();
+        half.dtype = Dtype::Bf16;
+        let half = half.sealed();
+        assert!(half.run_id.contains(".bf16."), "{}", half.run_id);
+        assert_ne!(base.run_id, half.run_id, "dtype must split run identity");
+        assert_ne!(base.train_seed, half.train_seed);
+    }
+
+    #[test]
+    fn dtype_grid_doubles_the_expansion() {
+        let cfg = Config::parse(
+            "[sweep]\nbackend = \"mock\"\nsteps = 10\n\
+             [grid]\noptimizers = \"mezo, ip-sgd\"\ntasks = \"sst2\"\nseeds = \"0\"\n\
+             dtypes = \"f32, bf16\"",
+        )
+        .unwrap();
+        let specs = SweepSpec::from_config(&cfg).unwrap().expand().unwrap();
+        assert_eq!(specs.len(), 2 * 2);
+        let (f32s, bf16s): (Vec<_>, Vec<_>) =
+            specs.iter().partition(|s| s.dtype == Dtype::F32);
+        assert_eq!(f32s.len(), 2);
+        assert_eq!(bf16s.len(), 2);
+        // bad dtype fails validation up front
+        let bad = Config::parse("[grid]\ndtypes = \"fp16\"").unwrap();
+        assert!(SweepSpec::from_config(&bad).is_err());
     }
 
     #[test]

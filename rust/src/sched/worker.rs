@@ -242,7 +242,9 @@ pub struct RunTiming {
 ///
 /// Re-entrant: all state (executor, params, dataset, optimizer) is built
 /// inside the call, nothing is printed, and the in-run noise pool is
-/// pinned to one worker so run-level parallelism composes with it.
+/// pinned to one worker so run-level parallelism composes with it. The
+/// parameter store is allocated at the spec's storage dtype (the AOT
+/// dumps are f32 and are rounded nearest-even on load for bf16 runs).
 pub fn execute_run(spec: &RunSpec) -> Result<(ManifestRow, RunTiming)> {
     match spec.backend {
         Backend::Mock => {
@@ -253,13 +255,14 @@ pub fn execute_run(spec: &RunSpec) -> Result<(ManifestRow, RunTiming)> {
                 0.1,
                 derive_seed(spec.grid_seed, 0xACE),
             );
-            let mut params = ParamStore::zeros(&[("w".to_string(), vec![spec.mock_dim])]);
+            let mut params =
+                ParamStore::zeros_in(&[("w".to_string(), vec![spec.mock_dim])], spec.dtype);
             run_with_exec(spec, &mut exec, &mut params, 512, 64)
         }
         Backend::Xla => {
             let mut exec = XlaExec::new(&default_artifacts_dir(), &spec.model_key)?;
             let entry = exec.entry().clone();
-            let mut params = exec.load_initial_params()?;
+            let mut params = exec.load_initial_params()?.to_dtype(spec.dtype);
             run_with_exec(spec, &mut exec, &mut params, entry.vocab, entry.max_len)
         }
     }
@@ -312,8 +315,10 @@ fn run_with_exec(
         log_path: None,
         verbose: false,
         // One in-run noise worker: the sweep parallelizes across runs,
-        // and the shared worker-count global must not race to different
-        // values from concurrent runs.
+        // so in-run pools would only oversubscribe the host. The pin is
+        // per-store (no process global), so concurrent runs with
+        // different settings could coexist — the scheduler just has no
+        // reason to want them.
         noise_workers: 1,
     };
     let mut opt = spec.optimizer.build()?;
@@ -342,6 +347,27 @@ mod tests {
         let (b, _) = execute_run(&spec).unwrap();
         assert_eq!(a.to_line(), b.to_line());
         assert_eq!(a.outcome.loss_curve.points.len(), 15);
+    }
+
+    #[test]
+    fn execute_run_is_deterministic_at_bf16() {
+        // The tentpole contract at the run level: a bf16 cell reproduces
+        // its manifest row exactly, and it differs from its f32 twin only
+        // through the declared dtype (distinct run id).
+        let mk = |dtype| {
+            let mut s = RunSpec::new(Backend::Mock, "sst2", OptSpec::named("mezo"), 10, 3);
+            s.dtype = dtype;
+            s.eval_examples = 30;
+            s.n_train = 120;
+            s.n_val = 40;
+            s.n_test = 40;
+            s.sealed()
+        };
+        let spec = mk(crate::tensor::Dtype::Bf16);
+        let (a, _) = execute_run(&spec).unwrap();
+        let (b, _) = execute_run(&spec).unwrap();
+        assert_eq!(a.to_line(), b.to_line());
+        assert_ne!(spec.run_id, mk(crate::tensor::Dtype::F32).run_id);
     }
 
     #[test]

@@ -1,77 +1,445 @@
-//! Host-side tensors: flat `f32` buffers with shapes.
+//! Host-side tensors: precision-polymorphic flat buffers with shapes.
 //!
-//! These back the parameter store and every in-place update on the L3 hot
-//! path (perturbation, ZO/FO updates). The update kernels are written as
-//! tight slice loops so LLVM auto-vectorizes them; see `benches/hotpath.rs`
-//! for the measured throughput and EXPERIMENTS.md §Perf.
+//! Storage is either `f32` or `bf16` (selected per store by [`Dtype`]);
+//! **all math is performed in f32** and results are rounded
+//! nearest-even back to the storage precision on write — the classic
+//! half-storage/full-math discipline the paper's fp16 memory profiles
+//! assume. The [`Element`] trait is the codec seam: every update kernel
+//! is written once, generically, as decode → f32 op → encode, and for
+//! `f32` the codec compiles to the identity so the historical kernels
+//! (and their bit-exact trajectories) are unchanged.
+//!
+//! These buffers back the parameter store and every in-place update on
+//! the L3 hot path (perturbation, ZO/FO updates). The update kernels are
+//! tight slice loops so LLVM auto-vectorizes them; see
+//! `benches/hotpath.rs` for measured throughput and EXPERIMENTS.md
+//! §Perf / §Precision. Because each element is encoded independently,
+//! the parallel noise sweeps stay bit-identical at every worker count in
+//! *both* precisions.
 
-/// A dense row-major `f32` tensor on the host.
+use std::borrow::Cow;
+
+use anyhow::{bail, Result};
+
+/// Storage precision of a [`HostTensor`] / parameter store.
+///
+/// `Bf16` stores bfloat16 (2 bytes/element); `F32` stores IEEE single
+/// (4 bytes). The analytic memory model prices weights at
+/// [`Dtype::bytes`], so the store the simulator describes is exactly the
+/// store that runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    #[default]
+    F32,
+    Bf16,
+}
+
+impl Dtype {
+    /// Parse a config/CLI spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" | "fp32" | "float32" => Dtype::F32,
+            "bf16" | "bfloat16" => Dtype::Bf16,
+            other => bail!("unknown dtype {other:?} (want f32 | bf16)"),
+        })
+    }
+
+    /// Canonical label (run ids, manifests, tables).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Bf16 => "bf16",
+        }
+    }
+
+    /// Bytes per stored element.
+    pub fn bytes(&self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::Bf16 => 2,
+        }
+    }
+}
+
+/// A bfloat16 storage element: the top 16 bits of an IEEE f32.
+///
+/// Same exponent range as f32 (no overflow surprises when narrowing),
+/// 8 significand bits. Encoding rounds nearest, ties to even; decoding
+/// is exact (bit shift). NaNs are quieted on encode so a payload can
+/// never truncate to an infinity pattern.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    /// Round-to-nearest-even conversion from f32.
+    #[inline]
+    pub fn from_f32(v: f32) -> Self {
+        let bits = v.to_bits();
+        if v.is_nan() {
+            // Preserve sign + payload MSBs; force the quiet bit so the
+            // truncated payload cannot collapse to the inf pattern.
+            return Bf16((bits >> 16) as u16 | 0x0040);
+        }
+        // Classic RNE on the discarded low half: adding 0x7FFF plus the
+        // keep-LSB rounds halfway cases to even; the carry ripples into
+        // the exponent, saturating to ±inf past the largest bf16 finite.
+        let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+        Bf16((rounded >> 16) as u16)
+    }
+
+    /// Exact widening to f32.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+/// Storage codec behind [`HostTensor`]: an element type that holds an
+/// f32 value at some precision. Math happens in f32 between
+/// [`Element::decode`] and [`Element::encode`]; for `f32` both are the
+/// identity and the generic kernels compile to the historical code.
+pub trait Element: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static {
+    const DTYPE: Dtype;
+    /// Bytes per element in the binary dump format.
+    const BYTES: usize;
+
+    fn encode(v: f32) -> Self;
+    fn decode(self) -> f32;
+
+    /// Read one element from `Self::BYTES` little-endian bytes.
+    fn read_le(bytes: &[u8]) -> Self;
+    /// Append the little-endian bytes of one element.
+    fn write_le(self, out: &mut Vec<u8>);
+
+    /// Wrap a typed buffer into the dynamic storage enum.
+    fn into_data(v: Vec<Self>) -> TensorData;
+    /// Typed view of dynamic storage (panics on dtype mismatch — the
+    /// dispatch sites always pair matching types).
+    fn slice(data: &TensorData) -> &[Self];
+    fn slice_mut(data: &mut TensorData) -> &mut [Self];
+}
+
+impl Element for f32 {
+    const DTYPE: Dtype = Dtype::F32;
+    const BYTES: usize = 4;
+
+    #[inline]
+    fn encode(v: f32) -> Self {
+        v
+    }
+
+    #[inline]
+    fn decode(self) -> f32 {
+        self
+    }
+
+    fn read_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+
+    fn into_data(v: Vec<Self>) -> TensorData {
+        TensorData::F32(v)
+    }
+
+    fn slice(data: &TensorData) -> &[Self] {
+        match data {
+            TensorData::F32(v) => v,
+            TensorData::Bf16(_) => panic!("dtype mismatch: wanted f32 storage"),
+        }
+    }
+
+    fn slice_mut(data: &mut TensorData) -> &mut [Self] {
+        match data {
+            TensorData::F32(v) => v,
+            TensorData::Bf16(_) => panic!("dtype mismatch: wanted f32 storage"),
+        }
+    }
+}
+
+impl Element for Bf16 {
+    const DTYPE: Dtype = Dtype::Bf16;
+    const BYTES: usize = 2;
+
+    #[inline]
+    fn encode(v: f32) -> Self {
+        Bf16::from_f32(v)
+    }
+
+    #[inline]
+    fn decode(self) -> f32 {
+        self.to_f32()
+    }
+
+    fn read_le(bytes: &[u8]) -> Self {
+        Bf16(u16::from_le_bytes([bytes[0], bytes[1]]))
+    }
+
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.0.to_le_bytes());
+    }
+
+    fn into_data(v: Vec<Self>) -> TensorData {
+        TensorData::Bf16(v)
+    }
+
+    fn slice(data: &TensorData) -> &[Self] {
+        match data {
+            TensorData::Bf16(v) => v,
+            TensorData::F32(_) => panic!("dtype mismatch: wanted bf16 storage"),
+        }
+    }
+
+    fn slice_mut(data: &mut TensorData) -> &mut [Self] {
+        match data {
+            TensorData::Bf16(v) => v,
+            TensorData::F32(_) => panic!("dtype mismatch: wanted bf16 storage"),
+        }
+    }
+}
+
+/// Dynamically-typed flat storage. Equality is bitwise per element —
+/// exactly what the worker-count determinism tests assert.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    Bf16(Vec<Bf16>),
+}
+
+/// Dispatch a generic-`Element` expression over both storage variants.
+macro_rules! with_data {
+    ($data:expr, $v:ident => $body:expr) => {
+        match $data {
+            TensorData::F32($v) => $body,
+            TensorData::Bf16($v) => $body,
+        }
+    };
+}
+
+/// A dense row-major tensor on the host, stored at [`HostTensor::dtype`]
+/// precision with all arithmetic in f32 (see module docs).
 #[derive(Clone, Debug, PartialEq)]
 pub struct HostTensor {
     pub shape: Vec<usize>,
-    pub data: Vec<f32>,
+    data: TensorData,
+}
+
+// -- generic kernels (monomorphized per storage type) ---------------------
+
+fn axpy_impl<E: Element>(data: &mut [E], alpha: f32, other: &[f32]) {
+    for (a, b) in data.iter_mut().zip(other.iter()) {
+        *a = E::encode(a.decode() + alpha * *b);
+    }
+}
+
+fn scale_impl<E: Element>(data: &mut [E], c: f32) {
+    for a in data.iter_mut() {
+        *a = E::encode(a.decode() * c);
+    }
+}
+
+fn norm_sq_impl<E: Element>(data: &[E]) -> f64 {
+    data.iter()
+        .map(|&x| {
+            let v = x.decode() as f64;
+            v * v
+        })
+        .sum()
+}
+
+fn dot_impl<E: Element>(data: &[E], other: &[f32]) -> f64 {
+    data.iter()
+        .zip(other.iter())
+        .map(|(&a, &b)| (a.decode() as f64) * (b as f64))
+        .sum()
 }
 
 impl HostTensor {
-    /// Zero-filled tensor of the given shape.
+    /// Zero-filled f32 tensor (the historical default precision).
     pub fn zeros(shape: &[usize]) -> Self {
-        let n = shape.iter().product();
-        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+        Self::zeros_in(shape, Dtype::F32)
     }
 
-    /// Build from raw data; panics if the element count mismatches.
+    /// Zero-filled tensor stored at `dtype`.
+    pub fn zeros_in(shape: &[usize], dtype: Dtype) -> Self {
+        let n = shape.iter().product();
+        let data = match dtype {
+            Dtype::F32 => TensorData::F32(vec![0.0; n]),
+            Dtype::Bf16 => TensorData::Bf16(vec![Bf16(0); n]),
+        };
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// Build f32 storage from raw data; panics on element-count mismatch.
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    /// Build at `dtype` from f32 values (rounded nearest-even for bf16).
+    pub fn from_f32_in(shape: &[usize], values: &[f32], dtype: Dtype) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len(), "shape/data mismatch");
+        let data = match dtype {
+            Dtype::F32 => TensorData::F32(values.to_vec()),
+            Dtype::Bf16 => TensorData::Bf16(values.iter().map(|&v| Bf16::from_f32(v)).collect()),
+        };
         Self { shape: shape.to_vec(), data }
+    }
+
+    /// Build from typed elements (binary dump loading).
+    pub(crate) fn from_elems<E: Element>(shape: &[usize], elems: Vec<E>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), elems.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data: E::into_data(elems) }
+    }
+
+    /// Storage precision.
+    pub fn dtype(&self) -> Dtype {
+        match &self.data {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::Bf16(_) => Dtype::Bf16,
+        }
+    }
+
+    pub(crate) fn raw(&self) -> &TensorData {
+        &self.data
+    }
+
+    pub(crate) fn raw_mut(&mut self) -> &mut TensorData {
+        &mut self.data
     }
 
     /// Number of elements.
     pub fn len(&self) -> usize {
-        self.data.len()
+        with_data!(&self.data, v => v.len())
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len() == 0
     }
 
-    /// `self += alpha * other` (in place).
+    /// Element `i` widened to f32 (exact for both precisions).
+    pub fn get(&self, i: usize) -> f32 {
+        with_data!(&self.data, v => v[i].decode())
+    }
+
+    /// Store `value` at `i` (rounded nearest-even for bf16).
+    pub fn set(&mut self, i: usize, value: f32) {
+        with_data!(&mut self.data, v => v[i] = Element::encode(value));
+    }
+
+    /// Elementwise in-place rewrite: `x_i ← f(i, x_i)` in f32 math.
+    pub fn map_inplace<F: FnMut(usize, f32) -> f32>(&mut self, mut f: F) {
+        with_data!(&mut self.data, v => {
+            for (i, x) in v.iter_mut().enumerate() {
+                *x = Element::encode(f(i, x.decode()));
+            }
+        });
+    }
+
+    /// Iterate the values widened to f32.
+    pub fn iter_f32(&self) -> IterF32<'_> {
+        let inner = match &self.data {
+            TensorData::F32(v) => IterInner::F32(v.iter()),
+            TensorData::Bf16(v) => IterInner::Bf16(v.iter()),
+        };
+        IterF32 { inner }
+    }
+
+    /// The values as an f32 slice: borrowed for f32 storage, decoded
+    /// into a fresh buffer for bf16 (device upload, interop).
+    pub fn as_f32(&self) -> Cow<'_, [f32]> {
+        match &self.data {
+            TensorData::F32(v) => Cow::Borrowed(v.as_slice()),
+            TensorData::Bf16(v) => Cow::Owned(v.iter().map(|b| b.to_f32()).collect()),
+        }
+    }
+
+    /// The values decoded into an owned f32 vector.
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        self.as_f32().into_owned()
+    }
+
+    /// Overwrite every element from f32 values (encoded on write).
+    pub fn copy_from_f32(&mut self, values: &[f32]) {
+        assert_eq!(self.len(), values.len(), "copy_from_f32 length mismatch");
+        with_data!(&mut self.data, v => {
+            for (a, &b) in v.iter_mut().zip(values.iter()) {
+                *a = Element::encode(b);
+            }
+        });
+    }
+
+    /// Re-encode at `dtype` (no-op clone of the buffer when equal; the
+    /// f32→bf16 direction rounds nearest-even, bf16→f32 is exact).
+    pub fn to_dtype(&self, dtype: Dtype) -> Self {
+        if self.dtype() == dtype {
+            return self.clone();
+        }
+        Self::from_f32_in(&self.shape, &self.as_f32(), dtype)
+    }
+
+    /// `self += alpha * other` (in place, f32 math).
     ///
     /// Length mismatches panic in release builds too: `zip` would silently
     /// truncate and corrupt an update. One compare per call (not per
     /// element) — unmeasurable against the O(n) loop (EXPERIMENTS.md §Perf).
     pub fn axpy(&mut self, alpha: f32, other: &[f32]) {
-        assert_eq!(self.data.len(), other.len(), "axpy length mismatch");
-        for (a, b) in self.data.iter_mut().zip(other.iter()) {
-            *a += alpha * *b;
-        }
+        assert_eq!(self.len(), other.len(), "axpy length mismatch");
+        with_data!(&mut self.data, v => axpy_impl(v, alpha, other));
     }
 
-    /// `self *= c` (in place).
+    /// `self *= c` (in place, f32 math).
     pub fn scale(&mut self, c: f32) {
-        for a in self.data.iter_mut() {
-            *a *= c;
-        }
+        with_data!(&mut self.data, v => scale_impl(v, c));
     }
 
-    /// Squared L2 norm.
+    /// Squared L2 norm (f64 accumulation).
     pub fn norm_sq(&self) -> f64 {
-        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+        with_data!(&self.data, v => norm_sq_impl(v))
     }
 
     /// Dot product with a slice of the same length (loud on mismatch, like
     /// [`HostTensor::axpy`]).
     pub fn dot(&self, other: &[f32]) -> f64 {
-        assert_eq!(self.data.len(), other.len(), "dot length mismatch");
-        self.data
-            .iter()
-            .zip(other.iter())
-            .map(|(&a, &b)| (a as f64) * (b as f64))
-            .sum()
+        assert_eq!(self.len(), other.len(), "dot length mismatch");
+        with_data!(&self.data, v => dot_impl(v, other))
     }
 
     /// True iff every element is finite.
     pub fn all_finite(&self) -> bool {
-        self.data.iter().all(|x| x.is_finite())
+        self.iter_f32().all(|x| x.is_finite())
+    }
+}
+
+/// Iterator over a tensor's values widened to f32.
+pub struct IterF32<'a> {
+    inner: IterInner<'a>,
+}
+
+enum IterInner<'a> {
+    F32(std::slice::Iter<'a, f32>),
+    Bf16(std::slice::Iter<'a, Bf16>),
+}
+
+impl Iterator for IterF32<'_> {
+    type Item = f32;
+
+    #[inline]
+    fn next(&mut self) -> Option<f32> {
+        match &mut self.inner {
+            IterInner::F32(it) => it.next().copied(),
+            IterInner::Bf16(it) => it.next().map(|b| b.to_f32()),
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        match &self.inner {
+            IterInner::F32(it) => it.size_hint(),
+            IterInner::Bf16(it) => it.size_hint(),
+        }
     }
 }
 
@@ -88,7 +456,12 @@ mod tests {
     fn zeros_and_len() {
         let t = HostTensor::zeros(&[2, 3]);
         assert_eq!(t.len(), 6);
-        assert!(t.data.iter().all(|&x| x == 0.0));
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert!(t.iter_f32().all(|x| x == 0.0));
+        let b = HostTensor::zeros_in(&[2, 3], Dtype::Bf16);
+        assert_eq!(b.len(), 6);
+        assert_eq!(b.dtype(), Dtype::Bf16);
+        assert!(b.iter_f32().all(|x| x == 0.0));
     }
 
     #[test]
@@ -101,10 +474,28 @@ mod tests {
     fn axpy_scale_dot() {
         let mut t = HostTensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
         t.axpy(2.0, &[1.0, 1.0, 1.0]);
-        assert_eq!(t.data, vec![3.0, 4.0, 5.0]);
+        assert_eq!(t.to_f32_vec(), vec![3.0, 4.0, 5.0]);
         t.scale(0.5);
-        assert_eq!(t.data, vec![1.5, 2.0, 2.5]);
+        assert_eq!(t.to_f32_vec(), vec![1.5, 2.0, 2.5]);
         assert!((t.dot(&[2.0, 0.0, 2.0]) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn axpy_scale_dot_bf16_rounds_on_write() {
+        // Exactly representable values stay exact through bf16 math.
+        let mut t = HostTensor::from_f32_in(&[3], &[1.0, 2.0, 3.0], Dtype::Bf16);
+        t.axpy(2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(t.to_f32_vec(), vec![3.0, 4.0, 5.0]);
+        t.scale(0.5);
+        assert_eq!(t.to_f32_vec(), vec![1.5, 2.0, 2.5]);
+        assert!((t.dot(&[2.0, 0.0, 2.0]) - 8.0).abs() < 1e-9);
+        // A value needing more than 8 significand bits rounds on write
+        // (bf16 ulp in [1,2) is 2^-7).
+        let mut u = HostTensor::zeros_in(&[1], Dtype::Bf16);
+        u.set(0, 1.0 + 1.0 / 512.0); // below the 2^-8 midpoint: down
+        assert_eq!(u.get(0), 1.0);
+        u.set(0, 1.0 + 3.0 / 512.0); // above the midpoint: up
+        assert_eq!(u.get(0), 1.0 + 1.0 / 128.0);
     }
 
     #[test]
@@ -133,7 +524,116 @@ mod tests {
     fn finite_check() {
         let mut t = HostTensor::zeros(&[2]);
         assert!(t.all_finite());
-        t.data[1] = f32::NAN;
+        t.set(1, f32::NAN);
         assert!(!t.all_finite());
+        let mut b = HostTensor::zeros_in(&[2], Dtype::Bf16);
+        assert!(b.all_finite());
+        b.set(0, f32::INFINITY);
+        assert!(!b.all_finite());
+    }
+
+    #[test]
+    fn dtype_parse_and_bytes() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("bf16").unwrap(), Dtype::Bf16);
+        assert_eq!(Dtype::parse("bfloat16").unwrap(), Dtype::Bf16);
+        assert!(Dtype::parse("fp16").is_err());
+        assert_eq!(Dtype::F32.bytes(), 4);
+        assert_eq!(Dtype::Bf16.bytes(), 2);
+        assert_eq!(Dtype::Bf16.label(), "bf16");
+    }
+
+    #[test]
+    fn bf16_roundtrip_is_exact_for_every_pattern() {
+        // decode → encode must be the identity on all 65536 bf16 bit
+        // patterns, except signaling NaNs which are quieted (still NaN).
+        for bits in 0..=u16::MAX {
+            let b = Bf16(bits);
+            let f = b.to_f32();
+            let back = Bf16::from_f32(f);
+            if f.is_nan() {
+                assert!(back.to_f32().is_nan(), "{bits:#06x} must stay NaN");
+            } else {
+                assert_eq!(back, b, "{bits:#06x} must round-trip exactly");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_ties_round_to_even() {
+        // bf16 ulp in [1,2) is 2^-7: 1.0 + 2^-8 sits exactly between
+        // 1.0 (mantissa 0x00, even) and 1.0 + 2^-7 (0x01, odd) → down.
+        assert_eq!(Bf16::from_f32(1.0 + 1.0 / 256.0).to_f32(), 1.0);
+        // 1.0 + 3·2^-8 sits between 1+2^-7 (odd) and 1+2^-6 (even) → up.
+        assert_eq!(Bf16::from_f32(1.0 + 3.0 / 256.0).to_f32(), 1.0 + 1.0 / 64.0);
+        // Just past the midpoint rounds up regardless of parity.
+        assert_eq!(
+            Bf16::from_f32(f32::from_bits((1.0f32 + 1.0 / 256.0).to_bits() + 1)).to_f32(),
+            1.0 + 1.0 / 128.0
+        );
+        // Negative ties mirror.
+        assert_eq!(Bf16::from_f32(-(1.0 + 1.0 / 256.0)).to_f32(), -1.0);
+    }
+
+    #[test]
+    fn bf16_saturates_to_inf_and_quiets_nan() {
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::from_f32(f32::NEG_INFINITY).to_f32(), f32::NEG_INFINITY);
+        // Above the last bf16 finite (≈3.39e38) rounds to +inf.
+        assert_eq!(Bf16::from_f32(f32::MAX).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::from_f32(-f32::MAX).to_f32(), f32::NEG_INFINITY);
+        let n = Bf16::from_f32(f32::NAN);
+        assert!(n.to_f32().is_nan());
+        assert_ne!(n.0 & 0x7FFF, 0x7F80, "NaN must not encode as inf");
+    }
+
+    #[test]
+    fn bf16_handles_subnormals_and_zeros() {
+        // Signed zeros survive.
+        assert_eq!(Bf16::from_f32(0.0).0, 0x0000);
+        assert_eq!(Bf16::from_f32(-0.0).0, 0x8000);
+        // The smallest bf16 subnormal (2^-133) round-trips.
+        let tiny = f32::from_bits(0x0001 << 16);
+        assert_eq!(Bf16::from_f32(tiny).to_f32(), tiny);
+        // f32 values far below the bf16 subnormal range round to zero.
+        assert_eq!(Bf16::from_f32(f32::from_bits(1)).to_f32(), 0.0);
+        // f32::MIN_POSITIVE (2^-126) is a bf16 normal and survives.
+        assert_eq!(Bf16::from_f32(f32::MIN_POSITIVE).to_f32(), f32::MIN_POSITIVE);
+    }
+
+    #[test]
+    fn get_set_map_and_copy() {
+        let mut t = HostTensor::zeros_in(&[4], Dtype::Bf16);
+        t.copy_from_f32(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.get(2), 3.0);
+        t.map_inplace(|i, x| x + i as f32);
+        assert_eq!(t.to_f32_vec(), vec![1.0, 3.0, 5.0, 7.0]);
+        t.set(0, 9.0);
+        assert_eq!(t.get(0), 9.0);
+    }
+
+    #[test]
+    fn as_f32_borrows_for_f32_storage() {
+        let t = HostTensor::from_vec(&[2], vec![1.0, 2.0]);
+        assert!(matches!(t.as_f32(), Cow::Borrowed(_)));
+        let b = t.to_dtype(Dtype::Bf16);
+        assert!(matches!(b.as_f32(), Cow::Owned(_)));
+        assert_eq!(b.as_f32().as_ref(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn to_dtype_roundtrip() {
+        let t = HostTensor::from_vec(&[3], vec![0.1, -2.5, 1e-4]);
+        let b = t.to_dtype(Dtype::Bf16);
+        assert_eq!(b.dtype(), Dtype::Bf16);
+        // bf16 → f32 is exact, so a second conversion is lossless.
+        let back = b.to_dtype(Dtype::F32);
+        assert_eq!(back.to_f32_vec(), b.to_f32_vec());
+        // Same-dtype conversion is an identical clone.
+        assert_eq!(t.to_dtype(Dtype::F32), t);
+        // And the bf16 values are the RNE roundings of the originals.
+        for (orig, enc) in t.iter_f32().zip(b.iter_f32()) {
+            assert_eq!(Bf16::from_f32(orig).to_f32(), enc);
+        }
     }
 }

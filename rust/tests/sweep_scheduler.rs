@@ -27,6 +27,7 @@ test = 48
 optimizers = "addax, mezo, ip-sgd, zero-shot"
 tasks = "sst2, rte"
 seeds = "0, 1"
+dtypes = "f32, bf16"
 "#;
 
 fn specs() -> Vec<RunSpec> {
@@ -44,7 +45,9 @@ fn fresh_dir(tag: &str) -> PathBuf {
 
 fn opts(dir: &std::path::Path, workers: usize) -> SweepOptions {
     SweepOptions {
-        budget_gb: 60.0,
+        // Covers the largest f32-priced cell (ip-sgd on rte ≈ 91 GB at
+        // opt-13b pricing); bf16 cells are half that.
+        budget_gb: 100.0,
         gpus: 1,
         workers,
         resume: true,
@@ -55,9 +58,11 @@ fn opts(dir: &std::path::Path, workers: usize) -> SweepOptions {
 
 #[test]
 fn manifest_is_bit_identical_across_worker_counts() {
-    // 4 optimizers x 2 tasks x 2 seeds (seeds are identity: they seed the
-    // dataset, so even zero-shot differs per seed)
-    let expected_runs = 16;
+    // 4 optimizers x 2 tasks x 2 seeds x 2 dtypes (seeds are identity:
+    // they seed the dataset, so even zero-shot differs per seed; the
+    // storage dtype is identity too — f32 and bf16 cells are distinct
+    // runs, and the byte-identity proof below covers both precisions)
+    let expected_runs = 32;
     let mut bytes: Vec<String> = Vec::new();
     for workers in [1usize, 4] {
         let dir = fresh_dir(&format!("workers{workers}"));
@@ -73,6 +78,9 @@ fn manifest_is_bit_identical_across_worker_counts() {
         bytes[0], bytes[1],
         "compacted manifest must not depend on the worker count"
     );
+    // Both precisions are really in the file (dtype reaches the rows).
+    assert_eq!(bytes[0].matches("\"dtype\":\"bf16\"").count(), 16);
+    assert_eq!(bytes[0].matches("\"dtype\":\"f32\"").count(), 16);
 }
 
 #[test]
@@ -149,7 +157,7 @@ fn tables_aggregate_from_manifest_rows_alone() {
     let all = specs();
     run_sweep(all.clone(), &o).unwrap();
     let manifest = SweepManifest::load(&o.manifest_path).unwrap();
-    assert_eq!(manifest.len(), 16);
+    assert_eq!(manifest.len(), 32);
     for spec in &all {
         let row = manifest.get(&spec.run_id).expect("row present");
         assert_eq!(row.spec_str("task").unwrap(), spec.task);
