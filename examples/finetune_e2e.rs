@@ -61,6 +61,7 @@ fn main() -> anyhow::Result<()> {
         log_path: Some("results/e2e_loss_curve.jsonl".into()),
         verbose: true,
         noise_workers: 0,
+        ..Default::default()
     };
     let t0 = std::time::Instant::now();
     let r = train(&mut exec, &mut params, &mut opt, &ds, lt, &cfg)?;

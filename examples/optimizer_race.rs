@@ -51,6 +51,7 @@ fn main() -> anyhow::Result<()> {
             log_path: None,
             verbose: false,
             noise_workers: 0,
+            ..Default::default()
         };
         let r = train(&mut exec, &mut params, &mut *opt, &ds, usize::MAX, &cfg)?;
         println!(

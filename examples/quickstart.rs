@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
         log_path: None,
         verbose: true,
         noise_workers: 0,
+        ..Default::default()
     };
     let lt = ds.l_max(); // no memory pressure at tiny scale => Addax-WA
     let t0 = std::time::Instant::now();

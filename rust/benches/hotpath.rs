@@ -193,6 +193,38 @@ fn main() {
         t32 / t16
     );
 
+    // 5b. Checkpoint write/read: the full ADDAXCK1 snapshot path (encode
+    // at native dtype + CRC32 + atomic tmp/fsync/rename, then the
+    // CRC-verified decode). Sized by the parameter payload; the write
+    // row includes the fsync, so it tracks disk sync latency as well as
+    // encode bandwidth.
+    {
+        use addax::ckpt::{self, TrainState};
+        let ck_dir = std::env::temp_dir().join(format!("addax_bench_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&ck_dir).unwrap();
+        let ck_path = ck_dir.join("bench.ck");
+        let state = TrainState {
+            step: 1,
+            eval_every: 1,
+            best_val: 0.5,
+            best_step: 1,
+            fo_rng: [1, 2, 3, 4],
+            zo_rng: [5, 6, 7, 8],
+            ..TrainState::default()
+        };
+        bench(r, "ckpt: write snapshot", bytes, iters, || {
+            ckpt::write_snapshot(&ck_path, "bench", "mezo", &store, &state).unwrap();
+        });
+        bench(r, "ckpt: read+verify snapshot", bytes, iters, || {
+            std::hint::black_box(ckpt::read_snapshot(&ck_path).unwrap());
+        });
+        let ck_path16 = ck_dir.join("bench16.ck");
+        bench(r, "ckpt: write snapshot bf16", bytes16, iters, || {
+            ckpt::write_snapshot(&ck_path16, "bench", "mezo", &store16, &state).unwrap();
+        });
+        std::fs::remove_dir_all(&ck_dir).ok();
+    }
+
     // 6. Tensor primitives.
     let mut t = HostTensor::zeros(&[1 << 20]);
     let other = vec![1.0f32; 1 << 20];

@@ -1,0 +1,691 @@
+//! The `ADDAXCK1` snapshot format: versioned, chunked, CRC-checked.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic    8 B   "ADDAXCK1"
+//! hlen     4 B   header length in bytes
+//! header   hlen  compact JSON (identity, dtype, step, cadence, RNG
+//!                states, curves, optimizer scalars, chunk directory)
+//! hcrc     4 B   crc32(header)
+//! chunk*         one per tensor, in header-directory order:
+//!   clen   4 B   chunk length in bytes
+//!   data   clen  raw little-endian elements (params at the store's
+//!                native dtype via the `tensor::Element` codecs,
+//!                optimizer state always f32)
+//!   ccrc   4 B   crc32(data)
+//! ```
+//!
+//! Every load path returns a clean `Err` on any malformation — wrong
+//! magic, truncation, a flipped bit anywhere (CRC mismatch), a directory
+//! that disagrees with the chunk stream, or trailing bytes — never a
+//! panic: a corrupt snapshot must downgrade a resume, not kill a worker.
+//! Writes are atomic (`.tmp` + fsync + rename), so a kill mid-write
+//! leaves at worst a stray tmp file that no load path ever reads.
+//!
+//! What is deliberately NOT stored: the ZO perturbation `z` (replayable
+//! from the step seed — MeZO's Algorithm 3 seed trick is what makes the
+//! snapshot parameter-dominated) and wall-clock (outside the
+//! byte-identical resume contract, like the sweep manifest's times file).
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::jsonlite::{obj, Json};
+use crate::metrics::Curve;
+use crate::optim::OptState;
+use crate::params::{Param, ParamStore};
+use crate::zorng::fnv1a;
+use crate::tensor::{Bf16, Dtype, Element, HostTensor};
+
+use super::TrainState;
+
+/// File magic: format name + version in 8 bytes.
+pub const MAGIC: &[u8; 8] = b"ADDAXCK1";
+
+/// Header format version (bumped on incompatible layout changes).
+const FORMAT: usize = 1;
+
+/// Best-effort fsync of a directory: on POSIX, rename/unlink durability
+/// across a power loss needs the parent directory's entry table synced,
+/// not just the file contents. Errors (and non-Unix platforms where
+/// opening a directory fails) are swallowed — this hardens the crash
+/// window, it must never take down a training run.
+pub(crate) fn sync_dir(dir: &Path) {
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// CRC-32 (IEEE 802.3, the zlib polynomial), table-driven.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    });
+    let mut c = !0u32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Header-level view of a snapshot (everything but the tensor data).
+#[derive(Clone, Debug)]
+pub struct SnapshotInfo {
+    /// Run identity string (the sweep's `run_id`, or the coordinator's
+    /// derived identity for standalone runs). Resume refuses a snapshot
+    /// whose identity differs from the run asking for it.
+    pub identity: String,
+    /// `fnv1a(identity)` in hex — the quick cross-check `ckpt inspect`
+    /// prints and `diff` compares.
+    pub identity_hash: String,
+    /// Storage precision of the parameter chunks.
+    pub dtype: Dtype,
+    pub opt_name: String,
+    /// Completed training steps at snapshot time.
+    pub step: usize,
+    /// Eval cadence the run was using (resume refuses a cadence change:
+    /// it would shift the eval schedule and break byte-identity).
+    pub eval_every: usize,
+    pub best_step: usize,
+    /// Best validation accuracy so far (0.0 until the first eval, i.e.
+    /// while `best_step == 0`).
+    pub best_val: f64,
+    /// Parameter layout, in store order.
+    pub specs: Vec<(String, Vec<usize>)>,
+    /// Chunk directory: (name, bytes) in file order. Params first
+    /// (`param:<name>`), then optimizer state (`opt:<name>`, f32).
+    pub chunks: Vec<(String, usize)>,
+}
+
+impl SnapshotInfo {
+    /// Total payload bytes across all chunks.
+    pub fn total_chunk_bytes(&self) -> usize {
+        self.chunks.iter().map(|&(_, b)| b).sum()
+    }
+}
+
+fn decode_tensor_typed<E: Element>(shape: &[usize], bytes: &[u8]) -> Result<HostTensor> {
+    // Checked arithmetic: a CRC-consistent header with absurd shape dims
+    // must produce an Err, not a debug-build overflow panic.
+    let need = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .and_then(|n| n.checked_mul(E::BYTES))
+        .with_context(|| format!("shape {shape:?} overflows the element count"))?;
+    ensure!(
+        bytes.len() == need,
+        "param chunk holds {} bytes, shape {shape:?} at {} needs {need}",
+        bytes.len(),
+        E::DTYPE.label()
+    );
+    let elems: Vec<E> = bytes.chunks_exact(E::BYTES).map(E::read_le).collect();
+    Ok(HostTensor::from_elems(shape, elems))
+}
+
+fn decode_tensor(dtype: Dtype, shape: &[usize], bytes: &[u8]) -> Result<HostTensor> {
+    match dtype {
+        Dtype::F32 => decode_tensor_typed::<f32>(shape, bytes),
+        Dtype::Bf16 => decode_tensor_typed::<Bf16>(shape, bytes),
+    }
+}
+
+/// Serialize an f64 that may be non-finite. JSON has no NaN/±inf, and
+/// jsonlite's `Display`-based number writer would emit text its own
+/// parser rejects — which would make every snapshot of a *diverged* run
+/// (NaN/inf in the loss curve, e.g. an aggressive lr grid point)
+/// unreadable and silently disable resume for exactly those runs. Marker
+/// strings keep the header parseable; the manifest row clamps non-finite
+/// values identically for resumed and uninterrupted runs (`finite()` in
+/// `sched/manifest.rs`), so byte-identity is unaffected.
+fn f64_json(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else if v.is_nan() {
+        Json::from("NaN")
+    } else if v > 0.0 {
+        Json::from("inf")
+    } else {
+        Json::from("-inf")
+    }
+}
+
+fn f64_parse(v: &Json) -> Result<f64> {
+    match v {
+        Json::Num(n) => Ok(*n),
+        Json::Str(s) => match s.as_str() {
+            "NaN" => Ok(f64::NAN),
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            other => bail!("curve value is neither a number nor a non-finite marker: {other:?}"),
+        },
+        _ => bail!("curve value is not a number"),
+    }
+}
+
+fn curve_json(c: &Curve) -> Json {
+    Json::Arr(
+        c.points
+            .iter()
+            .map(|&(s, v)| Json::Arr(vec![Json::from(s), f64_json(v)]))
+            .collect(),
+    )
+}
+
+fn curve_parse(v: &Json) -> Result<Curve> {
+    let mut c = Curve::default();
+    for p in v.as_arr()? {
+        let pair = p.as_arr()?;
+        ensure!(pair.len() == 2, "curve point is not a [step, value] pair");
+        c.push(pair[0].as_usize()?, f64_parse(&pair[1])?);
+    }
+    Ok(c)
+}
+
+fn rng_json(s: &[u64; 4]) -> Json {
+    Json::Arr(s.iter().map(|w| Json::from(w.to_string())).collect())
+}
+
+fn rng_parse(v: &Json) -> Result<[u64; 4]> {
+    let arr = v.as_arr()?;
+    ensure!(arr.len() == 4, "rng state wants 4 words, got {}", arr.len());
+    let mut out = [0u64; 4];
+    for (slot, w) in out.iter_mut().zip(arr) {
+        *slot = w
+            .as_str()?
+            .parse::<u64>()
+            .context("rng state word is not a u64")?;
+    }
+    // The all-zero state is xoshiro's absorbing fixed point; it can never
+    // come from a live stream, and passing it on would trip the
+    // `Xoshiro256::from_state` assert in the feeder thread — reject it
+    // here as the corruption it is, per the never-panic contract.
+    ensure!(out != [0u64; 4], "all-zero rng state (degenerate)");
+    Ok(out)
+}
+
+fn header_json(
+    identity: &str,
+    opt_name: &str,
+    params: &ParamStore,
+    state: &TrainState,
+    chunks: &[(String, usize)],
+) -> Json {
+    // NEG_INFINITY (no eval yet) is not representable in JSON; best_step
+    // == 0 is the authoritative "no best yet" marker, so 0.0 stands in.
+    let best_val = if state.best_step == 0 { 0.0 } else { state.best_val };
+    obj(vec![
+        ("format", Json::from(FORMAT)),
+        ("identity", Json::from(identity)),
+        (
+            "identity_hash",
+            Json::from(format!("{:016x}", fnv1a(identity))),
+        ),
+        ("dtype", Json::from(params.dtype().label())),
+        ("opt", Json::from(opt_name)),
+        ("opt_t", Json::from(state.opt.t.to_string())),
+        ("step", Json::from(state.step)),
+        ("eval_every", Json::from(state.eval_every)),
+        ("best_step", Json::from(state.best_step)),
+        ("best_val", Json::from(best_val)),
+        ("fo_rng", rng_json(&state.fo_rng)),
+        ("zo_rng", rng_json(&state.zo_rng)),
+        ("loss_curve", curve_json(&state.loss_curve)),
+        ("val_curve", curve_json(&state.val_curve)),
+        (
+            "params",
+            Json::Arr(
+                params
+                    .iter()
+                    .map(|p| {
+                        obj(vec![
+                            ("name", Json::from(p.name.clone())),
+                            ("shape", Json::from(p.tensor.shape.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "chunks",
+            Json::Arr(
+                chunks
+                    .iter()
+                    .map(|(name, bytes)| {
+                        obj(vec![
+                            ("name", Json::from(name.clone())),
+                            ("bytes", Json::from(*bytes)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn parse_header(bytes: &[u8]) -> Result<(SnapshotInfo, PartialState)> {
+    let text = std::str::from_utf8(bytes).context("snapshot header is not UTF-8")?;
+    let v = Json::parse(text).context("snapshot header is not valid JSON")?;
+    let format = v.get("format")?.as_usize()?;
+    ensure!(format == FORMAT, "unsupported snapshot format {format} (want {FORMAT})");
+    let mut specs = Vec::new();
+    for p in v.get("params")?.as_arr()? {
+        let name = p.get("name")?.as_str()?.to_string();
+        let shape = p
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<usize>>>()?;
+        specs.push((name, shape));
+    }
+    let mut chunks = Vec::new();
+    for c in v.get("chunks")?.as_arr()? {
+        chunks.push((c.get("name")?.as_str()?.to_string(), c.get("bytes")?.as_usize()?));
+    }
+    let best_step = v.get("best_step")?.as_usize()?;
+    let info = SnapshotInfo {
+        identity: v.get("identity")?.as_str()?.to_string(),
+        identity_hash: v.get("identity_hash")?.as_str()?.to_string(),
+        dtype: Dtype::parse(v.get("dtype")?.as_str()?)?,
+        opt_name: v.get("opt")?.as_str()?.to_string(),
+        step: v.get("step")?.as_usize()?,
+        eval_every: v.get("eval_every")?.as_usize()?,
+        best_step,
+        best_val: v.get("best_val")?.as_f64()?,
+        specs,
+        chunks,
+    };
+    ensure!(
+        info.identity_hash == format!("{:016x}", fnv1a(&info.identity)),
+        "identity hash {} does not match identity {:?}",
+        info.identity_hash,
+        info.identity
+    );
+    let partial = PartialState {
+        opt_t: v.get("opt_t")?.as_str()?.parse::<u64>().context("opt_t is not a u64")?,
+        fo_rng: rng_parse(v.get("fo_rng")?)?,
+        zo_rng: rng_parse(v.get("zo_rng")?)?,
+        loss_curve: curve_parse(v.get("loss_curve")?)?,
+        val_curve: curve_parse(v.get("val_curve")?)?,
+    };
+    Ok((info, partial))
+}
+
+/// Header fields that belong to [`TrainState`] but not [`SnapshotInfo`].
+struct PartialState {
+    opt_t: u64,
+    fo_rng: [u64; 4],
+    zo_rng: [u64; 4],
+    loss_curve: Curve,
+    val_curve: Curve,
+}
+
+/// Serialize one snapshot to `path`, atomically (`.tmp` + fsync +
+/// rename). Parameter chunks are written at the store's native precision
+/// via the `Element` codecs; optimizer state is always f32. Chunks are
+/// encoded one at a time into a reused buffer and streamed through a
+/// `BufWriter`, so peak extra memory is one chunk — never a second copy
+/// of the whole store.
+pub fn write_snapshot(
+    path: &Path,
+    identity: &str,
+    opt_name: &str,
+    params: &ParamStore,
+    state: &TrainState,
+) -> Result<()> {
+    use std::io::Write as _;
+    // Chunk sizes are known without encoding, so the directory (and thus
+    // the header) can be written before any tensor bytes exist.
+    let mut dir: Vec<(String, usize)> =
+        Vec::with_capacity(params.len() + state.opt.tensors.len());
+    for p in params.iter() {
+        dir.push((format!("param:{}", p.name), p.tensor.len() * p.tensor.dtype().bytes()));
+    }
+    for (name, values) in &state.opt.tensors {
+        dir.push((format!("opt:{name}"), values.len() * 4));
+    }
+    // Length prefixes are u32: a silent wrap would write an unreadable
+    // file that only fails (as "corruption") on load — refuse loudly now.
+    for (name, bytes) in &dir {
+        ensure!(
+            *bytes <= u32::MAX as usize,
+            "chunk {name:?} is {bytes} bytes — past the 4 GiB chunk limit of ADDAXCK1"
+        );
+    }
+    // Mirror of the read-side guard: an all-zero stream state would
+    // produce a CRC-valid file every load rejects — refuse it up front.
+    ensure!(
+        state.fo_rng != [0u64; 4] && state.zo_rng != [0u64; 4],
+        "degenerate all-zero rng state in TrainState (the snapshot would be unreadable)"
+    );
+    let header = header_json(identity, opt_name, params, state, &dir)
+        .dump()
+        .into_bytes();
+    ensure!(
+        header.len() <= u32::MAX as usize,
+        "snapshot header is {} bytes — past the 4 GiB limit",
+        header.len()
+    );
+
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+    }
+    let tmp = path.with_extension("ck.tmp");
+    let file = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&(header.len() as u32).to_le_bytes())?;
+    w.write_all(&header)?;
+    w.write_all(&crc32(&header).to_le_bytes())?;
+
+    fn write_chunk(w: &mut std::io::BufWriter<std::fs::File>, buf: &[u8]) -> Result<()> {
+        use std::io::Write as _;
+        w.write_all(&(buf.len() as u32).to_le_bytes())?;
+        w.write_all(buf)?;
+        w.write_all(&crc32(buf).to_le_bytes())?;
+        Ok(())
+    }
+    let mut buf: Vec<u8> = Vec::new();
+    for p in params.iter() {
+        buf.clear();
+        p.tensor.encode_le_into(&mut buf);
+        write_chunk(&mut w, &buf)?;
+    }
+    for (_, values) in &state.opt.tensors {
+        buf.clear();
+        buf.reserve(values.len() * 4);
+        for v in values {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        write_chunk(&mut w, &buf)?;
+    }
+    let file = w
+        .into_inner()
+        .map_err(|e| anyhow::anyhow!("flushing {}: {e}", tmp.display()))?;
+    file.sync_all()?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    // Without this, a power loss after rename() can lose the directory
+    // entry even though the file data was fsynced.
+    if let Some(parent) = path.parent() {
+        sync_dir(parent);
+    }
+    Ok(())
+}
+
+/// Read + verify the header region from an open snapshot stream.
+/// `file_len` bounds every allocation, so a corrupt length field yields
+/// an `Err` rather than a multi-GB allocation. Returns the header views
+/// plus the header length (for the size cross-check).
+fn read_header<R: Read>(r: &mut R, file_len: u64) -> Result<(SnapshotInfo, PartialState, usize)> {
+    let mut fixed = [0u8; 12];
+    r.read_exact(&mut fixed).context("snapshot truncated in the preamble")?;
+    ensure!(&fixed[..8] == MAGIC, "bad magic (not an ADDAXCK1 snapshot)");
+    let hlen = u32::from_le_bytes([fixed[8], fixed[9], fixed[10], fixed[11]]) as usize;
+    ensure!(
+        (12 + hlen + 4) as u64 <= file_len,
+        "snapshot truncated: header claims {hlen} bytes, file has {file_len}"
+    );
+    let mut rest = vec![0u8; hlen + 4];
+    r.read_exact(&mut rest).context("snapshot truncated in the header")?;
+    let (header, crc_bytes) = rest.split_at(hlen);
+    let want = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
+    let got = crc32(header);
+    ensure!(got == want, "header CRC mismatch ({got:08x} != {want:08x})");
+    let (info, partial) = parse_header(header)?;
+    Ok((info, partial, hlen))
+}
+
+/// Read the header only (magic + header CRC verified; chunk data
+/// untouched beyond the size cross-check against the directory). This is
+/// what `ckpt inspect`, the resume pre-validation and the GC scan use —
+/// O(header), not O(snapshot).
+pub fn inspect(path: &Path) -> Result<SnapshotInfo> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening snapshot {}", path.display()))?;
+    let file_len = f.metadata()?.len();
+    let (info, _, hlen) = read_header(&mut f, file_len)?;
+    // Checked sum: a CRC-consistent directory with absurd byte counts
+    // must yield an Err, never a debug-build overflow panic.
+    let total = info
+        .chunks
+        .iter()
+        .try_fold(12usize + hlen + 4, |acc, &(_, b)| {
+            acc.checked_add(b)?.checked_add(8)
+        })
+        .context("chunk directory byte counts overflow")?;
+    ensure!(
+        total as u64 == file_len,
+        "snapshot size {file_len} disagrees with the chunk directory (want {total})"
+    );
+    Ok(info)
+}
+
+/// Read one length-prefixed, CRC-trailed chunk into `buf` (reused across
+/// chunks, so peak extra memory is the largest chunk — mirroring the
+/// streaming write side).
+fn next_chunk<R: Read>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+    name: &str,
+    declared: usize,
+    file_len: u64,
+) -> Result<()> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)
+        .with_context(|| format!("snapshot truncated before chunk {name:?}"))?;
+    let clen = u32::from_le_bytes(len4) as usize;
+    ensure!(
+        clen == declared,
+        "chunk {name:?} holds {clen} bytes but the directory declares {declared}"
+    );
+    ensure!(clen as u64 <= file_len, "chunk {name:?} is larger than the file");
+    buf.clear();
+    buf.resize(clen, 0);
+    r.read_exact(buf)
+        .with_context(|| format!("snapshot truncated inside chunk {name:?}"))?;
+    let mut crc4 = [0u8; 4];
+    r.read_exact(&mut crc4)
+        .with_context(|| format!("snapshot truncated at chunk {name:?} CRC"))?;
+    let want = u32::from_le_bytes(crc4);
+    let got = crc32(buf);
+    ensure!(got == want, "chunk {name:?} CRC mismatch ({got:08x} != {want:08x})");
+    Ok(())
+}
+
+/// Read + fully verify a snapshot: every CRC checked, every chunk decoded
+/// against the directory, trailing bytes rejected. Returns the header
+/// view, the reconstructed parameter store (native dtype) and the full
+/// training state. Streams chunk-at-a-time, so peak extra memory is one
+/// chunk plus the decoded state — never a second whole-file buffer.
+pub fn read_snapshot(path: &Path) -> Result<(SnapshotInfo, ParamStore, TrainState)> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("reading snapshot {}", path.display()))?;
+    let file_len = f.metadata()?.len();
+    let mut r = std::io::BufReader::new(f);
+    let (info, partial, _) = read_header(&mut r, file_len)?;
+    ensure!(
+        info.chunks.len() >= info.specs.len(),
+        "chunk directory is missing parameter chunks"
+    );
+
+    let mut buf: Vec<u8> = Vec::new();
+    let mut params = Vec::with_capacity(info.specs.len());
+    for (i, (name, shape)) in info.specs.iter().enumerate() {
+        let (chunk_name, declared) = &info.chunks[i];
+        ensure!(
+            chunk_name == &format!("param:{name}"),
+            "chunk {i} is {chunk_name:?}, expected param:{name}"
+        );
+        next_chunk(&mut r, &mut buf, chunk_name, *declared, file_len)?;
+        let tensor = decode_tensor(info.dtype, shape, &buf)
+            .with_context(|| format!("decoding param {name}"))?;
+        params.push(Param { name: name.clone(), tensor });
+    }
+    let store = ParamStore::new(params);
+
+    let mut opt_tensors = Vec::new();
+    for (i, (chunk_name, declared)) in info.chunks.iter().enumerate().skip(info.specs.len()) {
+        let Some(name) = chunk_name.strip_prefix("opt:") else {
+            bail!("chunk {i} is {chunk_name:?}, expected an opt: chunk");
+        };
+        next_chunk(&mut r, &mut buf, chunk_name, *declared, file_len)?;
+        ensure!(
+            buf.len() % 4 == 0,
+            "opt chunk {name:?} length {} is not a multiple of 4",
+            buf.len()
+        );
+        let values: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        opt_tensors.push((name.to_string(), values));
+    }
+    // The stream must be exhausted: trailing bytes mean the file and the
+    // directory disagree.
+    let mut extra = [0u8; 1];
+    let n = r.read(&mut extra)?;
+    ensure!(n == 0, "snapshot has trailing bytes past the last chunk");
+
+    let state = TrainState {
+        step: info.step,
+        eval_every: info.eval_every,
+        best_step: info.best_step,
+        best_val: if info.best_step == 0 { f64::NEG_INFINITY } else { info.best_val },
+        loss_curve: partial.loss_curve,
+        val_curve: partial.val_curve,
+        fo_rng: partial.fo_rng,
+        zo_rng: partial.zo_rng,
+        opt: OptState { t: partial.opt_t, tensors: opt_tensors },
+    };
+    Ok((info, store, state))
+}
+
+/// Full verification pass (`ckpt verify`): [`read_snapshot`], data
+/// discarded.
+pub fn verify(path: &Path) -> Result<SnapshotInfo> {
+    read_snapshot(path).map(|(info, _, _)| info)
+}
+
+fn diff_tensor(a: impl Iterator<Item = f32>, b: impl Iterator<Item = f32>) -> (usize, f64) {
+    let mut differing = 0usize;
+    let mut max_abs = 0.0f64;
+    for (x, y) in a.zip(b) {
+        // IEEE != : a NaN on either side (even on both) counts as a
+        // difference — a diff is about matching state, not arithmetic.
+        if x != y {
+            differing += 1;
+            let d = ((x as f64) - (y as f64)).abs();
+            if !d.is_finite() {
+                // NaN-vs-finite (or ±inf) differences must not report as
+                // "max |Δ| 0" — surface them as unbounded.
+                max_abs = f64::INFINITY;
+            } else if d > max_abs {
+                max_abs = d;
+            }
+        }
+    }
+    (differing, max_abs)
+}
+
+/// Human-readable comparison of two snapshots (`ckpt diff`): header
+/// fields, then per-tensor differing-element counts and max |Δ| (values
+/// compared widened to f32, so an f32 and a bf16 snapshot of the same
+/// run are commensurable).
+pub fn diff_report(path_a: &Path, path_b: &Path) -> Result<String> {
+    use std::fmt::Write as _;
+    let (ia, pa, sa) = read_snapshot(path_a)?;
+    let (ib, pb, sb) = read_snapshot(path_b)?;
+    let mut out = String::new();
+    let mut header_diffs = 0usize;
+    {
+        let mut field = |name: &str, a: String, b: String| {
+            let marker = if a == b { " " } else { "!" };
+            if a != b {
+                header_diffs += 1;
+            }
+            let _ = writeln!(out, "{marker} {name:<14} {a:<28} {b}");
+        };
+        field("identity", ia.identity.clone(), ib.identity.clone());
+        field("identity_hash", ia.identity_hash.clone(), ib.identity_hash.clone());
+        field("dtype", ia.dtype.label().to_string(), ib.dtype.label().to_string());
+        field("optimizer", ia.opt_name.clone(), ib.opt_name.clone());
+        field("step", ia.step.to_string(), ib.step.to_string());
+        field("eval_every", ia.eval_every.to_string(), ib.eval_every.to_string());
+        field("best_step", ia.best_step.to_string(), ib.best_step.to_string());
+        field("best_val", format!("{}", ia.best_val), format!("{}", ib.best_val));
+    }
+    if ia.specs != ib.specs {
+        out.push_str("! parameter layouts differ — tensor diff skipped\n");
+        return Ok(out);
+    }
+    let mut total_diff = 0usize;
+    for (a, b) in pa.iter().zip(pb.iter()) {
+        let (n, max) = diff_tensor(a.tensor.iter_f32(), b.tensor.iter_f32());
+        total_diff += n;
+        if n > 0 {
+            let _ = writeln!(
+                out,
+                "! param {:<20} {n} / {} element(s) differ, max |Δ| {max:.3e}",
+                a.name,
+                a.tensor.len()
+            );
+        }
+    }
+    let opt_names: std::collections::BTreeSet<&String> = sa
+        .opt
+        .tensors
+        .iter()
+        .chain(sb.opt.tensors.iter())
+        .map(|(n, _)| n)
+        .collect();
+    fn lookup(s: &TrainState) -> BTreeMap<&String, &Vec<f32>> {
+        s.opt.tensors.iter().map(|(n, v)| (n, v)).collect()
+    }
+    let (la, lb) = (lookup(&sa), lookup(&sb));
+    for name in opt_names {
+        match (la.get(name), lb.get(name)) {
+            (Some(a), Some(b)) if a.len() == b.len() => {
+                let (n, max) = diff_tensor(a.iter().copied(), b.iter().copied());
+                total_diff += n;
+                if n > 0 {
+                    let _ = writeln!(
+                        out,
+                        "! opt   {:<20} {n} / {} element(s) differ, max |Δ| {max:.3e}",
+                        name,
+                        a.len()
+                    );
+                }
+            }
+            _ => {
+                total_diff += 1;
+                let _ = writeln!(out, "! opt   {name:<20} present/shaped differently");
+            }
+        }
+    }
+    if header_diffs == 0 && total_diff == 0 {
+        out.push_str("snapshots are identical\n");
+    } else {
+        let _ = writeln!(
+            out,
+            "{header_diffs} header field(s) and {total_diff} tensor element(s) differ"
+        );
+    }
+    Ok(out)
+}

@@ -186,6 +186,16 @@ impl Config {
             verbose: self.bool_or("train.verbose", true)?,
             // `[perf] noise_workers = N` pins the ZO sweep pool; 0 = auto.
             noise_workers: self.usize_or("perf.noise_workers", 0)?,
+            // `[train] ckpt_dir` enables crash-safe snapshots + resume;
+            // `ckpt_every` 0 = snapshot at the eval cadence.
+            ckpt_dir: self
+                .get("train.ckpt_dir")
+                .filter(|s| !s.is_empty())
+                .map(std::path::PathBuf::from),
+            ckpt_every: self.usize_or("train.ckpt_every", 0)?,
+            ckpt_keep: self.usize_or("train.ckpt_keep", 3)?,
+            ckpt_identity: String::new(),
+            halt_after: self.usize_or("train.halt_after", 0)?,
         })
     }
 
@@ -288,6 +298,25 @@ verbose = false
     fn perf_noise_workers_parses() {
         let c = Config::parse("[perf]\nnoise_workers = 4").unwrap();
         assert_eq!(c.train_config().unwrap().noise_workers, 4);
+    }
+
+    #[test]
+    fn ckpt_keys_parse_and_default_off() {
+        let c = Config::parse("").unwrap();
+        let t = c.train_config().unwrap();
+        assert_eq!(t.ckpt_dir, None);
+        assert_eq!(t.ckpt_every, 0);
+        assert_eq!(t.ckpt_keep, 3);
+        assert_eq!(t.halt_after, 0);
+        let c = Config::parse(
+            "[train]\nckpt_dir = \"results/ck\"\nckpt_every = 5\nckpt_keep = 2\nhalt_after = 9",
+        )
+        .unwrap();
+        let t = c.train_config().unwrap();
+        assert_eq!(t.ckpt_dir.as_deref(), Some(std::path::Path::new("results/ck")));
+        assert_eq!(t.ckpt_every, 5);
+        assert_eq!(t.ckpt_keep, 2);
+        assert_eq!(t.halt_after, 9);
     }
 
     #[test]

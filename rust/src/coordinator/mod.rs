@@ -10,7 +10,15 @@
 //!  4. evaluates validation accuracy every `eval_every` steps (the paper
 //!     checks 1/20 of total steps, App. D.5), tracks the best checkpoint,
 //!     and reports the paper's headline metrics: best-validation accuracy,
-//!     test accuracy at best validation, and wall-clock time to best.
+//!     test accuracy at best validation, and wall-clock time to best,
+//!  5. optionally snapshots the full training state into a `ckpt`
+//!     directory (cadence: `ckpt_every` steps, or the eval cadence when
+//!     unset) and, on restart, **resumes from the latest valid snapshot**
+//!     — byte-identically to the uninterrupted run, because every input
+//!     of a step is either restored exactly (params, optimizer state,
+//!     sampler RNG streams, curves, best-val tracker) or a pure function
+//!     of `(run seed, step)` (step seeds, and through them the replayed
+//!     ZO noise).
 
 pub mod eval;
 
@@ -18,8 +26,9 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::ckpt::{Checkpointer, ResumeCheck, TrainState};
 use crate::data::{partition, Dataset, Example, Sampler};
 use crate::jsonlite::{obj, Json};
 use crate::metrics::{Curve, JsonlLogger};
@@ -29,6 +38,25 @@ use crate::runtime::ModelExec;
 use crate::zorng::derive_seed;
 
 pub use eval::{evaluate, EvalOut};
+
+/// Typed early-exit raised by [`train`] when `halt_after` preempts the
+/// run: deterministic in-process stand-in for a mid-run SIGKILL (the
+/// on-disk state is the same — the latest checkpoint — since snapshot
+/// writes are atomic). The sweep worker downcasts it to count a run as
+/// halted rather than failed.
+#[derive(Clone, Copy, Debug)]
+pub struct Halted {
+    /// Completed steps at the moment of preemption.
+    pub at_step: usize,
+}
+
+impl std::fmt::Display for Halted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "training halted after step {} (session step budget)", self.at_step)
+    }
+}
+
+impl std::error::Error for Halted {}
 
 /// Training-run configuration.
 #[derive(Clone, Debug)]
@@ -48,6 +76,24 @@ pub struct TrainConfig {
     /// `min(cores, 8)`). Bit-exact at any value — the block noise is
     /// counter-addressed.
     pub noise_workers: usize,
+    /// Checkpoint directory; None disables checkpointing entirely.
+    pub ckpt_dir: Option<std::path::PathBuf>,
+    /// Snapshot cadence in steps; 0 = at the eval cadence. Snapshots are
+    /// additionally always written at best-validation improvements (so
+    /// the best parameters are reloadable) and at a `halt_after` stop.
+    pub ckpt_every: usize,
+    /// Keep-last-K snapshot retention (best-referenced snapshots are
+    /// always kept on top); clamped to ≥ 1.
+    pub ckpt_keep: usize,
+    /// Identity string stamped into (and demanded of) every snapshot.
+    /// Empty = derived from optimizer/task/seed/steps/dtype; the sweep
+    /// worker passes the run id.
+    pub ckpt_identity: String,
+    /// Preemption budget: stop with a [`Halted`] error after this many
+    /// steps *this session* (0 = never). With checkpointing enabled the
+    /// halt step is snapshotted first, so a later call resumes exactly
+    /// there — the deterministic mid-run-kill used by tests and CI.
+    pub halt_after: usize,
 }
 
 impl Default for TrainConfig {
@@ -60,6 +106,11 @@ impl Default for TrainConfig {
             log_path: None,
             verbose: false,
             noise_workers: 0,
+            ckpt_dir: None,
+            ckpt_every: 0,
+            ckpt_keep: 3,
+            ckpt_identity: String::new(),
+            halt_after: 0,
         }
     }
 }
@@ -74,6 +125,10 @@ pub struct RunResult {
     pub best_val_step: usize,
     /// Wall-clock seconds from step 0 to the best-validation checkpoint
     /// (the paper's "time to best validation", compile time excluded).
+    /// Session-local: on a checkpoint-resumed run the clock restarts, so
+    /// this is 0.0 when the best predates the resume — like `val_times`,
+    /// wall-clock is telemetry outside the byte-identity contract, and
+    /// the sweep worker stamps resumed runs' times rows with a note.
     pub time_to_best_secs: f64,
     pub test_acc: f64,
     pub test_f1: f64,
@@ -82,7 +137,17 @@ pub struct RunResult {
     pub loss_curve: Curve,
     pub val_curve: Curve,
     /// Wall-clock at each eval point (for loss-vs-time plots, Fig. 11).
+    /// Points restored from a checkpoint carry 0.0 — wall-clock is
+    /// telemetry, outside the byte-identical resume contract.
     pub val_times: Vec<f64>,
+    /// Step the run resumed from, when it restarted off a checkpoint
+    /// (None for an uninterrupted run). Telemetry: the sweep worker
+    /// surfaces it in the manifest *times* side file, never in the
+    /// deterministic manifest row.
+    pub resumed_from_step: Option<usize>,
+    /// Checkpoint anomalies worth surfacing (e.g. corrupt snapshots
+    /// skipped before a from-scratch restart); empty when clean.
+    pub ckpt_note: String,
 }
 
 impl RunResult {
@@ -100,42 +165,75 @@ impl RunResult {
             ("final_train_loss", Json::from(self.final_train_loss)),
             ("loss_curve", self.loss_curve.to_json()),
             ("val_curve", self.val_curve.to_json()),
+            (
+                "resumed_from_step",
+                match self.resumed_from_step {
+                    Some(s) => Json::from(s),
+                    None => Json::Null,
+                },
+            ),
+            ("ckpt_note", Json::from(self.ckpt_note.clone())),
         ])
     }
+}
+
+/// One prefetched step: the batches plus the sampler RNG states *after*
+/// this step's draws. The states ride with the batches (instead of being
+/// read off the live samplers) because the feeder runs ahead of the
+/// consumer — a checkpoint taken after step `s` must serialize the
+/// streams as of step `s`, not as of wherever prefetch has reached.
+struct FeedItem {
+    batches: StepBatches,
+    fo_rng: [u64; 4],
+    zo_rng: [u64; 4],
 }
 
 /// Deterministic batch feeder running on its own thread.
 ///
 /// Produces the `StepBatches` stream for the whole run up front-of-need
 /// (bounded channel, depth 4) so batch construction overlaps XLA
-/// execution — the L3 analogue of an input pipeline.
+/// execution — the L3 analogue of an input pipeline. On resume the
+/// samplers are rebuilt mid-stream from checkpointed RNG states, so the
+/// continued batch sequence is bit-identical to the uninterrupted one.
 struct BatchFeeder {
-    rx: mpsc::Receiver<StepBatches>,
+    rx: mpsc::Receiver<FeedItem>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl BatchFeeder {
+    #[allow(clippy::too_many_arguments)]
     fn spawn(
         examples: Arc<Vec<Example>>,
         d0: Vec<usize>,
         d1: Vec<usize>,
         needs_fo: usize,
         needs_zo: usize,
-        steps: usize,
+        steps_remaining: usize,
         seed: u64,
+        resume_states: Option<([u64; 4], [u64; 4])>,
     ) -> Self {
         let (tx, rx) = mpsc::sync_channel(4);
         let handle = std::thread::spawn(move || {
-            let mut s_fo = Sampler::new(&d1, derive_seed(seed, 0xF0));
-            let mut s_zo = Sampler::new(&d0, derive_seed(seed, 0x20));
-            for _ in 0..steps {
+            let (mut s_fo, mut s_zo) = match resume_states {
+                Some((fo, zo)) => (Sampler::from_state(&d1, fo), Sampler::from_state(&d0, zo)),
+                None => (
+                    Sampler::new(&d1, derive_seed(seed, 0xF0)),
+                    Sampler::new(&d0, derive_seed(seed, 0x20)),
+                ),
+            };
+            for _ in 0..steps_remaining {
                 let fo = (needs_fo > 0).then(|| {
                     crate::data::training_batch(&examples, &s_fo.draw(needs_fo))
                 });
                 let zo = (needs_zo > 0).then(|| {
                     crate::data::training_batch(&examples, &s_zo.draw(needs_zo))
                 });
-                if tx.send(StepBatches { fo, zo }).is_err() {
+                let item = FeedItem {
+                    batches: StepBatches { fo, zo },
+                    fo_rng: s_fo.rng_state(),
+                    zo_rng: s_zo.rng_state(),
+                };
+                if tx.send(item).is_err() {
                     break; // consumer dropped (early stop)
                 }
             }
@@ -143,7 +241,7 @@ impl BatchFeeder {
         Self { rx, handle: Some(handle) }
     }
 
-    fn next(&self) -> Option<StepBatches> {
+    fn next(&self) -> Option<FeedItem> {
         self.rx.recv().ok()
     }
 }
@@ -161,10 +259,82 @@ impl Drop for BatchFeeder {
     }
 }
 
+/// Deterministic content fingerprint of a dataset (all three splits:
+/// sizes, answers, token streams). Folded into the derived checkpoint
+/// identity so a resume is refused when the dataset changed — a
+/// different generation seed or split size yields different batches and
+/// eval sets, and grafting old state onto them would produce a
+/// trajectory that is byte-identical to nothing. Costs one FNV pass over
+/// the tokens, noise next to a single training step.
+fn dataset_fingerprint(ds: &Dataset) -> u64 {
+    use crate::zorng::{fnv1a_word, FNV_OFFSET};
+    let mut h = FNV_OFFSET;
+    for split in [&ds.train, &ds.val, &ds.test] {
+        h = fnv1a_word(h, split.len() as u64);
+        for e in split.iter() {
+            h = fnv1a_word(h, e.answer as u64);
+            h = fnv1a_word(h, e.context.len() as u64);
+            for &t in &e.context {
+                h = fnv1a_word(h, t as u64);
+            }
+        }
+    }
+    h
+}
+
+/// The `"step"` value of one telemetry row. Rows of a *diverged* run
+/// hold `NaN` losses, which jsonlite's writer emits but its parser
+/// rejects — those rows must still be trimmable, so fall back to a
+/// textual scan of the (BTreeMap-ordered, verbatim) `"step":` field.
+fn log_row_step(line: &str) -> Option<usize> {
+    if let Ok(v) = Json::parse(line) {
+        return v.get("step").ok()?.as_usize().ok();
+    }
+    let rest = &line[line.find("\"step\":")? + 7..];
+    let digits: &str = &rest[..rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len())];
+    digits.parse().ok()
+}
+
+/// Drop telemetry rows the resumed session will re-log: step rows with
+/// `step >= start_step`, and eval rows (they carry `val_acc`) past the
+/// resume point — the eval *at* `start_step` belongs to the previous
+/// session (it ran after the step the snapshot captured) and is kept.
+/// Rows whose step cannot be determined are kept (never destroy
+/// telemetry we don't understand). Telemetry only; failures swallowed.
+fn trim_log_for_resume(path: &std::path::Path, start_step: usize) {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return;
+    };
+    let kept: String = text
+        .lines()
+        .filter(|line| {
+            let Some(step) = log_row_step(line) else { return true };
+            if step < start_step {
+                return true;
+            }
+            // Eval rows always parse (accuracies are finite); the one at
+            // exactly start_step belongs to the previous session.
+            step == start_step
+                && Json::parse(line).map(|v| v.opt("val_acc").is_some()).unwrap_or(false)
+        })
+        .map(|l| format!("{l}\n"))
+        .collect();
+    // Atomic rewrite: a kill mid-write must not destroy the surviving
+    // rows this function exists to preserve.
+    let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("log");
+    let tmp = path.with_file_name(format!("{name}.trim.tmp"));
+    if std::fs::write(&tmp, kept).is_ok() {
+        let _ = std::fs::rename(&tmp, path);
+    }
+}
+
 /// Fine-tune `params` with `opt` on `dataset`, partitioned at `lt`.
 ///
 /// This is Algorithm 1 at system level: the partition, the per-step
 /// sampling of `B⁰`/`B¹`, the in-place update, and the validation loop.
+/// With `cfg.ckpt_dir` set it is also crash-safe: the run resumes from
+/// its latest valid snapshot and finishes byte-identically to an
+/// uninterrupted run (see the module docs and `tests/ckpt_resume.rs`).
 pub fn train(
     exec: &mut dyn ModelExec,
     params: &mut ParamStore,
@@ -197,18 +367,6 @@ pub fn train(
         (all.clone(), all)
     };
 
-    let examples = Arc::new(dataset.train.clone());
-    let feeder = BatchFeeder::spawn(
-        examples,
-        d0,
-        d1,
-        needs.fo,
-        needs.zo,
-        cfg.steps,
-        cfg.seed,
-    );
-
-    let mut logger = JsonlLogger::new(cfg.log_path.as_deref())?;
     let mut loss_curve = Curve::default();
     let mut val_curve = Curve::default();
     let mut val_times = Vec::new();
@@ -216,26 +374,145 @@ pub fn train(
     let mut best_step = 0;
     let mut best_params: Option<ParamStore> = None;
     let mut time_to_best = 0.0;
+
+    // -- checkpointing: open the directory, try to resume ----------------
+    // The derived fallback identity folds in everything that steers the
+    // trajectory: the optimizer's hyper-parameter-complete `ckpt_id`
+    // (lr, eps, alpha, moments config, …), batch needs, task + a content
+    // fingerprint of all three data splits, partition threshold, seeds,
+    // budgets, dtype — so an edit to any of them between kill and
+    // restart is refused rather than silently grafted. Callers with an
+    // externally defined identity (the sweep's run_id, `addax train`'s
+    // model/config identity) pass `ckpt_identity` instead. Computed only
+    // when checkpointing is on: the fingerprint walks every token of the
+    // dataset, which a non-checkpointing run should not pay for.
+    let ckpt = match &cfg.ckpt_dir {
+        Some(dir) => {
+            let identity = if cfg.ckpt_identity.is_empty() {
+                format!(
+                    "{}~b{}-{}.{}.d{:016x}.l{}.s{}.t{}.e{}.x{}.{}",
+                    opt.ckpt_id(),
+                    needs.fo,
+                    needs.zo,
+                    dataset.task.name,
+                    dataset_fingerprint(dataset),
+                    // The partition threshold steers which examples feed
+                    // D⁰/D¹ — an lt edit must refuse stale snapshots too.
+                    lt,
+                    cfg.seed,
+                    cfg.steps,
+                    // The resolved cadence: a cadence edit must change the
+                    // identity (not just fail ResumeCheck), or the stale
+                    // snapshots would squat keep-last-K as same-identity
+                    // files GC refuses to evict.
+                    eval_every,
+                    cfg.eval_examples,
+                    params.dtype().label()
+                )
+            } else {
+                cfg.ckpt_identity.clone()
+            };
+            Some((Checkpointer::new(dir, &identity, opt.name(), cfg.ckpt_keep)?, identity))
+        }
+        None => None,
+    };
+    if cfg.halt_after > 0 && ckpt.is_none() {
+        // Without a snapshot the halted run restarts from step 0 and
+        // halts at the same step forever — same refusal as the sweep's
+        // `--halt-after` + `--no-ckpt` guard.
+        bail!("halt_after needs checkpointing (set ckpt_dir), or the run can never finish");
+    }
+    let mut start_step = 0usize;
+    let mut resumed_from_step = None;
+    let mut ckpt_note = String::new();
+    let mut resume_states: Option<([u64; 4], [u64; 4])> = None;
+    if let Some((ck, identity)) = &ckpt {
+        let specs: Vec<(String, Vec<usize>)> =
+            params.iter().map(|p| (p.name.clone(), p.tensor.shape.clone())).collect();
+        let scan = ck.resume(&ResumeCheck {
+            identity: identity.as_str(),
+            dtype: params.dtype(),
+            specs: &specs,
+            eval_every,
+            max_steps: cfg.steps,
+        });
+        if scan.rejected > 0 {
+            ckpt_note = format!("{} invalid snapshot(s) skipped", scan.rejected);
+        }
+        if let Some(point) = scan.point {
+            *params = point.params;
+            params.set_noise_workers(cfg.noise_workers);
+            opt.load_state(&point.state.opt)?;
+            loss_curve = point.state.loss_curve;
+            val_curve = point.state.val_curve;
+            val_times = vec![0.0; val_curve.points.len()];
+            best_val = point.state.best_val;
+            best_step = point.state.best_step;
+            best_params = point.best_params;
+            start_step = point.state.step;
+            resumed_from_step = Some(start_step);
+            resume_states = Some((point.state.fo_rng, point.state.zo_rng));
+            if cfg.verbose {
+                println!("[{}] resuming from checkpoint at step {}", opt.name(), start_step);
+            }
+        } else if scan.rejected > 0 {
+            ckpt_note.push_str("; restarted from scratch");
+        }
+    }
+
+    let examples = Arc::new(dataset.train.clone());
+    let feeder = BatchFeeder::spawn(
+        examples,
+        d0,
+        d1,
+        needs.fo,
+        needs.zo,
+        cfg.steps - start_step,
+        cfg.seed,
+        resume_states,
+    );
+
+    // A resumed run appends to the telemetry log — truncating would
+    // destroy the first session's rows for steps 0..start_step. Rows for
+    // steps the resumed session will replay (resume from an *older*
+    // snapshot re-executes the gap) are dropped first, so the combined
+    // log keeps exactly one row per step / eval point.
+    let mut logger = if start_step > 0 {
+        if let Some(path) = cfg.log_path.as_deref() {
+            trim_log_for_resume(path, start_step);
+        }
+        JsonlLogger::append(cfg.log_path.as_deref())?
+    } else {
+        JsonlLogger::new(cfg.log_path.as_deref())?
+    };
+    let mut steps_this_session = 0usize;
     let t0 = Instant::now();
 
-    for step in 0..cfg.steps {
-        let batches = feeder.next().expect("feeder ended early");
+    for step in start_step..cfg.steps {
+        // `item` carries the sampler RNG states as of *this* step's draws
+        // (attached by the feeder, since prefetch runs ahead) — exactly
+        // what a snapshot taken after this step must serialize.
+        let item = feeder.next().expect("feeder ended early");
         let step_seed = derive_seed(cfg.seed, step as u64);
-        let stats = opt.step(params, exec, &batches, step_seed)?;
+        let stats = opt.step(params, exec, &item.batches, step_seed)?;
         loss_curve.push(step, stats.loss);
         logger.log(obj(vec![
             ("step", Json::from(step)),
             ("loss", Json::from(stats.loss)),
+            ("zo_loss", Json::from(stats.zo_loss)),
             ("g0", Json::from(stats.g0)),
             ("grad_norm", Json::from(stats.grad_norm)),
             ("elapsed", Json::from(t0.elapsed().as_secs_f64())),
         ]));
 
-        if (step + 1) % eval_every == 0 || step + 1 == cfg.steps {
+        let is_eval = (step + 1) % eval_every == 0 || step + 1 == cfg.steps;
+        let mut improved = false;
+        if is_eval {
             let ev = evaluate(exec, params, &dataset.val, cfg.eval_examples)?;
             val_curve.push(step + 1, ev.accuracy);
             val_times.push(t0.elapsed().as_secs_f64());
             if ev.accuracy > best_val {
+                improved = true;
                 best_val = ev.accuracy;
                 best_step = step + 1;
                 best_params = Some(params.clone());
@@ -257,6 +534,42 @@ pub fn train(
                 ("step", Json::from(step + 1)),
                 ("val_acc", Json::from(ev.accuracy)),
             ]));
+        }
+
+        steps_this_session += 1;
+        let halting =
+            cfg.halt_after > 0 && steps_this_session >= cfg.halt_after && step + 1 < cfg.steps;
+        if let Some((ck, _)) = &ckpt {
+            let step_no = step + 1;
+            // Cadence: `ckpt_every` steps when set, else every eval. A
+            // best-val improvement always snapshots (the best params must
+            // stay reloadable), as does a preemption stop.
+            let on_cadence = if cfg.ckpt_every > 0 {
+                step_no % cfg.ckpt_every == 0
+            } else {
+                is_eval
+            };
+            if on_cadence || improved || halting {
+                let state = TrainState {
+                    step: step_no,
+                    eval_every,
+                    best_val,
+                    best_step,
+                    loss_curve: loss_curve.clone(),
+                    val_curve: val_curve.clone(),
+                    fo_rng: item.fo_rng,
+                    zo_rng: item.zo_rng,
+                    opt: opt.state(),
+                };
+                ck.save(params, &state)?;
+                if improved {
+                    ck.mark_best(step_no, best_val)?;
+                }
+            }
+        }
+        if halting {
+            logger.flush();
+            return Err(Halted { at_step: step + 1 }.into());
         }
     }
     logger.flush();
@@ -280,6 +593,8 @@ pub fn train(
         loss_curve,
         val_curve,
         val_times,
+        resumed_from_step,
+        ckpt_note,
     })
 }
 
@@ -376,10 +691,156 @@ mod tests {
         train(&mut exec, &mut params, &mut opt, &ds, 9999, &cfg).unwrap();
         let text = std::fs::read_to_string(&log).unwrap();
         assert!(text.lines().count() >= 10);
-        // each line parses as JSON
+        // each line parses as JSON; step rows carry the ZO-batch loss
+        // (surfaced instead of discarded — 0.0 for this FO-only run)
         for line in text.lines() {
             crate::jsonlite::Json::parse(line).unwrap();
         }
+        assert!(text.contains("\"zo_loss\""), "step rows must surface zo_loss");
         std::fs::remove_file(log).ok();
+    }
+
+    #[test]
+    fn halted_run_resumes_byte_identically() {
+        let dir = std::env::temp_dir()
+            .join(format!("addax_coord_halt_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = TrainConfig { steps: 30, eval_every: 5, seed: 3, ..Default::default() };
+
+        // Control: uninterrupted, no checkpointing at all.
+        let (mut exec, mut params, ds) = quad_setup(12);
+        let mut opt = Addax::new(0.05, 1e-3, 0.3, 2, 2);
+        let control = train(&mut exec, &mut params, &mut opt, &ds, 40, &cfg).unwrap();
+        assert_eq!(control.resumed_from_step, None);
+
+        // Preempted at step 7 (mid eval cadence), then resumed. The JSONL
+        // telemetry log must accumulate across the two sessions.
+        let log = dir.join("run.jsonl");
+        let (mut exec2, mut params2, ds2) = quad_setup(12);
+        let mut opt2 = Addax::new(0.05, 1e-3, 0.3, 2, 2);
+        let halt_cfg = TrainConfig {
+            ckpt_dir: Some(dir.clone()),
+            halt_after: 7,
+            log_path: Some(log.clone()),
+            ..cfg.clone()
+        };
+        let err = train(&mut exec2, &mut params2, &mut opt2, &ds2, 40, &halt_cfg).unwrap_err();
+        let halted = err.downcast_ref::<Halted>().expect("typed Halted error");
+        assert_eq!(halted.at_step, 7);
+
+        let (mut exec3, mut params3, ds3) = quad_setup(12);
+        let mut opt3 = Addax::new(0.05, 1e-3, 0.3, 2, 2);
+        let resume_cfg = TrainConfig {
+            ckpt_dir: Some(dir.clone()),
+            log_path: Some(log.clone()),
+            ..cfg.clone()
+        };
+        let resumed = train(&mut exec3, &mut params3, &mut opt3, &ds3, 40, &resume_cfg).unwrap();
+
+        assert_eq!(resumed.resumed_from_step, Some(7));
+        // Resume appended: the first session's rows (steps 0..7) survive
+        // alongside the second's — and the combined log holds EXACTLY one
+        // step row per step (replayed rows are trimmed, not duplicated).
+        let log_text = std::fs::read_to_string(&log).unwrap();
+        assert!(log_text.contains("\"step\":0,"), "first-session rows must survive");
+        let step_rows: Vec<usize> = log_text
+            .lines()
+            .filter(|l| l.contains("\"loss\""))
+            .map(|l| {
+                crate::jsonlite::Json::parse(l).unwrap().get("step").unwrap().as_usize().unwrap()
+            })
+            .collect();
+        assert_eq!(step_rows, (0..30).collect::<Vec<_>>(), "one step row per step");
+        assert!(resumed.ckpt_note.is_empty(), "{}", resumed.ckpt_note);
+        // The defining contract: deterministic outputs are byte-identical.
+        assert_eq!(resumed.loss_curve.points, control.loss_curve.points);
+        assert_eq!(resumed.val_curve.points, control.val_curve.points);
+        assert_eq!(resumed.best_val_acc, control.best_val_acc);
+        assert_eq!(resumed.best_val_step, control.best_val_step);
+        assert_eq!(resumed.test_acc, control.test_acc);
+        assert_eq!(resumed.test_f1, control.test_f1);
+        assert_eq!(resumed.final_train_loss, control.final_train_loss);
+        assert_eq!(params3.dist_sq(&params), 0.0, "final params must match bitwise");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dataset_fingerprint_tracks_content() {
+        let gen = |seed: u64, n: usize| {
+            Dataset::generate(opt_task("sst2").unwrap(), 512, Some(64), seed, n, 20, 20)
+        };
+        let a = gen(1, 50);
+        assert_eq!(dataset_fingerprint(&a), dataset_fingerprint(&gen(1, 50)));
+        assert_ne!(dataset_fingerprint(&a), dataset_fingerprint(&gen(2, 50)), "data seed");
+        assert_ne!(dataset_fingerprint(&a), dataset_fingerprint(&gen(1, 60)), "split size");
+    }
+
+    #[test]
+    fn halt_without_checkpointing_is_refused() {
+        let (mut exec, mut params, ds) = quad_setup(8);
+        let mut opt = IpSgd::new(0.1, 2);
+        let cfg = TrainConfig { steps: 10, halt_after: 3, ..Default::default() };
+        let err = train(&mut exec, &mut params, &mut opt, &ds, 9999, &cfg).unwrap_err();
+        assert!(format!("{err}").contains("checkpointing"), "{err}");
+    }
+
+    #[test]
+    fn resume_refuses_a_config_edit_and_restarts_clean() {
+        // Editing the optimizer between kill and restart changes the
+        // derived identity, so the stale snapshots are rejected and the
+        // run restarts from scratch with a note — never a silent graft.
+        let dir = std::env::temp_dir()
+            .join(format!("addax_coord_edit_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = TrainConfig {
+            steps: 20,
+            eval_every: 5,
+            seed: 2,
+            ckpt_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let (mut exec, mut params, ds) = quad_setup(8);
+        let mut opt = IpSgd::new(0.1, 2);
+        let halt_cfg = TrainConfig { halt_after: 6, ..cfg.clone() };
+        train(&mut exec, &mut params, &mut opt, &ds, 9999, &halt_cfg).unwrap_err();
+
+        let (mut exec2, mut params2, ds2) = quad_setup(8);
+        let mut edited = IpSgd::new(0.05, 2); // different lr
+        let r = train(&mut exec2, &mut params2, &mut edited, &ds2, 9999, &cfg).unwrap();
+        assert_eq!(r.resumed_from_step, None, "edited config must not resume");
+        assert!(r.ckpt_note.contains("invalid snapshot"), "{}", r.ckpt_note);
+        assert!(r.ckpt_note.contains("scratch"), "{}", r.ckpt_note);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn adam_halt_resume_restores_moments_exactly() {
+        // Adam is the stateful case: without the OptState seam the
+        // moments would restart at zero and the trajectories diverge.
+        let dir = std::env::temp_dir()
+            .join(format!("addax_coord_adam_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = TrainConfig { steps: 24, eval_every: 6, seed: 9, ..Default::default() };
+        let (mut exec, mut params, ds) = quad_setup(10);
+        let mut opt = crate::optim::Adam::new(0.05, 3);
+        let control = train(&mut exec, &mut params, &mut opt, &ds, 9999, &cfg).unwrap();
+
+        let (mut exec2, mut params2, ds2) = quad_setup(10);
+        let mut opt2 = crate::optim::Adam::new(0.05, 3);
+        let halt_cfg = TrainConfig {
+            ckpt_dir: Some(dir.clone()),
+            halt_after: 11,
+            ..cfg.clone()
+        };
+        train(&mut exec2, &mut params2, &mut opt2, &ds2, 9999, &halt_cfg).unwrap_err();
+        let (mut exec3, mut params3, ds3) = quad_setup(10);
+        let mut opt3 = crate::optim::Adam::new(0.05, 3);
+        let resume_cfg = TrainConfig { ckpt_dir: Some(dir.clone()), ..cfg.clone() };
+        let resumed = train(&mut exec3, &mut params3, &mut opt3, &ds3, 9999, &resume_cfg).unwrap();
+        assert_eq!(resumed.resumed_from_step, Some(11));
+        assert_eq!(resumed.loss_curve.points, control.loss_curve.points);
+        assert_eq!(params3.dist_sq(&params), 0.0);
+        assert_eq!(opt3.state(), opt.state(), "moments must land on the same bits");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

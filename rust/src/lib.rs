@@ -14,12 +14,15 @@
 //!   optimizers (Addax, MeZO, IP-SGD, SGD, Adam, hybrid ZO-FO), the GPU
 //!   memory simulator, the memory-aware sweep scheduler (`sched/`) that
 //!   packs concurrent runs onto device budgets behind a resumable
-//!   manifest, and the experiment harness regenerating every table/figure
-//!   of the paper as pure aggregations over that manifest.
+//!   manifest, the crash-safe checkpoint subsystem (`ckpt/`: versioned
+//!   CRC-checked tensor snapshots giving every run byte-identical
+//!   step-level resume), and the experiment harness regenerating every
+//!   table/figure of the paper as pure aggregations over that manifest.
 //!
 //! Python never runs on the training path: the `addax` binary is
 //! self-contained once `make artifacts` has produced `artifacts/`.
 
+pub mod ckpt;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -4,6 +4,10 @@
 //! addax train  [--config FILE] [--set k=v ...]     fine-tune one run
 //! addax sweep  [--spec FILE | --smoke] [--budget-gb G] [--gpus N]
 //!              [--workers W] [--resume] [--manifest PATH] [--dry-run]
+//!              [--no-ckpt] [--ckpt-every N] [--ckpt-keep K]
+//!              [--halt-after N] [--dump-params]
+//! addax ckpt   inspect|verify FILE...              snapshot header / full CRC pass
+//! addax ckpt   diff A B                            compare two snapshots
 //! addax repro  <id|all> [--fast] [--model KEY]     regenerate a paper table/figure
 //! addax memory --geometry G --method M [-b B] [-l L] [--gpus N] [--device D]
 //! addax list                                       models, tasks, experiments
@@ -13,6 +17,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use addax::ckpt;
 use addax::config::Config;
 use addax::coordinator::train;
 use addax::data;
@@ -28,6 +33,7 @@ fn main() -> Result<()> {
     match args.first().map(String::as_str) {
         Some("train") => cmd_train(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
+        Some("ckpt") => cmd_ckpt(&args[1..]),
         Some("repro") => cmd_repro(&args[1..]),
         Some("memory") => cmd_memory(&args[1..]),
         Some("list") => cmd_list(),
@@ -48,6 +54,9 @@ fn print_help() {
          USAGE:\n  addax train  [--config FILE] [--set section.key=value ...]\n  \
          addax sweep  [--spec FILE | --smoke] [--budget-gb G] [--gpus N] [--workers W]\n  \
          \x20            [--resume] [--manifest PATH] [--dry-run] [--set section.key=value ...]\n  \
+         \x20            [--no-ckpt] [--ckpt-every N] [--ckpt-keep K] [--halt-after N]\n  \
+         \x20            [--dump-params]\n  \
+         addax ckpt   inspect FILE... | verify FILE... | diff A B\n  \
          addax repro  <id|all> [--fast] [--model KEY]\n  \
          addax memory --geometry G --method M [--batch B] [--len L] [--gpus N] [--hbm GB]\n  \
          \x20            [--dtype f32|bf16]\n  \
@@ -58,9 +67,18 @@ fn print_help() {
          (--budget-gb x --gpus), and executes each wave concurrently (--workers).\n  \
          Results append to a crash-safe JSONL manifest; --resume skips runs\n  \
          already recorded, and the compacted manifest is byte-identical for a\n  \
-         spec at any worker count (bf16 cells included). `repro` tables/figures\n  \
+         spec at any worker count (bf16 cells included). Runs checkpoint into\n  \
+         <manifest dir>/ckpt/<run_id>/ (ADDAXCK1 snapshots; --ckpt-every 0 =\n  \
+         eval cadence) so a killed run resumes at step granularity — byte-\n  \
+         identically. --halt-after N preempts every run after N steps (the\n  \
+         deterministic kill used by CI); --dump-params writes each finished\n  \
+         run's final parameters for byte-compare proofs. `repro` tables/figures\n  \
          aggregate from the same manifest. --smoke runs the built-in 24-run grid\n  \
-         (see configs/sweep_smoke.toml).\n\nEXPERIMENT IDS:\n  \
+         (see configs/sweep_smoke.toml).\n\nCKPT:\n  \
+         inspect prints a snapshot's header (identity hash, dtype, step, eval\n  \
+         cadence, tensors); verify additionally checks every chunk CRC; diff\n  \
+         compares two snapshots (header fields + per-tensor element diffs).\n\n\
+         EXPERIMENT IDS:\n  \
          fig3 fig4 fig5 fig6 fig8 fig11 theory table11 table12 table13 table14 table15 all"
     );
 }
@@ -101,20 +119,50 @@ fn cmd_train(args: &[String]) -> Result<()> {
 
     let mut exec = XlaExec::new(&default_artifacts_dir(), &model_key)?;
     let entry = exec.entry().clone();
+    // Bound once: the same values feed both the dataset and the snapshot
+    // identity below — two copies could drift and break resume refusal.
+    let data_seed = cfg.u64_or("data.seed", 0)?;
+    let n_train = cfg.usize_or("data.train", 1000)?;
+    let n_val = cfg.usize_or("data.val", 300)?;
+    let n_test = cfg.usize_or("data.test", 500)?;
     let ds = data::Dataset::generate(
         task,
         entry.vocab,
         Some(entry.max_len),
-        cfg.u64_or("data.seed", 0)?,
-        cfg.usize_or("data.train", 1000)?,
-        cfg.usize_or("data.val", 300)?,
-        cfg.usize_or("data.test", 500)?,
+        data_seed,
+        n_train,
+        n_val,
+        n_test,
     );
     // The AOT dump is f32; a bf16 store rounds it nearest-even on load.
     let dtype = cfg.dtype()?;
     let mut params = exec.load_initial_params()?.to_dtype(dtype);
     let mut opt = cfg.optimizer()?;
-    let tc = cfg.train_config()?;
+    let mut tc = cfg.train_config()?;
+    if tc.ckpt_dir.is_some() {
+        // Full-fidelity snapshot identity: the OptSpec id covers every
+        // hyper-parameter the named optimizer consumes, so editing lr/eps
+        // /batch between kill and restart refuses the stale snapshots.
+        // `e{}` is the raw eval_every (0 = steps/20): with steps already
+        // in the identity it resolves the cadence deterministically, so
+        // a cadence edit refuses (and lets GC evict) stale snapshots.
+        tc.ckpt_identity = format!(
+            "{}.{}.{}.l{}.ds{}.n{}-{}-{}.s{}.t{}.e{}.x{}.{}",
+            model_key,
+            cfg.opt_spec()?.id(),
+            task.name,
+            cfg.lt()?,
+            data_seed,
+            n_train,
+            n_val,
+            n_test,
+            tc.seed,
+            tc.steps,
+            tc.eval_every,
+            tc.eval_examples,
+            dtype.label(),
+        );
+    }
     println!(
         "train: model={model_key} task={} optimizer={} steps={} lt={} dtype={}",
         task.name,
@@ -124,6 +172,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
         dtype.label(),
     );
     let r = train(&mut exec, &mut params, &mut *opt, &ds, cfg.lt()?, &tc)?;
+    if let Some(step) = r.resumed_from_step {
+        println!("(resumed from checkpoint at step {step})");
+    }
+    if !r.ckpt_note.is_empty() {
+        println!("(checkpoint note: {})", r.ckpt_note);
+    }
     println!(
         "\nresult: best_val {:.3} @ step {} | test acc {:.3} f1 {:.3} | \
          time-to-best {:.1}s | total {:.1}s (compile {:.1}s excluded from steps)",
@@ -187,6 +241,20 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
             .unwrap_or("results/sweep/manifest.jsonl")
             .into(),
         verbose: true,
+        ckpt: !has(args, "--no-ckpt"),
+        ckpt_every: match flag(args, "--ckpt-every") {
+            Some(s) => s.parse().context("--ckpt-every wants an integer")?,
+            None => 0,
+        },
+        ckpt_keep: match flag(args, "--ckpt-keep") {
+            Some(s) => s.parse().context("--ckpt-keep wants an integer")?,
+            None => 2,
+        },
+        halt_after: match flag(args, "--halt-after") {
+            Some(s) => s.parse().context("--halt-after wants an integer")?,
+            None => 0,
+        },
+        dump_params: has(args, "--dump-params"),
     };
     println!(
         "sweep {:?}: {} runs over {} optimizer(s) x {} task(s) x {} seed(s), \
@@ -213,7 +281,73 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     }
     let summary = run_sweep(specs, &opts)?;
     println!("{}", summary.line());
+    if summary.halted > 0 {
+        println!(
+            "({} run(s) preempted by --halt-after and checkpointed; rerun with \
+             --resume to finish them step-level)",
+            summary.halted
+        );
+    }
     Ok(())
+}
+
+/// `addax ckpt inspect|verify|diff` — snapshot introspection.
+fn cmd_ckpt(args: &[String]) -> Result<()> {
+    let paths: Vec<&String> = args.iter().skip(1).filter(|a| !a.starts_with("--")).collect();
+    match args.first().map(String::as_str) {
+        Some("inspect") | Some("verify") => {
+            let full = args[0] == "verify";
+            if paths.is_empty() {
+                bail!("ckpt {} wants at least one snapshot file", args[0]);
+            }
+            let mut bad = 0usize;
+            for path in &paths {
+                let p = std::path::Path::new(path.as_str());
+                let res = if full { ckpt::verify(p) } else { ckpt::inspect(p) };
+                match res {
+                    Ok(info) => {
+                        println!(
+                            "{path}: OK{}\n  identity {} (hash {})\n  dtype {} | optimizer {} \
+                             | step {} | eval_every {} | best {} @ step {}\n  {} tensor(s), \
+                             {} chunk(s), {} payload bytes",
+                            if full { " (all CRCs verified)" } else { "" },
+                            info.identity,
+                            info.identity_hash,
+                            info.dtype.label(),
+                            info.opt_name,
+                            info.step,
+                            info.eval_every,
+                            info.best_val,
+                            info.best_step,
+                            info.specs.len(),
+                            info.chunks.len(),
+                            info.total_chunk_bytes(),
+                        );
+                    }
+                    Err(e) => {
+                        println!("{path}: BAD — {e:#}");
+                        bad += 1;
+                    }
+                }
+            }
+            if bad > 0 {
+                bail!("{bad} of {} snapshot(s) failed verification", paths.len());
+            }
+            Ok(())
+        }
+        Some("diff") => {
+            let [a, b] = paths.as_slice() else {
+                bail!("ckpt diff wants exactly two snapshot files");
+            };
+            let report = ckpt::diff_report(
+                std::path::Path::new(a.as_str()),
+                std::path::Path::new(b.as_str()),
+            )?;
+            print!("{report}");
+            Ok(())
+        }
+        other => bail!("ckpt wants inspect | verify | diff, got {other:?}"),
+    }
 }
 
 fn cmd_repro(args: &[String]) -> Result<()> {

@@ -42,7 +42,7 @@ pub fn macro_f1(pred: &[usize], truth: &[usize], n_classes: usize) -> f64 {
 }
 
 /// A (step, value) curve.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Curve {
     pub points: Vec<(usize, f64)>,
 }
@@ -101,17 +101,32 @@ pub struct JsonlLogger {
 }
 
 impl JsonlLogger {
-    /// `None` path = disabled logger (no-op).
+    /// `None` path = disabled logger (no-op). Truncates an existing file.
     pub fn new(path: Option<&Path>) -> Result<Self> {
+        Self::open(path, false)
+    }
+
+    /// Like [`JsonlLogger::new`] but appends to an existing file — what a
+    /// checkpoint-resumed run uses, so the rows its first session wrote
+    /// for the already-completed steps survive.
+    pub fn append(path: Option<&Path>) -> Result<Self> {
+        Self::open(path, true)
+    }
+
+    fn open(path: Option<&Path>, append: bool) -> Result<Self> {
         let out = match path {
             Some(p) => {
                 if let Some(dir) = p.parent() {
                     std::fs::create_dir_all(dir).ok();
                 }
-                Some(std::io::BufWriter::new(
-                    std::fs::File::create(p)
-                        .with_context(|| format!("creating log {}", p.display()))?,
-                ))
+                let file = std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(append)
+                    .write(true)
+                    .truncate(!append)
+                    .open(p)
+                    .with_context(|| format!("creating log {}", p.display()))?;
+                Some(std::io::BufWriter::new(file))
             }
             None => None,
         };
@@ -235,6 +250,30 @@ mod tests {
         assert_eq!(c.last(), Some(1.0));
         assert_eq!(c.first_below(1.5), Some(20));
         assert!((c.tail_mean(2) - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jsonl_logger_append_preserves_earlier_rows() {
+        let dir = std::env::temp_dir().join(format!("addax_jsonl_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("log.jsonl");
+        let mut a = JsonlLogger::new(Some(&path)).unwrap();
+        a.log(Json::from(1.0));
+        a.flush();
+        drop(a);
+        let mut b = JsonlLogger::append(Some(&path)).unwrap();
+        b.log(Json::from(2.0));
+        b.flush();
+        drop(b);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "1\n2\n", "append must keep the first session's rows");
+        // new() truncates
+        let mut c = JsonlLogger::new(Some(&path)).unwrap();
+        c.log(Json::from(3.0));
+        c.flush();
+        drop(c);
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "3\n");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -10,7 +10,7 @@ use crate::memory::Method;
 use crate::params::ParamStore;
 use crate::runtime::ModelExec;
 
-use super::{grad_global_norm, BatchNeeds, Optimizer, StepBatches, StepStats};
+use super::{fmt_f32, grad_global_norm, BatchNeeds, OptState, Optimizer, StepBatches, StepStats};
 
 #[derive(Clone, Debug)]
 pub struct Adam {
@@ -97,6 +97,7 @@ impl Optimizer for Adam {
         }
         Ok(StepStats {
             loss: g.loss as f64,
+            zo_loss: 0.0,
             g0: 0.0,
             grad_norm: norm,
             fwd_evals: 0,
@@ -111,6 +112,69 @@ impl Optimizer for Adam {
     fn lr(&self) -> f64 {
         self.lr as f64
     }
+
+    fn ckpt_id(&self) -> String {
+        format!(
+            "adam~lr{}~b{}~b1{}~b2{}~e{}",
+            fmt_f32(self.lr),
+            self.batch,
+            fmt_f32(self.beta1),
+            fmt_f32(self.beta2),
+            fmt_f32(self.eps)
+        )
+    }
+
+    /// Checkpoint seam: `t` plus the moments, fixed order `m0..mN, v0..vN`
+    /// (fp32 — exactly the in-memory representation, so a save/load
+    /// round-trip is bit-exact and a resumed trajectory cannot drift).
+    fn state(&self) -> OptState {
+        let mut tensors = Vec::with_capacity(self.m.len() + self.v.len());
+        for (i, m) in self.m.iter().enumerate() {
+            tensors.push((format!("m{i}"), m.clone()));
+        }
+        for (i, v) in self.v.iter().enumerate() {
+            tensors.push((format!("v{i}"), v.clone()));
+        }
+        OptState { t: self.t, tensors }
+    }
+
+    fn load_state(&mut self, state: &OptState) -> Result<()> {
+        if state.is_empty() {
+            // A pre-first-step snapshot: back to lazy initialization.
+            self.t = 0;
+            self.m.clear();
+            self.v.clear();
+            return Ok(());
+        }
+        let n = state.tensors.len();
+        if n == 0 {
+            // t > 0 with no moments (is_empty already handled t == 0):
+            // accepting it would lazily re-zero m/v while the bias
+            // correction continues from t — a silently wrong trajectory.
+            bail!("adam state carries t={} but no moment tensors", state.t);
+        }
+        if state.t == 0 {
+            bail!("adam state carries {n} moment tensor(s) but t=0");
+        }
+        if n % 2 != 0 {
+            bail!("adam state wants paired m/v tensors, got {n}");
+        }
+        let (ms, vs) = state.tensors.split_at(n / 2);
+        for (i, (name, _)) in ms.iter().enumerate() {
+            if name != &format!("m{i}") {
+                bail!("adam state tensor {i} is {name:?}, expected m{i}");
+            }
+        }
+        for (i, (name, _)) in vs.iter().enumerate() {
+            if name != &format!("v{i}") {
+                bail!("adam state tensor {} is {name:?}, expected v{i}", i + n / 2);
+            }
+        }
+        self.m = ms.iter().map(|(_, v)| v.clone()).collect();
+        self.v = vs.iter().map(|(_, v)| v.clone()).collect();
+        self.t = state.t;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -123,6 +187,53 @@ mod tests {
         let mut opt = Adam::new(0.05, 4);
         let sub = run_optimizer(&mut opt, 16, 0.02, 600);
         assert!(sub < 0.05, "suboptimality {sub}");
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_bit_identically() {
+        use crate::optim::testutil::{quad, random_batch, store};
+        use crate::zorng::Xoshiro256;
+        let mut exec = quad(10, 0.05);
+        let mut rng = Xoshiro256::new(4);
+        let batches: Vec<_> = (0..6)
+            .map(|_| StepBatches { fo: Some(random_batch(2, &mut rng)), zo: None })
+            .collect();
+        // Reference: 6 uninterrupted steps.
+        let mut opt_a = Adam::new(0.05, 2);
+        let mut p_a = store(10);
+        for (s, b) in batches.iter().enumerate() {
+            opt_a.step(&mut p_a, &mut exec, b, s as u64).unwrap();
+        }
+        // Checkpointed: 3 steps, state() -> fresh Adam -> load_state -> 3 more.
+        let mut opt_b = Adam::new(0.05, 2);
+        let mut p_b = store(10);
+        for (s, b) in batches.iter().take(3).enumerate() {
+            opt_b.step(&mut p_b, &mut exec, b, s as u64).unwrap();
+        }
+        let saved = opt_b.state();
+        assert_eq!(saved.t, 3);
+        assert_eq!(saved.tensors.len(), 4, "m0,m1,v0,v1");
+        let mut opt_c = Adam::new(0.05, 2);
+        opt_c.load_state(&saved).unwrap();
+        for (s, b) in batches.iter().enumerate().skip(3) {
+            opt_c.step(&mut p_b, &mut exec, b, s as u64).unwrap();
+        }
+        assert_eq!(p_a.dist_sq(&p_b), 0.0, "resumed Adam must replay bit-identically");
+        assert_eq!(opt_c.state(), opt_a.state());
+        // malformed states fail loudly
+        let mut bad = saved.clone();
+        bad.tensors.pop();
+        assert!(opt_c.load_state(&bad).is_err());
+        let bad = OptState { t: 5, tensors: vec![] };
+        assert!(opt_c.load_state(&bad).is_err(), "t without moments must be refused");
+        let bad = OptState { t: 0, tensors: saved.tensors.clone() };
+        assert!(opt_c.load_state(&bad).is_err(), "moments without t must be refused");
+        let mut bad = saved.clone();
+        bad.tensors[0].0 = "x0".into();
+        assert!(opt_c.load_state(&bad).is_err());
+        // empty state resets to lazy init
+        opt_c.load_state(&OptState::default()).unwrap();
+        assert_eq!(opt_c.state_bytes(), 0);
     }
 
     #[test]

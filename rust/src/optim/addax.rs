@@ -19,7 +19,7 @@ use crate::memory::Method;
 use crate::params::ParamStore;
 use crate::runtime::ModelExec;
 
-use super::{grad_global_norm, spsa_probe, BatchNeeds, Optimizer, StepBatches, StepStats};
+use super::{fmt_f32, grad_global_norm, spsa_probe, BatchNeeds, Optimizer, StepBatches, StepStats};
 
 /// Hyper-parameters follow Table 7: `(K¹, K⁰) = (4, 6)`, `η = 1e-4`,
 /// `ε = 1e-3`, `α` tuned per task from a small grid.
@@ -96,9 +96,12 @@ impl Optimizer for Addax {
             params.fo_update_tensor(idx, self.lr, 1.0 - self.alpha, grad);
         }
 
-        let _ = zo_loss;
         Ok(StepStats {
             loss: g.loss as f64,
+            // The ZO-batch loss (mean of the two probe losses) — Addax's
+            // view of the long-sequence partition D⁰, reported alongside
+            // the FO loss so both halves of Alg. 1 are observable per step.
+            zo_loss,
             g0,
             grad_norm,
             fwd_evals: 2,
@@ -112,6 +115,17 @@ impl Optimizer for Addax {
 
     fn lr(&self) -> f64 {
         self.lr as f64
+    }
+
+    fn ckpt_id(&self) -> String {
+        format!(
+            "addax~lr{}~e{}~a{}~k{}-{}",
+            fmt_f32(self.lr),
+            fmt_f32(self.eps),
+            fmt_f32(self.alpha),
+            self.k0,
+            self.k1
+        )
     }
 }
 
@@ -164,6 +178,29 @@ mod tests {
         };
         opt.step(&mut p, &mut exec, &batches, 11).unwrap();
         assert_eq!(p.noise_sweeps() - before, 3);
+    }
+
+    #[test]
+    fn step_surfaces_the_zo_batch_loss() {
+        // The probe loss must reach StepStats (it was previously dropped):
+        // on the quadratic with params away from the optimum it is a
+        // strictly positive mean of the two probe losses, distinct from
+        // the FO-batch loss field.
+        use crate::optim::testutil::{quad, random_batch, store};
+        use crate::optim::StepBatches;
+        use crate::zorng::Xoshiro256;
+        let mut opt = Addax::new(0.01, 1e-3, 0.3, 2, 2);
+        let mut exec = quad(16, 0.0);
+        let mut p = store(16);
+        p.perturb(2, 1.0);
+        let mut rng = Xoshiro256::new(8);
+        let batches = StepBatches {
+            fo: Some(random_batch(2, &mut rng)),
+            zo: Some(random_batch(2, &mut rng)),
+        };
+        let stats = opt.step(&mut p, &mut exec, &batches, 5).unwrap();
+        assert!(stats.zo_loss.is_finite() && stats.zo_loss > 0.0, "{}", stats.zo_loss);
+        assert!(stats.loss.is_finite());
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::memory::Method;
 use crate::params::ParamStore;
 use crate::runtime::ModelExec;
 
-use super::{grad_global_norm, BatchNeeds, Optimizer, StepBatches, StepStats};
+use super::{fmt_f32, grad_global_norm, BatchNeeds, Optimizer, StepBatches, StepStats};
 
 #[derive(Clone, Debug)]
 pub struct HybridZoFo {
@@ -93,6 +93,9 @@ impl Optimizer for HybridZoFo {
 
         Ok(StepStats {
             loss: g.loss as f64,
+            // Probe-loss mean on the shared batch (no data assignment in
+            // this baseline, unlike Addax's D⁰/D¹ split).
+            zo_loss: 0.5 * (l_plus + l_minus),
             g0,
             grad_norm: norm,
             fwd_evals: 2,
@@ -106,6 +109,17 @@ impl Optimizer for HybridZoFo {
 
     fn lr(&self) -> f64 {
         self.lr_fo as f64
+    }
+
+    fn ckpt_id(&self) -> String {
+        format!(
+            "hybrid-zofo~lr{}-{}~e{}~b{}~s{}",
+            fmt_f32(self.lr_fo),
+            fmt_f32(self.lr_zo),
+            fmt_f32(self.eps),
+            self.batch,
+            fmt_f32(self.split_frac)
+        )
     }
 }
 

@@ -14,7 +14,7 @@ use crate::params::ParamStore;
 use crate::runtime::ModelExec;
 use crate::zorng::BlockNoise;
 
-use super::{spsa_probe, BatchNeeds, Optimizer, StepBatches, StepStats};
+use super::{fmt_f32, spsa_probe, BatchNeeds, Optimizer, StepBatches, StepStats};
 
 /// MeZO: `θ ← θ − η·g⁰·z`, z replayed from the step seed.
 #[derive(Clone, Debug)]
@@ -55,7 +55,9 @@ impl Optimizer for MeZo {
         // probe leaves θ − εz; the fused sweep restores and updates at once
         let (g0, loss) = spsa_probe(params, exec, zo_batch, self.eps, step_seed)?;
         params.restore_and_zo_update(step_seed, self.eps, self.lr, 1.0, g0 as f32);
-        Ok(StepStats { loss, g0, grad_norm: 0.0, fwd_evals: 2, bwd_evals: 0 })
+        // ZO-only: the probe mean IS the training loss, reported in both
+        // fields so mixed and pure-ZO rows stay comparable.
+        Ok(StepStats { loss, zo_loss: loss, g0, grad_norm: 0.0, fwd_evals: 2, bwd_evals: 0 })
     }
 
     fn method(&self) -> Method {
@@ -64,6 +66,10 @@ impl Optimizer for MeZo {
 
     fn lr(&self) -> f64 {
         self.lr as f64
+    }
+
+    fn ckpt_id(&self) -> String {
+        format!("mezo~lr{}~e{}~b{}", fmt_f32(self.lr), fmt_f32(self.eps), self.batch)
     }
 }
 
@@ -138,8 +144,10 @@ impl Optimizer for ZoSgdNaive {
         for (idx, zt) in z.iter().enumerate() {
             params.get_mut(idx).tensor.axpy(-self.lr * g0 as f32, zt);
         }
+        let loss = 0.5 * (l_plus + l_minus);
         Ok(StepStats {
-            loss: 0.5 * (l_plus + l_minus),
+            loss,
+            zo_loss: loss,
             g0,
             grad_norm: 0.0,
             fwd_evals: 2,
@@ -153,6 +161,10 @@ impl Optimizer for ZoSgdNaive {
 
     fn lr(&self) -> f64 {
         self.lr as f64
+    }
+
+    fn ckpt_id(&self) -> String {
+        format!("zo-sgd~lr{}~e{}~b{}", fmt_f32(self.lr), fmt_f32(self.eps), self.batch)
     }
 }
 

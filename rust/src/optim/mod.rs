@@ -49,6 +49,11 @@ pub struct StepStats {
     /// Training loss observed this step (FO loss if available, else the
     /// mean of the two ZO probe losses).
     pub loss: f64,
+    /// Mean of the two SPSA probe losses on the ZO batch — the ZO-batch
+    /// loss the paper's Algorithm 2 observes (0 if no ZO part). Distinct
+    /// from `loss` for mixed optimizers like Addax, whose `loss` is the
+    /// FO-batch loss; surfaced per step in the metrics JSONL rows.
+    pub zo_loss: f64,
     /// SPSA directional-derivative estimate `g⁰` (0 if no ZO part).
     pub g0: f64,
     /// Global gradient norm of the FO part (0 if no FO part).
@@ -57,6 +62,28 @@ pub struct StepStats {
     pub fwd_evals: u32,
     /// Backward (grads) executions used.
     pub bwd_evals: u32,
+}
+
+/// Serialized mutable optimizer state — the checkpointing seam on
+/// [`Optimizer`].
+///
+/// Adam carries its bias-correction counter in `t` and the first/second
+/// moments in `tensors` (always fp32, matching the in-memory moments the
+/// memory model charges Adam for). The ZO/SGD family is stateless — its
+/// entire trajectory state is the step counter plus seeds (the MeZO
+/// seed-replay property) — and serializes the default empty state.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OptState {
+    /// Scalar step counter (Adam's `t`); 0 for stateless optimizers.
+    pub t: u64,
+    /// Named fp32 state tensors in a fixed, optimizer-defined order.
+    pub tensors: Vec<(String, Vec<f32>)>,
+}
+
+impl OptState {
+    pub fn is_empty(&self) -> bool {
+        self.t == 0 && self.tensors.is_empty()
+    }
 }
 
 /// A fine-tuning optimizer with in-place updates.
@@ -84,6 +111,41 @@ pub trait Optimizer: Send {
 
     /// Learning rate accessor (for schedules / logging).
     fn lr(&self) -> f64;
+
+    /// Snapshot the mutable optimizer state for checkpointing. The
+    /// default (stateless) implementation returns the empty state; Adam
+    /// overrides it with `t` and the moments.
+    fn state(&self) -> OptState {
+        OptState::default()
+    }
+
+    /// Hyper-parameter-complete identity fragment for checkpoint-resume
+    /// validation: every knob that steers this optimizer's update rule,
+    /// mirroring `OptSpec::id`. The coordinator folds it into the derived
+    /// snapshot identity, so editing *any* hyper-parameter (not just lr)
+    /// between a kill and a restart refuses the stale snapshots. The
+    /// default covers name + lr only; every optimizer with more knobs
+    /// overrides it.
+    fn ckpt_id(&self) -> String {
+        format!("{}~lr{}", self.name(), self.lr())
+    }
+
+    /// Restore state captured by [`Optimizer::state`]. The default
+    /// implementation accepts only the empty state — a stateless
+    /// optimizer handed Adam moments is a checkpoint/config mismatch and
+    /// must fail loudly rather than silently drop state.
+    fn load_state(&mut self, state: &OptState) -> Result<()> {
+        if !state.is_empty() {
+            bail!(
+                "optimizer {} is stateless but the checkpoint carries state \
+                 (t={}, {} tensor(s))",
+                self.name(),
+                state.t,
+                state.tensors.len()
+            );
+        }
+        Ok(())
+    }
 }
 
 /// Declarative optimizer recipe: everything needed to (re)build an
@@ -427,6 +489,53 @@ mod tests {
         let zs = OptSpec::named("zero-shot");
         assert!(zs.build().is_ok());
         assert_eq!(zs.method().unwrap(), Method::MeZo);
+    }
+
+    #[test]
+    fn ckpt_id_covers_every_hyperparameter() {
+        // Build each optimizer from a spec, tweak one hyper-parameter the
+        // default name+lr id would miss, and demand the id changes —
+        // this is what makes resume refuse a config edit beyond lr.
+        let a = Addax::new(0.05, 1e-3, 0.3, 6, 4);
+        assert_ne!(a.ckpt_id(), Addax::new(0.05, 2e-3, 0.3, 6, 4).ckpt_id(), "eps");
+        assert_ne!(a.ckpt_id(), Addax::new(0.05, 1e-3, 0.9, 6, 4).ckpt_id(), "alpha");
+        assert_ne!(a.ckpt_id(), Addax::new(0.05, 1e-3, 0.3, 8, 4).ckpt_id(), "k0");
+        let m = MeZo::new(0.02, 1e-3, 8);
+        assert_ne!(m.ckpt_id(), MeZo::new(0.02, 2e-3, 8).ckpt_id(), "mezo eps");
+        assert_ne!(m.ckpt_id(), MeZo::new(0.02, 1e-3, 4).ckpt_id(), "mezo batch");
+        let s = Sgd::new(0.1, 4, Some(1.0));
+        assert_ne!(s.ckpt_id(), Sgd::new(0.1, 4, None).ckpt_id(), "clip");
+        let ad = Adam::new(0.01, 4);
+        let mut ad2 = Adam::new(0.01, 4);
+        ad2.beta2 = 0.95;
+        assert_ne!(ad.ckpt_id(), ad2.ckpt_id(), "beta2");
+        let h = HybridZoFo::new(0.1, 1e-3, 1e-3, 4, 0.5);
+        assert_ne!(h.ckpt_id(), HybridZoFo::new(0.1, 1e-3, 1e-3, 4, 0.25).ckpt_id(), "split");
+        // every id leads with the optimizer name
+        for name in ["addax", "mezo", "zo-sgd", "sgd", "ip-sgd", "adam", "hybrid-zofo"] {
+            let opt = OptSpec::named(name).build().unwrap();
+            assert!(opt.ckpt_id().starts_with(name), "{}", opt.ckpt_id());
+        }
+    }
+
+    #[test]
+    fn stateless_optimizers_have_empty_state_and_reject_foreign_state() {
+        for name in ["addax", "mezo", "zo-sgd", "sgd", "ip-sgd", "hybrid-zofo"] {
+            let mut opt = OptSpec::named(name).build().unwrap();
+            assert!(opt.state().is_empty(), "{name} must serialize empty");
+            opt.load_state(&OptState::default()).unwrap();
+            let foreign = OptState { t: 1, tensors: vec![("m0".into(), vec![0.0; 4])] };
+            assert!(opt.load_state(&foreign).is_err(), "{name} must refuse Adam state");
+        }
+        // Adam accepts its own shape back (full round-trip in adam.rs).
+        let mut adam = OptSpec::named("adam").build().unwrap();
+        assert!(adam.state().is_empty(), "pre-step Adam state is empty");
+        let s = OptState {
+            t: 2,
+            tensors: vec![("m0".into(), vec![1.0; 4]), ("v0".into(), vec![1.0; 4])],
+        };
+        adam.load_state(&s).unwrap();
+        assert_eq!(adam.state(), s);
     }
 
     #[test]

@@ -17,7 +17,7 @@ use crate::memory::Method;
 use crate::params::ParamStore;
 use crate::runtime::ModelExec;
 
-use super::{grad_global_norm, BatchNeeds, Optimizer, StepBatches, StepStats};
+use super::{fmt_f32, grad_global_norm, BatchNeeds, Optimizer, StepBatches, StepStats};
 
 /// SGD with global-norm gradient clipping (`clip = 1.0` by default).
 #[derive(Clone, Debug)]
@@ -68,6 +68,7 @@ impl Optimizer for Sgd {
         }
         Ok(StepStats {
             loss: g.loss as f64,
+            zo_loss: 0.0,
             g0: 0.0,
             grad_norm: norm,
             fwd_evals: 0,
@@ -81,6 +82,14 @@ impl Optimizer for Sgd {
 
     fn lr(&self) -> f64 {
         self.lr as f64
+    }
+
+    fn ckpt_id(&self) -> String {
+        let clip = match self.clip {
+            Some(c) => fmt_f32(c),
+            None => "none".to_string(),
+        };
+        format!("sgd~lr{}~b{}~c{clip}", fmt_f32(self.lr), self.batch)
     }
 }
 
@@ -126,6 +135,7 @@ impl Optimizer for IpSgd {
         }
         Ok(StepStats {
             loss: g.loss as f64,
+            zo_loss: 0.0,
             g0: 0.0,
             grad_norm: norm,
             fwd_evals: 0,
@@ -139,6 +149,10 @@ impl Optimizer for IpSgd {
 
     fn lr(&self) -> f64 {
         self.lr as f64
+    }
+
+    fn ckpt_id(&self) -> String {
+        format!("ip-sgd~lr{}~b{}", fmt_f32(self.lr), self.batch)
     }
 }
 

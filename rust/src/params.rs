@@ -249,18 +249,7 @@ impl ParamStore {
             .with_context(|| format!("creating {}", path.display()))?;
         for p in &self.params {
             let mut bytes = Vec::with_capacity(p.tensor.len() * self.dtype.bytes());
-            match self.dtype {
-                Dtype::F32 => {
-                    for &v in f32::slice(p.tensor.raw()) {
-                        v.write_le(&mut bytes);
-                    }
-                }
-                Dtype::Bf16 => {
-                    for &v in Bf16::slice(p.tensor.raw()) {
-                        v.write_le(&mut bytes);
-                    }
-                }
-            }
+            p.tensor.encode_le_into(&mut bytes);
             file.write_all(&bytes)?;
         }
         Ok(())

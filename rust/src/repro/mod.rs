@@ -167,6 +167,12 @@ impl Harness {
             resume: true,
             manifest_path: self.manifest_path.clone(),
             verbose: false,
+            // Repro cells are seconds-long mock runs: the manifest's
+            // run-level skip-completed already makes them resumable, and
+            // step-level snapshots would only add fsync traffic that is
+            // deleted the moment each row lands.
+            ckpt: false,
+            ..SweepOptions::default()
         };
         let (summary, manifest) = run_sweep_collect(specs, &opts)?;
         println!("[repro] {}", summary.line());

@@ -258,23 +258,37 @@ impl SweepManifest {
         manifest.with_extension("times.jsonl")
     }
 
-    /// Append one timing record to the side file.
+    /// Append one timing/telemetry record to the side file. Besides the
+    /// wall-clock fields, the row optionally carries `resumed_from_step`
+    /// (the run restarted off a step-level checkpoint) and a free-form
+    /// `note` (e.g. corrupt snapshots skipped before a from-scratch
+    /// restart) — telemetry by design, so the deterministic manifest row
+    /// of a resumed run stays byte-identical to an uninterrupted one.
     pub fn append_time(
         manifest: &Path,
         run_id: &str,
         total_secs: f64,
         time_to_best_secs: f64,
+        resumed_from_step: Option<usize>,
+        note: Option<&str>,
     ) -> Result<()> {
         let path = Self::times_path(manifest);
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir).ok();
         }
         let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
-        let row = obj(vec![
+        let mut fields = vec![
             ("run_id", Json::from(run_id)),
             ("total_secs", Json::from(finite(total_secs))),
             ("time_to_best_secs", Json::from(finite(time_to_best_secs))),
-        ]);
+        ];
+        if let Some(step) = resumed_from_step {
+            fields.push(("resumed_from_step", Json::from(step)));
+        }
+        if let Some(note) = note {
+            fields.push(("note", Json::from(note)));
+        }
+        let row = obj(fields);
         writeln!(f, "{}", row.dump())?;
         f.flush()?;
         Ok(())
@@ -397,12 +411,19 @@ mod tests {
         let path = dir.join("m.jsonl");
         let times = SweepManifest::times_path(&path);
         std::fs::remove_file(&times).ok();
-        SweepManifest::append_time(&path, "a", 1.5, 0.5).unwrap();
-        SweepManifest::append_time(&path, "a", 2.5, 1.0).unwrap(); // last wins
-        SweepManifest::append_time(&path, "b", 3.0, 2.0).unwrap();
+        SweepManifest::append_time(&path, "a", 1.5, 0.5, None, None).unwrap();
+        // last wins; resumed runs record their restart step + note
+        SweepManifest::append_time(&path, "a", 2.5, 1.0, Some(7), None).unwrap();
+        SweepManifest::append_time(&path, "b", 3.0, 2.0, None, Some("2 invalid snapshot(s)"))
+            .unwrap();
         let t = SweepManifest::load_times(&path);
         assert_eq!(t.get("a"), Some(&(2.5, 1.0)));
         assert_eq!(t.get("b"), Some(&(3.0, 2.0)));
+        let text = std::fs::read_to_string(&times).unwrap();
+        assert!(text.contains("\"resumed_from_step\":7"), "{text}");
+        assert!(text.contains("\"note\":\"2 invalid snapshot(s)\""), "{text}");
+        // rows without telemetry extras do not carry the keys
+        assert_eq!(text.matches("resumed_from_step").count(), 1);
         assert!(SweepManifest::load_times(&dir.join("missing.jsonl")).is_empty());
         std::fs::remove_file(&times).ok();
     }

@@ -15,7 +15,9 @@
 //! * [`pack`] — per-run footprint pricing + first-fit-decreasing packing
 //!   into concurrency waves under `--budget-gb × --gpus`;
 //! * [`worker`] — the wave executor: a scoped worker pool, one manifest
-//!   writer, resumable on kill;
+//!   writer, resumable on kill — at *step* granularity via the `ckpt`
+//!   subsystem (each run checkpoints into its own directory and a killed
+//!   run continues from its latest valid snapshot, byte-identically);
 //! * [`manifest`] — the crash-safe JSONL manifest whose compacted form is
 //!   byte-identical for a given spec at any worker count.
 //!
@@ -31,4 +33,7 @@ pub mod worker;
 pub use manifest::{ManifestRow, SweepManifest};
 pub use pack::{pack, price, PricedRun, Wave};
 pub use spec::{Backend, LT_NONE, RunSpec, SweepSpec};
-pub use worker::{execute_run, run_sweep, run_sweep_collect, SweepOptions, SweepSummary};
+pub use worker::{
+    execute_run, execute_run_with, run_sweep, run_sweep_collect, RunCtx, RunTiming,
+    SweepOptions, SweepSummary,
+};

@@ -85,14 +85,10 @@ impl Backend {
     }
 }
 
-/// FNV-1a over a string — the stable hash behind run-id → seed derivation.
-pub fn fnv1a(s: &str) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &b in s.as_bytes() {
-        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
-    }
-    h
-}
+/// FNV-1a over a string — the stable hash behind run-id → seed
+/// derivation. Re-exported from its home next to `derive_seed` so the
+/// historical `sched::spec::fnv1a` path keeps working.
+pub use crate::zorng::fnv1a;
 
 /// Everything needed to execute (and re-execute, identically) one run.
 ///
@@ -209,6 +205,14 @@ impl RunSpec {
         );
         self.train_seed = derive_seed(self.grid_seed, fnv1a(&self.run_id));
         self
+    }
+
+    /// Per-run checkpoint directory under `root`, derived from the run
+    /// id. Run ids are unique by construction (the scheduler dedups on
+    /// them), so concurrent workers can never collide on snapshot files
+    /// — each run owns its directory outright.
+    pub fn ckpt_dir(&self, root: &std::path::Path) -> std::path::PathBuf {
+        root.join(&self.run_id)
     }
 
     /// The task definition this run trains on.
@@ -540,6 +544,18 @@ mod tests {
                 assert!(SweepSpec::from_config(&cfg).is_err(), "{bad}");
             }
         }
+    }
+
+    #[test]
+    fn ckpt_dirs_are_disjoint_per_run() {
+        let root = std::path::Path::new("results/sweep/ckpt");
+        let a = RunSpec::new(Backend::Mock, "sst2", OptSpec::named("addax"), 40, 0);
+        let mut b = a.clone();
+        b.dtype = Dtype::Bf16;
+        let b = b.sealed();
+        assert_ne!(a.ckpt_dir(root), b.ckpt_dir(root), "distinct runs, distinct dirs");
+        assert_eq!(a.ckpt_dir(root), a.clone().sealed().ckpt_dir(root), "stable per run");
+        assert!(a.ckpt_dir(root).starts_with(root));
     }
 
     #[test]

@@ -11,19 +11,29 @@
 //!    thread is the only manifest writer (crash-safe appends);
 //! 4. compact the manifest into canonical order.
 //!
+//! Resume is **step-level**: each run checkpoints into its own directory
+//! (`<manifest dir>/ckpt/<run_id>/`, via the `ckpt` subsystem), so a run
+//! killed mid-flight continues from its latest valid snapshot instead of
+//! restarting — and lands on the *byte-identical* manifest row and
+//! parameter dump. A completed run's checkpoint directory is deleted once
+//! its row is safely appended (the manifest row is then the durable
+//! record). The times side file gains `resumed_from_step` / `note`
+//! telemetry for resumed or degraded (corrupt-snapshot) runs.
+//!
 //! Determinism: every run is executed with a single in-run noise worker
 //! (parallelism lives *across* runs), seeds derive from run identity, and
 //! rows carry no wall-clock — so the compacted manifest is byte-identical
-//! for the same spec at any `--workers`, across kills/resumes, and across
-//! machines (per backend).
+//! for the same spec at any `--workers`, across kills/resumes (run- or
+//! step-level), and across machines (per backend).
 
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{evaluate, train, TrainConfig};
+use crate::coordinator::{evaluate, train, Halted, TrainConfig};
 use crate::data::Dataset;
 use crate::params::ParamStore;
 use crate::runtime::manifest::default_artifacts_dir;
@@ -50,6 +60,24 @@ pub struct SweepOptions {
     pub manifest_path: std::path::PathBuf,
     /// Print the packing plan and per-run completions.
     pub verbose: bool,
+    /// Step-level checkpointing for every run (on by default): snapshots
+    /// land in `<manifest dir>/ckpt/<run_id>/` and a partially complete
+    /// run resumes from its latest valid one instead of restarting.
+    pub ckpt: bool,
+    /// Per-run snapshot cadence in steps; 0 = the run's eval cadence.
+    pub ckpt_every: usize,
+    /// Keep-last-K snapshots per run (best-referenced ones always kept).
+    pub ckpt_keep: usize,
+    /// Deterministic preemption: halt every run after this many steps
+    /// this invocation (0 = never). Runs halt *after* snapshotting, so a
+    /// follow-up `--resume` sweep finishes them step-level — the CI
+    /// mid-run-kill proof. A real SIGKILL leaves equivalent on-disk
+    /// state (snapshot writes are atomic).
+    pub halt_after: usize,
+    /// Dump each completed run's final parameters (native dtype, the
+    /// `save_bin` format) to `<manifest dir>/params/<run_id>.bin` — what
+    /// CI byte-compares between killed+resumed and uninterrupted sweeps.
+    pub dump_params: bool,
 }
 
 impl Default for SweepOptions {
@@ -61,6 +89,31 @@ impl Default for SweepOptions {
             resume: true,
             manifest_path: std::path::PathBuf::from("results/sweep/manifest.jsonl"),
             verbose: false,
+            ckpt: true,
+            ckpt_every: 0,
+            ckpt_keep: 2,
+            halt_after: 0,
+            dump_params: false,
+        }
+    }
+}
+
+impl SweepOptions {
+    /// Root of the per-run checkpoint directories.
+    pub fn ckpt_root(&self) -> PathBuf {
+        self.manifest_dir().join("ckpt")
+    }
+
+    /// Directory for final-parameter dumps.
+    pub fn params_dir(&self) -> PathBuf {
+        self.manifest_dir().join("params")
+    }
+
+    fn manifest_dir(&self) -> PathBuf {
+        match self.manifest_path.parent() {
+            Some(p) if p.as_os_str().is_empty() => PathBuf::from("."),
+            Some(p) => p.to_path_buf(),
+            None => PathBuf::from("."),
         }
     }
 }
@@ -71,18 +124,22 @@ pub struct SweepSummary {
     pub total: usize,
     pub executed: usize,
     pub skipped: usize,
+    /// Runs preempted by `halt_after` (checkpointed, not completed — a
+    /// later `--resume` sweep finishes them step-level).
+    pub halted: usize,
     pub waves: usize,
     pub manifest_path: std::path::PathBuf,
 }
 
 impl SweepSummary {
-    /// Stable one-line form (CI greps `executed=`).
+    /// Stable one-line form (CI greps `executed=` and `halted=`).
     pub fn line(&self) -> String {
         format!(
-            "sweep: total={} executed={} skipped={} waves={} manifest={}",
+            "sweep: total={} executed={} skipped={} halted={} waves={} manifest={}",
             self.total,
             self.executed,
             self.skipped,
+            self.halted,
             self.waves,
             self.manifest_path.display()
         )
@@ -103,6 +160,12 @@ pub fn run_sweep_collect(
 ) -> Result<(SweepSummary, SweepManifest)> {
     if opts.workers == 0 {
         bail!("--workers must be ≥ 1");
+    }
+    if opts.halt_after > 0 && !opts.ckpt {
+        // Without snapshots a halted run restarts from step 0 every
+        // resume and halts again at the same step — the sweep could never
+        // finish. Refuse the combination instead of looping forever.
+        bail!("--halt-after needs checkpointing (drop --no-ckpt)");
     }
     // Dedup by run id, first occurrence wins (different experiments may
     // request the same logical run; it executes once).
@@ -129,8 +192,21 @@ pub fn run_sweep_collect(
             manifest.len()
         );
     }
-    let pending: Vec<RunSpec> =
-        deduped.into_iter().filter(|s| !manifest.contains(&s.run_id)).collect();
+    let ckpt_root = opts.ckpt_root();
+    let mut pending: Vec<RunSpec> = Vec::with_capacity(deduped.len());
+    for s in deduped {
+        if manifest.contains(&s.run_id) {
+            // Completed in some earlier invocation. Its checkpoints are
+            // dead weight — and if a kill landed between the row append
+            // and the in-flight cleanup, this is the only path that ever
+            // reclaims them.
+            if opts.ckpt {
+                std::fs::remove_dir_all(s.ckpt_dir(&ckpt_root)).ok();
+            }
+        } else {
+            pending.push(s);
+        }
+    }
     let skipped = total - pending.len();
 
     let budget_bytes = opts.budget_gb * 1e9 * opts.gpus as f64;
@@ -146,7 +222,9 @@ pub fn run_sweep_collect(
         );
     }
 
+    let params_dir = opts.params_dir();
     let mut executed = 0usize;
+    let mut halted = 0usize;
     for (wi, wave) in waves.into_iter().enumerate() {
         if opts.verbose {
             println!(
@@ -169,6 +247,8 @@ pub fn run_sweep_collect(
             let runs_ref = &runs;
             let next_ref = &next;
             let stop_ref = &stop;
+            let ckpt_root_ref = &ckpt_root;
+            let params_dir_ref = &params_dir;
             for _ in 0..n_workers {
                 let tx = tx.clone();
                 scope.spawn(move || loop {
@@ -180,7 +260,16 @@ pub fn run_sweep_collect(
                         break;
                     }
                     let spec = &runs_ref[i];
-                    let res = execute_run(spec);
+                    let ctx = RunCtx {
+                        ckpt_dir: opts.ckpt.then(|| spec.ckpt_dir(ckpt_root_ref)),
+                        ckpt_every: opts.ckpt_every,
+                        ckpt_keep: opts.ckpt_keep,
+                        halt_after: opts.halt_after,
+                        dump_path: opts
+                            .dump_params
+                            .then(|| params_dir_ref.join(format!("{}.bin", spec.run_id))),
+                    };
+                    let res = execute_run_with(spec, &ctx);
                     if tx.send((spec.run_id.clone(), res)).is_err() {
                         break;
                     }
@@ -200,11 +289,35 @@ pub fn run_sweep_collect(
                             &run_id,
                             timing.total_secs,
                             timing.time_to_best_secs,
+                            timing.resumed_from_step,
+                            timing.note.as_deref(),
                         )
                         .ok();
+                        // The row is durable: the run's checkpoints have
+                        // served their purpose.
+                        if opts.ckpt {
+                            std::fs::remove_dir_all(ckpt_root.join(&run_id)).ok();
+                        }
                         executed += 1;
                         if opts.verbose {
-                            println!("[sweep]   done {} ({:.1}s)", run_id, timing.total_secs);
+                            match timing.resumed_from_step {
+                                Some(s) => println!(
+                                    "[sweep]   done {} ({:.1}s, resumed from step {s})",
+                                    run_id, timing.total_secs
+                                ),
+                                None => println!(
+                                    "[sweep]   done {} ({:.1}s)",
+                                    run_id, timing.total_secs
+                                ),
+                            }
+                        }
+                    }
+                    Err(e) if e.downcast_ref::<Halted>().is_some() => {
+                        // Preempted by halt_after: checkpointed, not a
+                        // failure — the next resume sweep finishes it.
+                        halted += 1;
+                        if opts.verbose {
+                            println!("[sweep]   halted {run_id} ({e:#})");
                         }
                     }
                     Err(e) => {
@@ -226,16 +339,42 @@ pub fn run_sweep_collect(
         total,
         executed,
         skipped,
+        halted,
         waves: n_waves,
         manifest_path: opts.manifest_path.clone(),
     };
     Ok((summary, manifest))
 }
 
-/// Wall-clock telemetry for the side file (never enters the manifest).
+/// Wall-clock + resume telemetry for the side file (never enters the
+/// deterministic manifest row).
 pub struct RunTiming {
     pub total_secs: f64,
     pub time_to_best_secs: f64,
+    /// Step this run resumed from, when it continued off a checkpoint.
+    pub resumed_from_step: Option<usize>,
+    /// Checkpoint anomaly note (corrupt snapshots skipped, from-scratch
+    /// fallback), if any.
+    pub note: Option<String>,
+}
+
+/// Per-run execution context: checkpointing, preemption and dump knobs
+/// the scheduler threads into the coordinator.
+#[derive(Clone, Debug, Default)]
+pub struct RunCtx {
+    /// This run's private checkpoint directory (None = no checkpointing).
+    pub ckpt_dir: Option<PathBuf>,
+    pub ckpt_every: usize,
+    pub ckpt_keep: usize,
+    pub halt_after: usize,
+    /// Where to dump the final parameters after a completed run.
+    pub dump_path: Option<PathBuf>,
+}
+
+/// [`execute_run_with`] under the default context (no checkpointing, no
+/// preemption) — the historical entry point, kept for tests/clients.
+pub fn execute_run(spec: &RunSpec) -> Result<(ManifestRow, RunTiming)> {
+    execute_run_with(spec, &RunCtx::default())
 }
 
 /// Execute one run on its backend and produce its manifest row.
@@ -245,7 +384,10 @@ pub struct RunTiming {
 /// pinned to one worker so run-level parallelism composes with it. The
 /// parameter store is allocated at the spec's storage dtype (the AOT
 /// dumps are f32 and are rounded nearest-even on load for bf16 runs).
-pub fn execute_run(spec: &RunSpec) -> Result<(ManifestRow, RunTiming)> {
+/// With `ctx.ckpt_dir` set the run resumes from its latest valid
+/// snapshot; `ctx.halt_after` preempts it with a typed
+/// [`Halted`] error after that many steps (snapshot written first).
+pub fn execute_run_with(spec: &RunSpec, ctx: &RunCtx) -> Result<(ManifestRow, RunTiming)> {
     match spec.backend {
         Backend::Mock => {
             let mut exec = QuadraticExec::new(
@@ -257,19 +399,30 @@ pub fn execute_run(spec: &RunSpec) -> Result<(ManifestRow, RunTiming)> {
             );
             let mut params =
                 ParamStore::zeros_in(&[("w".to_string(), vec![spec.mock_dim])], spec.dtype);
-            run_with_exec(spec, &mut exec, &mut params, 512, 64)
+            run_with_exec(spec, ctx, &mut exec, &mut params, 512, 64)
         }
         Backend::Xla => {
             let mut exec = XlaExec::new(&default_artifacts_dir(), &spec.model_key)?;
             let entry = exec.entry().clone();
             let mut params = exec.load_initial_params()?.to_dtype(spec.dtype);
-            run_with_exec(spec, &mut exec, &mut params, entry.vocab, entry.max_len)
+            run_with_exec(spec, ctx, &mut exec, &mut params, entry.vocab, entry.max_len)
         }
     }
 }
 
+/// Dump the final parameter store for the byte-compare proofs (native
+/// dtype, `save_bin` layout).
+fn dump_params(params: &ParamStore, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    params.save_bin(path)
+}
+
 fn run_with_exec(
     spec: &RunSpec,
+    ctx: &RunCtx,
     exec: &mut dyn ModelExec,
     params: &mut ParamStore,
     vocab: usize,
@@ -286,14 +439,23 @@ fn run_with_exec(
         spec.n_test,
     );
     if spec.steps == 0 {
-        // Zero-shot: evaluation only, no training loop. The budget is
-        // exactly `eval_examples` — no silent clamp, since that field is
-        // part of run identity and must actually steer the outcome.
+        // Zero-shot: evaluation only, no training loop (and nothing to
+        // checkpoint). The budget is exactly `eval_examples` — no silent
+        // clamp, since that field is part of run identity and must
+        // actually steer the outcome.
         let t0 = Instant::now();
         let ev = evaluate(exec, params, &ds.test, spec.eval_examples)?;
+        if let Some(path) = &ctx.dump_path {
+            dump_params(params, path)?;
+        }
         return Ok((
             ManifestRow::from_eval(spec, &ev),
-            RunTiming { total_secs: t0.elapsed().as_secs_f64(), time_to_best_secs: 0.0 },
+            RunTiming {
+                total_secs: t0.elapsed().as_secs_f64(),
+                time_to_best_secs: 0.0,
+                resumed_from_step: None,
+                note: None,
+            },
         ));
     }
     // `LT_NONE` is usize::MAX, which `partition` already treats as "no
@@ -320,11 +482,39 @@ fn run_with_exec(
         // different settings could coexist — the scheduler just has no
         // reason to want them.
         noise_workers: 1,
+        ckpt_dir: ctx.ckpt_dir.clone(),
+        ckpt_every: ctx.ckpt_every,
+        ckpt_keep: ctx.ckpt_keep,
+        // Snapshots are stamped with (and resume demands) the run id, so
+        // a directory mix-up can never graft one run's state onto another.
+        ckpt_identity: spec.run_id.clone(),
+        halt_after: ctx.halt_after,
     };
     let mut opt = spec.optimizer.build()?;
+    // `Halted` must propagate un-wrapped in meaning (anyhow downcasts
+    // through context chains, so the scheduler still sees it).
     let r = train(exec, params, &mut *opt, &ds, lt, &cfg)
         .with_context(|| format!("training {}", spec.run_id))?;
-    let timing = RunTiming { total_secs: r.total_secs, time_to_best_secs: r.time_to_best_secs };
+    if let Some(path) = &ctx.dump_path {
+        dump_params(params, path)?;
+    }
+    // Wall-clock of a resumed run covers only the final session (the
+    // clock restarts; time_to_best is 0.0 when the best predates the
+    // resume) — stamp the times row so downstream consumers don't read
+    // it as an instantaneous result.
+    let mut notes: Vec<String> = Vec::new();
+    if !r.ckpt_note.is_empty() {
+        notes.push(r.ckpt_note.clone());
+    }
+    if r.resumed_from_step.is_some() {
+        notes.push("wall-clock covers the resumed session only".to_string());
+    }
+    let timing = RunTiming {
+        total_secs: r.total_secs,
+        time_to_best_secs: r.time_to_best_secs,
+        resumed_from_step: r.resumed_from_step,
+        note: (!notes.is_empty()).then(|| notes.join("; ")),
+    };
     Ok((ManifestRow::from_train(spec, &r), timing))
 }
 

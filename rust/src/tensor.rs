@@ -307,6 +307,25 @@ impl HostTensor {
         &self.data
     }
 
+    /// Append this tensor's elements as little-endian bytes at the native
+    /// storage width — the one encode loop shared by the binary param
+    /// dumps (`ParamStore::save_bin`) and the checkpoint chunks.
+    pub(crate) fn encode_le_into(&self, out: &mut Vec<u8>) {
+        out.reserve(self.len() * self.dtype().bytes());
+        match &self.data {
+            TensorData::F32(v) => {
+                for &x in v {
+                    x.write_le(out);
+                }
+            }
+            TensorData::Bf16(v) => {
+                for &x in v {
+                    x.write_le(out);
+                }
+            }
+        }
+    }
+
     pub(crate) fn raw_mut(&mut self) -> &mut TensorData {
         &mut self.data
     }

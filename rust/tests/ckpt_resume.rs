@@ -1,0 +1,234 @@
+//! The checkpoint subsystem's defining contract, proven on the quadratic
+//! mock: a run killed at **any** step and resumed is *byte-identical* —
+//! same final manifest row, same parameter dump — to the uninterrupted
+//! run, in both f32 and bf16, for stateless (Addax/MeZO) and stateful
+//! (Adam) optimizers. Plus the degradation ladder: resume from an older
+//! snapshot when the newest is gone, and a clean from-scratch fallback
+//! (with a surfaced note) when every snapshot is corrupt.
+
+use std::path::{Path, PathBuf};
+
+use addax::coordinator::Halted;
+use addax::optim::OptSpec;
+use addax::sched::{execute_run, execute_run_with, Backend, RunCtx, RunSpec};
+use addax::tensor::Dtype;
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("addax_ckptres_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn spec(opt: &str, dtype: Dtype, steps: usize) -> RunSpec {
+    let mut s = RunSpec::new(Backend::Mock, "sst2", OptSpec::named(opt), steps, 3);
+    s.dtype = dtype;
+    s.eval_every = 4;
+    s.eval_examples = 30;
+    s.mock_dim = 40;
+    s.n_train = 120;
+    s.n_val = 40;
+    s.n_test = 40;
+    s.sealed()
+}
+
+fn ctx(dir: &Path, spec: &RunSpec, halt_after: usize, dump: Option<PathBuf>) -> RunCtx {
+    RunCtx {
+        ckpt_dir: Some(spec.ckpt_dir(dir)),
+        ckpt_every: 0, // eval cadence
+        ckpt_keep: 2,
+        halt_after,
+        dump_path: dump,
+    }
+}
+
+/// Run `spec` uninterrupted (no checkpointing) → (manifest line, dump).
+fn control(spec: &RunSpec, dir: &Path) -> (String, Vec<u8>) {
+    let dump = dir.join("control.bin");
+    let c = RunCtx { dump_path: Some(dump.clone()), ..RunCtx::default() };
+    let (row, timing) = execute_run_with(spec, &c).unwrap();
+    assert_eq!(timing.resumed_from_step, None);
+    (row.to_line(), std::fs::read(dump).unwrap())
+}
+
+/// Halt `spec` after `kill_at` steps, then resume to completion.
+fn kill_and_resume(spec: &RunSpec, dir: &Path, kill_at: usize) -> (String, Vec<u8>, usize) {
+    let err = execute_run_with(spec, &ctx(dir, spec, kill_at, None)).unwrap_err();
+    assert!(err.downcast_ref::<Halted>().is_some(), "want Halted, got: {err:#}");
+    let dump = dir.join("resumed.bin");
+    let (row, timing) =
+        execute_run_with(spec, &ctx(dir, spec, 0, Some(dump.clone()))).unwrap();
+    let resumed_from = timing.resumed_from_step.expect("run must have resumed");
+    (row.to_line(), std::fs::read(dump).unwrap(), resumed_from)
+}
+
+#[test]
+fn kill_at_arbitrary_step_resumes_byte_identically_in_both_dtypes() {
+    // Addax exercises the mixed ZO+FO path; kill points cover the first
+    // step, mid-run off-cadence, and the penultimate step.
+    for dtype in [Dtype::F32, Dtype::Bf16] {
+        let s = spec("addax", dtype, 20);
+        let dir = fresh_dir(&format!("addax_{}", dtype.label()));
+        let (want_row, want_dump) = control(&s, &dir);
+        for kill_at in [1usize, 7, 19] {
+            let run_dir = fresh_dir(&format!("addax_{}_{kill_at}", dtype.label()));
+            let (row, dump, resumed_from) = kill_and_resume(&s, &run_dir, kill_at);
+            assert_eq!(resumed_from, kill_at, "halt writes a snapshot at the kill step");
+            assert_eq!(row, want_row, "dtype={} kill_at={kill_at}", dtype.label());
+            assert_eq!(dump, want_dump, "dtype={} kill_at={kill_at}", dtype.label());
+            std::fs::remove_dir_all(&run_dir).ok();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn adam_moments_survive_the_kill() {
+    // The stateful case: without OptState serialization the moments
+    // restart at zero and the resumed trajectory diverges from control.
+    // Same kill matrix as the stateless test: first, mid-run, and
+    // penultimate step (steps = 16 here).
+    for dtype in [Dtype::F32, Dtype::Bf16] {
+        let s = spec("adam", dtype, 16);
+        let dir = fresh_dir(&format!("adam_{}", dtype.label()));
+        let (want_row, want_dump) = control(&s, &dir);
+        for kill_at in [1usize, 9, 15] {
+            let run_dir = fresh_dir(&format!("adam_{}_{kill_at}", dtype.label()));
+            let (row, dump, resumed_from) = kill_and_resume(&s, &run_dir, kill_at);
+            assert_eq!(resumed_from, kill_at);
+            assert_eq!(row, want_row, "dtype={} kill_at={kill_at}", dtype.label());
+            assert_eq!(dump, want_dump, "dtype={} kill_at={kill_at}", dtype.label());
+            std::fs::remove_dir_all(&run_dir).ok();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn resume_from_an_older_snapshot_replays_the_gap_identically() {
+    // Kill at step 11, then delete the newest snapshot: the run must fall
+    // back to an older one and re-execute the gap to the same bytes —
+    // the "killed at a step with no snapshot" case.
+    let s = spec("mezo", Dtype::F32, 24);
+    let dir = fresh_dir("older_ctrl");
+    let (want_row, want_dump) = control(&s, &dir);
+    let run_dir = fresh_dir("older_kill");
+    let err = execute_run_with(&s, &ctx(&run_dir, &s, 11, None)).unwrap_err();
+    assert!(err.downcast_ref::<Halted>().is_some());
+    let ck_dir = s.ckpt_dir(&run_dir);
+    std::fs::remove_file(ck_dir.join("step-00000011.ck")).unwrap();
+    let dump = run_dir.join("resumed.bin");
+    let (row, timing) =
+        execute_run_with(&s, &ctx(&run_dir, &s, 0, Some(dump.clone()))).unwrap();
+    let resumed_from = timing.resumed_from_step.unwrap();
+    assert!(resumed_from < 11, "must resume from an older snapshot, got {resumed_from}");
+    assert_eq!(row.to_line(), want_row);
+    assert_eq!(std::fs::read(dump).unwrap(), want_dump);
+    std::fs::remove_dir_all(&run_dir).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_snapshots_degrade_to_from_scratch_with_a_note() {
+    // Every corruption class from the satellite list must produce a clean
+    // fallback: the worker runs from scratch (bit-identical to control,
+    // since from-scratch IS the control) and surfaces a note.
+    let s = spec("addax", Dtype::F32, 12);
+    let ctrl_dir = fresh_dir("corrupt_ctrl");
+    let (want_row, want_dump) = control(&s, &ctrl_dir);
+
+    type Corruptor = fn(&mut Vec<u8>);
+    let corruptors: [(&str, Corruptor); 3] = [
+        ("truncate", |b: &mut Vec<u8>| b.truncate(b.len() / 2)),
+        ("flip-crc-byte", |b: &mut Vec<u8>| {
+            let n = b.len();
+            b[n - 2] ^= 0x10;
+        }),
+        ("wrong-magic", |b: &mut Vec<u8>| b[..8].copy_from_slice(b"XXXXXXXX")),
+    ];
+    for (name, corrupt) in corruptors {
+        let run_dir = fresh_dir(&format!("corrupt_{name}"));
+        let err = execute_run_with(&s, &ctx(&run_dir, &s, 5, None)).unwrap_err();
+        assert!(err.downcast_ref::<Halted>().is_some());
+        let ck_dir = s.ckpt_dir(&run_dir);
+        let mut corrupted = 0usize;
+        for entry in std::fs::read_dir(&ck_dir).unwrap().flatten() {
+            let path = entry.path();
+            if path.extension().map(|e| e == "ck").unwrap_or(false) {
+                let mut bytes = std::fs::read(&path).unwrap();
+                corrupt(&mut bytes);
+                std::fs::write(&path, &bytes).unwrap();
+                corrupted += 1;
+            }
+        }
+        assert!(corrupted > 0, "{name}: no snapshots were written?");
+        let dump = run_dir.join("resumed.bin");
+        let (row, timing) =
+            execute_run_with(&s, &ctx(&run_dir, &s, 0, Some(dump.clone()))).unwrap();
+        assert_eq!(timing.resumed_from_step, None, "{name}: must NOT claim a resume");
+        let note = timing.note.expect("corruption must surface a note");
+        assert!(note.contains("invalid snapshot"), "{name}: {note}");
+        assert!(note.contains("scratch"), "{name}: {note}");
+        assert_eq!(row.to_line(), want_row, "{name}");
+        assert_eq!(std::fs::read(dump).unwrap(), want_dump, "{name}");
+        std::fs::remove_dir_all(&run_dir).ok();
+    }
+    std::fs::remove_dir_all(&ctrl_dir).ok();
+}
+
+#[test]
+fn dtype_and_identity_mismatches_are_rejected_cleanly() {
+    // A snapshot written by the bf16 twin (distinct run id AND dtype) and
+    // one from a different grid seed (same dtype, different identity)
+    // must both be refused — from-scratch fallback, clean note, never a
+    // panic or a silently grafted state.
+    let f32_spec = spec("mezo", Dtype::F32, 12);
+    let ctrl_dir = fresh_dir("mismatch_ctrl");
+    let (want_row, want_dump) = control(&f32_spec, &ctrl_dir);
+
+    for (name, other) in [
+        ("dtype", spec("mezo", Dtype::Bf16, 12)),
+        ("identity", {
+            let mut s = RunSpec::new(Backend::Mock, "sst2", OptSpec::named("mezo"), 12, 4);
+            s.dtype = Dtype::F32;
+            s.eval_every = 4;
+            s.eval_examples = 30;
+            s.mock_dim = 40;
+            s.n_train = 120;
+            s.n_val = 40;
+            s.n_test = 40;
+            s.sealed()
+        }),
+    ] {
+        assert_ne!(other.run_id, f32_spec.run_id);
+        let run_dir = fresh_dir(&format!("mismatch_{name}"));
+        // Halt the OTHER run so its snapshots land in the directory the
+        // f32 run will scan (simulated operator mix-up).
+        let mut other_ctx = ctx(&run_dir, &other, 5, None);
+        other_ctx.ckpt_dir = Some(f32_spec.ckpt_dir(&run_dir));
+        let err = execute_run_with(&other, &other_ctx).unwrap_err();
+        assert!(err.downcast_ref::<Halted>().is_some());
+
+        let dump = run_dir.join("resumed.bin");
+        let (row, timing) =
+            execute_run_with(&f32_spec, &ctx(&run_dir, &f32_spec, 0, Some(dump.clone())))
+                .unwrap();
+        assert_eq!(timing.resumed_from_step, None, "{name}");
+        let note = timing.note.expect("mismatch must surface a note");
+        assert!(note.contains("invalid snapshot"), "{name}: {note}");
+        assert_eq!(row.to_line(), want_row, "{name}");
+        assert_eq!(std::fs::read(dump).unwrap(), want_dump, "{name}");
+        std::fs::remove_dir_all(&run_dir).ok();
+    }
+    std::fs::remove_dir_all(&ctrl_dir).ok();
+}
+
+#[test]
+fn execute_run_default_context_never_checkpoints() {
+    // The historical entry point keeps its exact behavior: no checkpoint
+    // side effects, same row as the checkpointing control.
+    let s = spec("addax", Dtype::F32, 12);
+    let (row_a, _) = execute_run(&s).unwrap();
+    let (row_b, _) = execute_run(&s).unwrap();
+    assert_eq!(row_a.to_line(), row_b.to_line());
+}

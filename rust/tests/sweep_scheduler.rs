@@ -53,6 +53,10 @@ fn opts(dir: &std::path::Path, workers: usize) -> SweepOptions {
         resume: true,
         manifest_path: dir.join("manifest.jsonl"),
         verbose: false,
+        // The determinism tests below target manifest semantics; the
+        // checkpoint path has its own halt/resume test + tests/ckpt_resume.rs.
+        ckpt: false,
+        ..SweepOptions::default()
     }
 }
 
@@ -113,6 +117,60 @@ fn resume_after_kill_matches_uninterrupted_run() {
 }
 
 #[test]
+fn halted_sweep_resumes_step_level_to_identical_bytes() {
+    // Control: uninterrupted sweep with parameter dumps.
+    let ctrl_dir = fresh_dir("halt_ctrl");
+    let mut ctrl = opts(&ctrl_dir, 2);
+    ctrl.dump_params = true;
+    run_sweep(specs(), &ctrl).unwrap();
+    let ctrl_manifest = std::fs::read_to_string(&ctrl.manifest_path).unwrap();
+
+    // Preempted sweep: every training run halts after 5 steps (snapshot
+    // written first); the zero-shot runs (steps = 0) complete normally.
+    let kill_dir = fresh_dir("halt_kill");
+    let mut o = opts(&kill_dir, 3);
+    o.ckpt = true;
+    o.dump_params = true;
+    o.halt_after = 5;
+    let first = run_sweep(specs(), &o).unwrap();
+    assert_eq!(first.halted, 24, "all training runs must be preempted");
+    assert_eq!(first.executed, 8, "zero-shot cells have no steps to halt");
+
+    // Resume: every halted run continues from its step-5 snapshot.
+    o.halt_after = 0;
+    let second = run_sweep(specs(), &o).unwrap();
+    assert_eq!(second.executed, 24);
+    assert_eq!(second.skipped, 8);
+    assert_eq!(second.halted, 0);
+
+    // Byte-identical manifest vs the uninterrupted control.
+    let resumed_manifest = std::fs::read_to_string(&o.manifest_path).unwrap();
+    assert_eq!(resumed_manifest, ctrl_manifest, "step-level resume must not change a byte");
+    // Step-level resume really happened, and only for the training runs.
+    let times = std::fs::read_to_string(SweepManifest::times_path(&o.manifest_path)).unwrap();
+    assert_eq!(times.matches("\"resumed_from_step\":5").count(), 24, "{times}");
+    // Byte-identical final parameter dumps, both precisions included.
+    let ctrl_params = ctrl_dir.join("params");
+    let kill_params = kill_dir.join("params");
+    let mut compared = 0usize;
+    for entry in std::fs::read_dir(&ctrl_params).unwrap().flatten() {
+        let name = entry.file_name();
+        let a = std::fs::read(entry.path()).unwrap();
+        let b = std::fs::read(kill_params.join(&name)).unwrap();
+        assert_eq!(a, b, "param dump {name:?} must be byte-identical");
+        compared += 1;
+    }
+    assert_eq!(compared, 32, "one dump per run");
+    // Checkpoint dirs are cleaned up once rows are durable.
+    let leftover = std::fs::read_dir(kill_dir.join("ckpt"))
+        .map(|d| d.flatten().count())
+        .unwrap_or(0);
+    assert_eq!(leftover, 0, "completed runs must not leave checkpoints behind");
+    std::fs::remove_dir_all(&ctrl_dir).ok();
+    std::fs::remove_dir_all(&kill_dir).ok();
+}
+
+#[test]
 fn rerun_skips_everything_and_changes_nothing() {
     let dir = fresh_dir("rerun");
     let o = opts(&dir, 4);
@@ -123,6 +181,30 @@ fn rerun_skips_everything_and_changes_nothing() {
     assert_eq!(second.skipped, first.total);
     let after = std::fs::read_to_string(&o.manifest_path).unwrap();
     assert_eq!(before, after);
+
+    // A stale checkpoint dir left by a kill between row-append and
+    // cleanup must be reclaimed by the next resume sweep that skips the
+    // (completed) run.
+    let stale = dir.join("ckpt").join(&specs()[0].run_id);
+    std::fs::create_dir_all(&stale).unwrap();
+    std::fs::write(stale.join("step-00000001.ck"), b"stale").unwrap();
+    let mut with_ckpt = opts(&dir, 2);
+    with_ckpt.ckpt = true;
+    let third = run_sweep(specs(), &with_ckpt).unwrap();
+    assert_eq!(third.executed, 0);
+    assert!(!stale.exists(), "completed-run snapshots must be garbage-collected");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn halt_without_checkpointing_is_refused() {
+    // halt-after with --no-ckpt could never make progress (each resume
+    // restarts from 0 and halts at the same step) — must be rejected.
+    let dir = fresh_dir("haltnockpt");
+    let mut o = opts(&dir, 2); // opts() disables ckpt
+    o.halt_after = 3;
+    let err = run_sweep(specs(), &o).unwrap_err();
+    assert!(format!("{err}").contains("checkpointing"), "{err}");
     std::fs::remove_dir_all(&dir).ok();
 }
 
