@@ -385,7 +385,16 @@ pub fn write_snapshot(
         std::fs::create_dir_all(parent)
             .with_context(|| format!("creating {}", parent.display()))?;
     }
-    let tmp = path.with_extension("ck.tmp");
+    // Process- and call-unique tmp name: fleet workers reclaiming a run
+    // may race a zombie's in-flight snapshot of the *same* step, and a
+    // shared `.tmp` would let one writer tear the other's bytes mid-
+    // rename. The step scanner ignores these (no `.ck` suffix).
+    static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let tmp = path.with_extension(format!(
+        "ck.tmp.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
     let file = std::fs::File::create(&tmp)
         .with_context(|| format!("creating {}", tmp.display()))?;
     let mut w = std::io::BufWriter::new(file);

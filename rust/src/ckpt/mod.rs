@@ -196,9 +196,15 @@ impl Checkpointer {
     }
 
     /// Write the snapshot for `state.step` (atomic), then GC old files.
+    /// Transient I/O errors (`Interrupted`/`WouldBlock`/`TimedOut` — or
+    /// injected chaos faults) are retried with backoff; losing a
+    /// snapshot to a signal-interrupted write would silently cost a
+    /// resume point.
     pub fn save(&self, params: &ParamStore, state: &TrainState) -> Result<PathBuf> {
         let path = self.step_path(state.step);
-        format::write_snapshot(&path, &self.identity, &self.opt_name, params, state)?;
+        crate::ioutil::retry_anyhow("ckpt snapshot", 3, std::time::Duration::from_millis(2), || {
+            format::write_snapshot(&path, &self.identity, &self.opt_name, params, state)
+        })?;
         self.gc();
         Ok(path)
     }
@@ -750,7 +756,7 @@ mod tests {
             .unwrap()
             .flatten()
             .map(|e| e.file_name().to_string_lossy().into_owned())
-            .filter(|n| n.ends_with(".tmp"))
+            .filter(|n| n.contains(".tmp"))
             .collect();
         assert!(leftovers.is_empty(), "stray tmp files: {leftovers:?}");
         std::fs::remove_dir_all(&dir).ok();

@@ -1,0 +1,301 @@
+//! Small-file I/O hardening shared by the manifest, lease and checkpoint
+//! layers: torn-line-tolerant reads, single-syscall line appends, and
+//! bounded retry with deterministic jittered exponential backoff.
+//!
+//! Error taxonomy: *transient* kinds (`Interrupted`, `WouldBlock`,
+//! `TimedOut`) are worth retrying — they describe the moment, not the
+//! data. Everything else (NotFound, PermissionDenied, corruption
+//! surfaced as InvalidData, ...) is *permanent* and fails fast: retrying
+//! would at best waste the backoff budget and at worst paper over a bug.
+//!
+//! Backoff is deterministic: the jitter derives from an FNV hash of the
+//! call-site label and the attempt index, never from wall-clock or a
+//! thread-local RNG — retried sweeps stay reproducible down to their
+//! sleep schedule.
+//!
+//! The chaos harness (`sched::chaos`) injects transient faults through
+//! [`inject_transient_faults`]: the next N [`retry_io`]/[`retry_anyhow`]
+//! attempts *on this thread* fail with `Interrupted` before the real
+//! operation runs, which exercises every retry path deterministically.
+
+use std::cell::Cell;
+use std::io::{self, Write};
+use std::path::Path;
+use std::time::Duration;
+
+use crate::zorng::{fnv1a, fnv1a_word};
+
+/// Is this error kind worth retrying? (See the module docs' taxonomy.)
+pub fn is_transient(kind: io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        io::ErrorKind::Interrupted | io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+    )
+}
+
+thread_local! {
+    /// Pending injected transient faults for this thread (chaos hook).
+    static INJECTED: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Arm `n` injected transient faults: the next `n` retryable operations
+/// on this thread fail with `Interrupted` before touching the disk.
+/// Thread-local on purpose — each in-process chaos "worker" is a thread,
+/// so plans never bleed between workers.
+pub fn inject_transient_faults(n: u32) {
+    INJECTED.with(|c| c.set(c.get().saturating_add(n)));
+}
+
+fn take_injected_fault() -> bool {
+    INJECTED.with(|c| {
+        let n = c.get();
+        if n > 0 {
+            c.set(n - 1);
+            true
+        } else {
+            false
+        }
+    })
+}
+
+/// Deterministic jittered exponential backoff for retry attempt
+/// `attempt` (1-based) of the operation labelled `label`: the base
+/// doubles per attempt (capped at 64×) and is scaled by a jitter factor
+/// in [0.5, 1.5) hashed from (label, attempt).
+pub fn backoff(label: &str, attempt: u32, base: Duration) -> Duration {
+    let doubled = base.saturating_mul(1u32 << attempt.saturating_sub(1).min(6));
+    let h = fnv1a_word(fnv1a(label), attempt as u64);
+    doubled.mul_f64(0.5 + (h % 1024) as f64 / 1024.0)
+}
+
+/// Run `op`, retrying transient failures up to `attempts` times total
+/// with [`backoff`] sleeps in between. Permanent errors return
+/// immediately; the last transient error is returned when the budget is
+/// exhausted.
+pub fn retry_io<T>(
+    label: &str,
+    attempts: u32,
+    base: Duration,
+    mut op: impl FnMut() -> io::Result<T>,
+) -> io::Result<T> {
+    let attempts = attempts.max(1);
+    let mut last: Option<io::Error> = None;
+    for attempt in 1..=attempts {
+        if attempt > 1 {
+            std::thread::sleep(backoff(label, attempt - 1, base));
+        }
+        let res = if take_injected_fault() {
+            Err(io::Error::new(io::ErrorKind::Interrupted, "injected transient fault"))
+        } else {
+            op()
+        };
+        match res {
+            Ok(v) => return Ok(v),
+            Err(e) if is_transient(e.kind()) => last = Some(e),
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last.expect("attempts >= 1 and every attempt records its error"))
+}
+
+/// Does any link of this error chain carry a transient [`io::Error`]?
+pub fn is_transient_anyhow(e: &anyhow::Error) -> bool {
+    e.chain()
+        .any(|c| c.downcast_ref::<io::Error>().is_some_and(|io| is_transient(io.kind())))
+}
+
+/// [`retry_io`] for `anyhow`-returning operations (e.g. a snapshot
+/// write, whose context chain wraps the underlying `io::Error`).
+pub fn retry_anyhow<T>(
+    label: &str,
+    attempts: u32,
+    base: Duration,
+    mut op: impl FnMut() -> anyhow::Result<T>,
+) -> anyhow::Result<T> {
+    let attempts = attempts.max(1);
+    let mut last: Option<anyhow::Error> = None;
+    for attempt in 1..=attempts {
+        if attempt > 1 {
+            std::thread::sleep(backoff(label, attempt - 1, base));
+        }
+        let res = if take_injected_fault() {
+            Err(io::Error::new(io::ErrorKind::Interrupted, "injected transient fault").into())
+        } else {
+            op()
+        };
+        match res {
+            Ok(v) => return Ok(v),
+            Err(e) if is_transient_anyhow(&e) => last = Some(e),
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last.expect("attempts >= 1 and every attempt records its error"))
+}
+
+/// Read a line-oriented file as raw bytes and decode each line lossily.
+///
+/// `read_to_string` would reject the *whole file* when a crash tears a
+/// line mid-way through a multi-byte UTF-8 character; here only the torn
+/// line decodes to replacement characters (and then fails its JSON
+/// parse, exactly like any other torn line), while every intact line
+/// survives.
+pub fn read_lossy_lines(path: &Path) -> io::Result<Vec<String>> {
+    let bytes = std::fs::read(path)?;
+    Ok(bytes
+        .split(|&b| b == b'\n')
+        .map(|line| String::from_utf8_lossy(line).into_owned())
+        .collect())
+}
+
+/// Append `line` + `\n` to `path` as ONE `write_all` on an `O_APPEND`
+/// handle. Two syscalls (payload, then newline) could interleave with a
+/// concurrent process's append; a single write of a short line cannot.
+pub fn append_line(path: &Path, line: &str) -> io::Result<()> {
+    let mut buf = String::with_capacity(line.len() + 1);
+    buf.push_str(line);
+    buf.push('\n');
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    f.write_all(buf.as_bytes())?;
+    f.flush()
+}
+
+/// [`append_line`] under the standard retry policy (4 attempts, 2 ms
+/// base backoff) — the durable-append primitive every JSONL side file
+/// goes through.
+pub fn append_line_retry(path: &Path, line: &str, label: &str) -> io::Result<()> {
+    retry_io(label, 4, Duration::from_millis(2), || append_line(path, line))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_errors_are_retried_to_success() {
+        let mut calls = 0u32;
+        let out = retry_io("t", 4, Duration::ZERO, || {
+            calls += 1;
+            if calls < 3 {
+                Err(io::Error::new(io::ErrorKind::Interrupted, "busy"))
+            } else {
+                Ok(42)
+            }
+        })
+        .unwrap();
+        assert_eq!(out, 42);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn permanent_errors_fail_fast() {
+        let mut calls = 0u32;
+        let err = retry_io::<()>("t", 5, Duration::ZERO, || {
+            calls += 1;
+            Err(io::Error::new(io::ErrorKind::InvalidData, "corrupt"))
+        })
+        .unwrap_err();
+        assert_eq!(calls, 1, "corruption must not be retried");
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn exhausted_budget_returns_the_last_transient_error() {
+        let mut calls = 0u32;
+        let err = retry_io::<()>("t", 3, Duration::ZERO, || {
+            calls += 1;
+            Err(io::Error::new(io::ErrorKind::WouldBlock, "still busy"))
+        })
+        .unwrap_err();
+        assert_eq!(calls, 3);
+        assert_eq!(err.kind(), io::ErrorKind::WouldBlock);
+    }
+
+    #[test]
+    fn injected_faults_are_consumed_then_the_real_op_runs() {
+        inject_transient_faults(2);
+        let mut calls = 0u32;
+        let out = retry_io("t", 4, Duration::ZERO, || {
+            calls += 1;
+            Ok(7)
+        })
+        .unwrap();
+        assert_eq!(out, 7);
+        assert_eq!(calls, 1, "two injected faults, then one real call");
+        // fully drained: the next retryable op sees no fault
+        let ok = retry_io("t", 1, Duration::ZERO, || Ok(1)).unwrap();
+        assert_eq!(ok, 1);
+    }
+
+    #[test]
+    fn retry_anyhow_distinguishes_transient_chains() {
+        let mut calls = 0u32;
+        let out: i32 = retry_anyhow("t", 3, Duration::ZERO, || {
+            calls += 1;
+            if calls == 1 {
+                Err(anyhow::Error::from(io::Error::new(
+                    io::ErrorKind::Interrupted,
+                    "flaky",
+                ))
+                .context("writing snapshot"))
+            } else {
+                Ok(9)
+            }
+        })
+        .unwrap();
+        assert_eq!(out, 9);
+        // a permanent anyhow error is not retried
+        let mut calls = 0u32;
+        let err = retry_anyhow::<()>("t", 5, Duration::ZERO, || {
+            calls += 1;
+            anyhow::bail!("logic error")
+        })
+        .unwrap_err();
+        assert_eq!(calls, 1);
+        assert!(format!("{err}").contains("logic error"));
+    }
+
+    #[test]
+    fn backoff_is_deterministic_jittered_and_grows() {
+        let base = Duration::from_millis(2);
+        let a1 = backoff("site", 1, base);
+        assert_eq!(a1, backoff("site", 1, base), "same label+attempt, same sleep");
+        assert_ne!(a1, backoff("other", 1, base), "label feeds the jitter");
+        // doubling dominates the [0.5, 1.5) jitter by attempt + 2
+        assert!(backoff("site", 3, base) > a1);
+        // jitter stays in [0.5, 1.5) x doubled
+        for attempt in 1..=6 {
+            let d = backoff("site", attempt, base);
+            let doubled = base * (1 << (attempt - 1).min(6));
+            assert!(d >= doubled.mul_f64(0.5) && d < doubled.mul_f64(1.5));
+        }
+    }
+
+    #[test]
+    fn lossy_lines_survive_a_torn_multibyte_character() {
+        let dir = std::env::temp_dir().join(format!("addax_ioutil_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.jsonl");
+        // valid line, then a line torn mid-way through a 2-byte char
+        let mut bytes = b"{\"ok\":1}\n{\"name\":\"caf".to_vec();
+        bytes.push(0xC3); // first byte of U+00E9, second byte lost to the kill
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(std::fs::read_to_string(&path).is_err(), "the premise: strict read fails");
+        let lines = read_lossy_lines(&path).unwrap();
+        assert_eq!(lines[0], "{\"ok\":1}");
+        assert!(lines[1].contains('\u{FFFD}'), "torn tail decodes lossily: {:?}", lines[1]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn append_line_is_one_write_and_roundtrips() {
+        let dir = std::env::temp_dir().join(format!("addax_ioutil_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("append.jsonl");
+        std::fs::remove_file(&path).ok();
+        append_line_retry(&path, "{\"a\":1}", "test append").unwrap();
+        append_line_retry(&path, "{\"b\":2}", "test append").unwrap();
+        let lines = read_lossy_lines(&path).unwrap();
+        assert_eq!(&lines[..2], &["{\"a\":1}".to_string(), "{\"b\":2}".to_string()]);
+        std::fs::remove_file(&path).ok();
+    }
+}

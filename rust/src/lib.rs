@@ -26,6 +26,7 @@ pub mod ckpt;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod ioutil;
 pub mod jsonlite;
 pub mod metrics;
 pub mod memory;

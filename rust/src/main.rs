@@ -6,6 +6,7 @@
 //!              [--workers W] [--resume] [--manifest PATH] [--dry-run]
 //!              [--no-ckpt] [--ckpt-every N] [--ckpt-keep K]
 //!              [--halt-after N] [--dump-params]
+//!              [--worker-id ID [--lease-ttl SECS] [--chaos-seed S]]
 //! addax ckpt   inspect|verify FILE...              snapshot header / full CRC pass
 //! addax ckpt   diff A B                            compare two snapshots
 //! addax repro  <id|all> [--fast] [--model KEY]     regenerate a paper table/figure
@@ -26,7 +27,9 @@ use addax::memory::{self, footprint, geometry, Device, Dtype, Method, Workload};
 use addax::repro::{self, Harness};
 use addax::runtime::manifest::{default_artifacts_dir, Manifest};
 use addax::runtime::XlaExec;
-use addax::sched::{pack, run_sweep, SweepOptions, SweepSpec};
+use addax::sched::{
+    pack, run_sweep, run_sweep_fleet, ChaosPlan, FleetOptions, SweepOptions, SweepSpec,
+};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -55,7 +58,7 @@ fn print_help() {
          addax sweep  [--spec FILE | --smoke] [--budget-gb G] [--gpus N] [--workers W]\n  \
          \x20            [--resume] [--manifest PATH] [--dry-run] [--set section.key=value ...]\n  \
          \x20            [--no-ckpt] [--ckpt-every N] [--ckpt-keep K] [--halt-after N]\n  \
-         \x20            [--dump-params]\n  \
+         \x20            [--dump-params] [--worker-id ID [--lease-ttl SECS] [--chaos-seed S]]\n  \
          addax ckpt   inspect FILE... | verify FILE... | diff A B\n  \
          addax repro  <id|all> [--fast] [--model KEY]\n  \
          addax memory --geometry G --method M [--batch B] [--len L] [--gpus N] [--hbm GB]\n  \
@@ -74,7 +77,19 @@ fn print_help() {
          deterministic kill used by CI); --dump-params writes each finished\n  \
          run's final parameters for byte-compare proofs. `repro` tables/figures\n  \
          aggregate from the same manifest. --smoke runs the built-in 24-run grid\n  \
-         (see configs/sweep_smoke.toml).\n\nCKPT:\n  \
+         (see configs/sweep_smoke.toml).\n\nFLEET:\n  \
+         --worker-id ID makes this process one worker in a multi-process fleet:\n  \
+         any number of `addax sweep --worker-id <id> --resume` invocations may\n  \
+         share one --manifest. Workers claim runs by appending lease records\n  \
+         (run_id + worker + fencing token + expiry) to the sibling\n  \
+         manifest.leases.jsonl, heartbeat at TTL/3 (--lease-ttl SECS, default\n  \
+         from sweep.lease_ttl_secs), reclaim expired leases and resume the dead\n  \
+         worker's run from its step-level snapshots; a zombie's late commit is\n  \
+         fenced by token and discarded. --chaos-seed S deterministically injects\n  \
+         worker crashes (exit 96, lease left to expire), heartbeat stalls and\n  \
+         transient I/O faults — same seed, same faults, every machine. The\n  \
+         compacted manifest stays byte-identical to a single-process sweep's\n  \
+         under any kill/reclaim pattern.\n\nCKPT:\n  \
          inspect prints a snapshot's header (identity hash, dtype, step, eval\n  \
          cadence, tensors); verify additionally checks every chunk CRC; diff\n  \
          compares two snapshots (header fields + per-tensor element diffs).\n\n\
@@ -278,6 +293,39 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         }
         println!("(dry run: nothing executed)");
         return Ok(());
+    }
+    if let Some(worker_id) = flag(args, "--worker-id") {
+        // Fleet mode: this process is one lease-coordinated worker among
+        // many sharing the manifest. Lease/chaos knobs only make sense
+        // here, so reject them without a worker identity (below).
+        let ttl_secs: f64 = match flag(args, "--lease-ttl") {
+            Some(s) => s.parse().context("--lease-ttl wants seconds (a number)")?,
+            None => sweep.lease_ttl_secs,
+        };
+        let fleet = FleetOptions {
+            worker_id: worker_id.to_string(),
+            lease_ttl_ms: (ttl_secs * 1000.0).round().max(0.0) as u64,
+            chaos: match flag(args, "--chaos-seed") {
+                Some(s) => {
+                    Some(ChaosPlan::new(s.parse().context("--chaos-seed wants a u64")?))
+                }
+                None => None,
+            },
+        };
+        let exit = run_sweep_fleet(specs, &opts, &fleet)?;
+        println!("{}", exit.summary.line());
+        if let Some(run_id) = exit.crashed {
+            // Exit 96 marks a *planned* chaos kill (lease left to
+            // expire), so restart loops can tell it from a real failure.
+            println!("chaos-crash: worker {worker_id} killed in {run_id} (exit 96)");
+            std::process::exit(96);
+        }
+        return Ok(());
+    }
+    for f in ["--lease-ttl", "--chaos-seed"] {
+        if flag(args, f).is_some() {
+            bail!("{f} is a fleet flag — pair it with --worker-id <id>");
+        }
     }
     let summary = run_sweep(specs, &opts)?;
     println!("{}", summary.line());

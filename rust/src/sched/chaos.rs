@@ -1,0 +1,136 @@
+//! Deterministic fault injection for the sweep fleet.
+//!
+//! A fleet is only trustworthy if its failure paths are *exercised*, not
+//! hoped-for. `--chaos-seed S` arms a [`ChaosPlan`]: a pure function
+//! from `(S, run_id)` to the faults that run suffers, via
+//! `derive_seed(S, fnv1a(run_id))` — the exact seed-derivation scheme
+//! the trainer uses for noise replay, reused so a chaos scenario is as
+//! reproducible as the training it disrupts. Same seed + same grid =
+//! the same crashes at the same steps on every machine.
+//!
+//! Three fault families (mirroring how fleets really die):
+//!
+//! * **worker crash** — the process "dies" (exits, without releasing its
+//!   lease) after a chosen step; the snapshot machinery makes the state
+//!   identical to a SIGKILL at a snapshot boundary, since `ADDAXCK1`
+//!   writes are atomic. Crashes arm only at fencing token 1 (the run's
+//!   first execution): a reclaimed run never re-crashes, so every chaos
+//!   scenario makes forward progress by construction.
+//! * **heartbeat stall** — the holder stops renewing (a GC pause / NIC
+//!   drop stand-in): the lease expires mid-run, someone reclaims it,
+//!   and the original holder becomes a zombie whose late commit must be
+//!   fenced. Also token-1-only.
+//! * **transient I/O faults** — a bounded burst of `Interrupted` errors
+//!   injected ahead of the run's manifest-row append (through
+//!   `ioutil::inject_transient_faults`), exercising the retry/backoff
+//!   path. Bounded below the retry budget, so injected faults are never
+//!   fatal — they must be *absorbed*.
+
+use crate::zorng::{derive_seed, fnv1a};
+
+/// The seeded fault plan (see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosPlan {
+    pub seed: u64,
+}
+
+/// The faults one run suffers under a plan.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunFaults {
+    /// Crash the worker after this many steps of the run's *first*
+    /// execution (fencing token 1). `None` = no crash.
+    pub crash_after: Option<usize>,
+    /// Stop heartbeating during the first execution, letting the lease
+    /// expire under a still-running holder.
+    pub stall_heartbeat: bool,
+    /// Transient I/O faults injected before the row append (0–2; always
+    /// below the 4-attempt retry budget).
+    pub append_faults: u32,
+}
+
+impl ChaosPlan {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+
+    /// The faults for `run_id` (a run of `steps` training steps). Pure
+    /// and stateless: every worker, restart, and machine computes the
+    /// same plan. Roughly a quarter of training runs crash (at a step in
+    /// `[1, steps)` so a remainder always exists to resume), a disjoint
+    /// quarter stalls, and a quarter of all runs eats an I/O burst.
+    pub fn for_run(&self, run_id: &str, steps: usize) -> RunFaults {
+        let h = derive_seed(self.seed, fnv1a(run_id));
+        let mut f = RunFaults::default();
+        match h % 4 {
+            0 if steps >= 2 => f.crash_after = Some(1 + (h >> 8) as usize % (steps - 1)),
+            1 => f.stall_heartbeat = true,
+            _ => {}
+        }
+        if (h >> 4) % 4 == 0 {
+            f.append_faults = 1 + ((h >> 16) % 2) as u32;
+        }
+        f
+    }
+
+    /// Does this plan crash at least one of the given runs? Lets tests
+    /// and tools pick a seed with guaranteed kill coverage instead of
+    /// hoping.
+    pub fn crashes_any<'a>(&self, runs: impl IntoIterator<Item = (&'a str, usize)>) -> bool {
+        runs.into_iter().any(|(id, steps)| self.for_run(id, steps).crash_after.is_some())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_deterministic_and_seed_sensitive() {
+        let a = ChaosPlan::new(7).for_run("run-x", 40);
+        let b = ChaosPlan::new(7).for_run("run-x", 40);
+        assert_eq!(a.crash_after, b.crash_after);
+        assert_eq!(a.stall_heartbeat, b.stall_heartbeat);
+        assert_eq!(a.append_faults, b.append_faults);
+        // different seeds decorrelate across a run population
+        let runs: Vec<String> = (0..64).map(|i| format!("run-{i}")).collect();
+        let plan = |s: u64| -> Vec<Option<usize>> {
+            runs.iter().map(|r| ChaosPlan::new(s).for_run(r, 40).crash_after).collect()
+        };
+        assert_ne!(plan(1), plan(2));
+    }
+
+    #[test]
+    fn crash_steps_leave_work_to_resume() {
+        for seed in 0..16u64 {
+            for i in 0..64 {
+                let f = ChaosPlan::new(seed).for_run(&format!("r{i}"), 40);
+                if let Some(at) = f.crash_after {
+                    assert!((1..40).contains(&at), "crash at {at} leaves no remainder");
+                    assert!(!f.stall_heartbeat, "crash and stall are disjoint");
+                }
+                assert!(f.append_faults <= 2, "bursts stay below the retry budget");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_shot_runs_never_crash() {
+        for seed in 0..32u64 {
+            let f = ChaosPlan::new(seed).for_run("zs", 0);
+            assert_eq!(f.crash_after, None);
+        }
+    }
+
+    #[test]
+    fn fault_families_all_occur_across_a_population() {
+        let runs: Vec<String> = (0..128).map(|i| format!("run-{i}")).collect();
+        let plan = ChaosPlan::new(3);
+        let fs: Vec<RunFaults> = runs.iter().map(|r| plan.for_run(r, 40)).collect();
+        assert!(fs.iter().any(|f| f.crash_after.is_some()));
+        assert!(fs.iter().any(|f| f.stall_heartbeat));
+        assert!(fs.iter().any(|f| f.append_faults > 0));
+        assert!(fs.iter().any(|f| f.crash_after.is_none() && !f.stall_heartbeat));
+        assert!(plan.crashes_any(runs.iter().map(|r| (r.as_str(), 40))));
+        assert!(!plan.crashes_any(runs.iter().map(|r| (r.as_str(), 0))));
+    }
+}

@@ -1,0 +1,375 @@
+//! Run leases: the coordination substrate that turns the single-process
+//! sweep into a multi-process fleet.
+//!
+//! Workers claim runs by appending lease records to a sibling
+//! `manifest.leases.jsonl` (append-only JSONL, same crash-tolerance
+//! rules as the manifest), heartbeat by appending renewals, and reclaim
+//! leases whose TTL lapsed. The file is the *only* shared state — there
+//! is no server and no lock: `O_APPEND` serializes the records, and the
+//! replay rules below make every reader agree on who holds what.
+//!
+//! Record shape (one JSON object per line; keys in canonical order):
+//!
+//! ```json
+//! {"action":"claim","expires_ms":1754650000000,"run_id":"...","token":1,"worker":"w0"}
+//! ```
+//!
+//! * `token` is the **fencing token**: claims carry `max token + 1` for
+//!   their run, so tokens strictly increase across claim generations.
+//!   A worker that lost its lease (crash, stall, partition) holds a
+//!   stale token forever — its late writes are detectable and
+//!   rejectable by comparing tokens, no matter when they arrive.
+//! * `action` is `claim` (fresh), `reclaim` (a claim over an expired
+//!   lease — identical semantics, distinct label so reclaims are
+//!   observable in telemetry and CI), `renew` (heartbeat: extends
+//!   `expires_ms`), or `release` (the run's row is durable; the lease
+//!   is retired).
+//!
+//! Replay rules (applied in file order; all readers converge):
+//!
+//! * a claim/reclaim with a **higher** token supersedes the current
+//!   lease; an **equal** token loses to the earlier record (`O_APPEND`
+//!   ordering breaks the tie — "first appender wins"); a lower token is
+//!   stale noise and ignored;
+//! * a renew extends the expiry only when worker *and* token match the
+//!   current lease (a zombie's renewals are no-ops);
+//! * a release retires the current lease only at a matching token.
+//!
+//! A run is **claimable** when it has no lease, its lease was released,
+//! or `now` is past `expires_ms` (the holder is presumed dead; the next
+//! claim is a reclaim and resumes the run from its step-level
+//! snapshots).
+//!
+//! The lease file is telemetry-adjacent scaffolding, *outside* the
+//! manifest's byte-identity contract — like `manifest.times.jsonl`, it
+//! varies with timing and worker count while the compacted manifest
+//! does not.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{bail, Context, Result};
+
+use crate::ioutil;
+use crate::jsonlite::{obj, Json};
+
+/// Sibling lease file (`manifest.jsonl` → `manifest.leases.jsonl`).
+pub fn leases_path(manifest: &Path) -> PathBuf {
+    manifest.with_extension("leases.jsonl")
+}
+
+/// Milliseconds since the Unix epoch (the lease clock). Wall-clock is
+/// fine here: expiry only gates *liveness* decisions, never results —
+/// nothing time-derived can reach a manifest row.
+pub fn now_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// What a lease record does (see the module docs for replay rules).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeaseAction {
+    Claim,
+    Reclaim,
+    Renew,
+    Release,
+}
+
+impl LeaseAction {
+    pub fn label(&self) -> &'static str {
+        match self {
+            LeaseAction::Claim => "claim",
+            LeaseAction::Reclaim => "reclaim",
+            LeaseAction::Renew => "renew",
+            LeaseAction::Release => "release",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "claim" => LeaseAction::Claim,
+            "reclaim" => LeaseAction::Reclaim,
+            "renew" => LeaseAction::Renew,
+            "release" => LeaseAction::Release,
+            other => bail!("unknown lease action {other:?}"),
+        })
+    }
+}
+
+/// One appended lease record.
+#[derive(Clone, Debug)]
+pub struct LeaseRecord {
+    pub run_id: String,
+    pub worker: String,
+    /// Fencing token (strictly increasing per run across claims).
+    pub token: u64,
+    pub action: LeaseAction,
+    /// Lease expiry, ms since epoch (claim/reclaim/renew; a release
+    /// carries the append time, informational only).
+    pub expires_ms: u64,
+}
+
+impl LeaseRecord {
+    pub fn to_line(&self) -> String {
+        obj(vec![
+            ("action", Json::from(self.action.label())),
+            ("expires_ms", Json::from(self.expires_ms as usize)),
+            ("run_id", Json::from(self.run_id.clone())),
+            ("token", Json::from(self.token as usize)),
+            ("worker", Json::from(self.worker.clone())),
+        ])
+        .dump()
+    }
+
+    pub fn from_line(line: &str) -> Result<Self> {
+        let v = Json::parse(line)?;
+        Ok(Self {
+            run_id: v.get("run_id")?.as_str()?.to_string(),
+            worker: v.get("worker")?.as_str()?.to_string(),
+            token: v.get("token")?.as_u64()?,
+            action: LeaseAction::parse(v.get("action")?.as_str()?)?,
+            expires_ms: v.get("expires_ms")?.as_u64()?,
+        })
+    }
+}
+
+/// Append one record durably (single write, bounded retry).
+pub fn append(path: &Path, rec: &LeaseRecord) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    ioutil::append_line_retry(path, &rec.to_line(), "lease append")
+        .with_context(|| format!("appending lease record to {}", path.display()))
+}
+
+/// The current lease of one run after replay.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LeaseState {
+    pub worker: String,
+    pub token: u64,
+    pub expires_ms: u64,
+    pub released: bool,
+}
+
+/// All leases, replayed from the file in append order.
+#[derive(Debug, Default)]
+pub struct LeaseTable {
+    states: BTreeMap<String, LeaseState>,
+    /// Torn/unparseable lines skipped during replay.
+    pub corrupt_lines: usize,
+}
+
+impl LeaseTable {
+    /// Replay the lease file (missing file = empty table). Torn lines —
+    /// including ones torn mid-way through a multi-byte character — are
+    /// skipped and counted, like the manifest's.
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut t = Self::default();
+        let lines = match ioutil::read_lossy_lines(path) {
+            Ok(l) => l,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(t),
+            Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+        };
+        for line in &lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match LeaseRecord::from_line(line) {
+                Ok(rec) => t.apply(rec),
+                Err(_) => t.corrupt_lines += 1,
+            }
+        }
+        Ok(t)
+    }
+
+    fn apply(&mut self, rec: LeaseRecord) {
+        let entry = self.states.entry(rec.run_id.clone());
+        match rec.action {
+            LeaseAction::Claim | LeaseAction::Reclaim => {
+                let fresh = LeaseState {
+                    worker: rec.worker,
+                    token: rec.token,
+                    expires_ms: rec.expires_ms,
+                    released: false,
+                };
+                match entry {
+                    std::collections::btree_map::Entry::Vacant(v) => {
+                        v.insert(fresh);
+                    }
+                    std::collections::btree_map::Entry::Occupied(mut o) => {
+                        // higher token supersedes; an equal token lost the
+                        // append race (first appender wins); lower = stale
+                        if rec.token > o.get().token {
+                            o.insert(fresh);
+                        }
+                    }
+                }
+            }
+            LeaseAction::Renew => {
+                if let std::collections::btree_map::Entry::Occupied(mut o) = entry {
+                    let s = o.get_mut();
+                    if s.token == rec.token && s.worker == rec.worker && !s.released {
+                        s.expires_ms = s.expires_ms.max(rec.expires_ms);
+                    }
+                }
+            }
+            LeaseAction::Release => {
+                if let std::collections::btree_map::Entry::Occupied(mut o) = entry {
+                    let s = o.get_mut();
+                    if s.token == rec.token {
+                        s.released = true;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The run's current lease, if any record ever touched it.
+    pub fn state(&self, run_id: &str) -> Option<&LeaseState> {
+        self.states.get(run_id)
+    }
+
+    /// Highest claim token seen for this run (0 = never claimed). The
+    /// next claim must carry `max_token + 1`; a holder whose token is
+    /// below this value is fenced.
+    pub fn max_token(&self, run_id: &str) -> u64 {
+        self.states.get(run_id).map_or(0, |s| s.token)
+    }
+
+    /// The live holder `(worker, token)` — the winning claimant whose
+    /// lease was neither released nor superseded. Expiry is deliberately
+    /// NOT checked here: a claim confirmation compares identity, and an
+    /// expired-but-unsuperseded holder is still the fencing reference.
+    pub fn holder(&self, run_id: &str) -> Option<(&str, u64)> {
+        self.states
+            .get(run_id)
+            .filter(|s| !s.released)
+            .map(|s| (s.worker.as_str(), s.token))
+    }
+
+    /// May a new claim be appended for this run right now?
+    pub fn claimable(&self, run_id: &str, now_ms: u64) -> bool {
+        match self.states.get(run_id) {
+            None => true,
+            Some(s) => s.released || now_ms >= s.expires_ms,
+        }
+    }
+
+    /// Is any lease still live (unreleased and unexpired)? Gates fleet
+    /// compaction: a live lease means a worker may still append.
+    pub fn any_active(&self, now_ms: u64) -> bool {
+        self.states.values().any(|s| !s.released && now_ms < s.expires_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(run: &str, worker: &str, token: u64, action: LeaseAction, expires: u64) -> LeaseRecord {
+        LeaseRecord {
+            run_id: run.to_string(),
+            worker: worker.to_string(),
+            token,
+            action,
+            expires_ms: expires,
+        }
+    }
+
+    fn table(recs: &[LeaseRecord]) -> LeaseTable {
+        let mut t = LeaseTable::default();
+        for r in recs {
+            t.apply(r.clone());
+        }
+        t
+    }
+
+    #[test]
+    fn record_roundtrips() {
+        let r = rec("run-a", "w0", 3, LeaseAction::Reclaim, 1_754_650_000_000);
+        let back = LeaseRecord::from_line(&r.to_line()).unwrap();
+        assert_eq!(back.run_id, "run-a");
+        assert_eq!(back.worker, "w0");
+        assert_eq!(back.token, 3);
+        assert_eq!(back.action, LeaseAction::Reclaim);
+        assert_eq!(back.expires_ms, 1_754_650_000_000);
+        assert_eq!(back.to_line(), r.to_line(), "serialization is canonical");
+        assert!(LeaseRecord::from_line("{\"action\":\"explode\"}").is_err());
+    }
+
+    #[test]
+    fn first_equal_token_claim_wins() {
+        // two workers race claim(token 1); file order decides
+        let t = table(&[
+            rec("r", "w0", 1, LeaseAction::Claim, 100),
+            rec("r", "w1", 1, LeaseAction::Claim, 120),
+        ]);
+        assert_eq!(t.holder("r"), Some(("w0", 1)));
+        assert_eq!(t.max_token("r"), 1);
+    }
+
+    #[test]
+    fn higher_token_supersedes_and_fences() {
+        let t = table(&[
+            rec("r", "w0", 1, LeaseAction::Claim, 100),
+            rec("r", "w1", 2, LeaseAction::Reclaim, 300),
+            // stale writes from the fenced original holder are no-ops
+            rec("r", "w0", 1, LeaseAction::Renew, 900),
+            rec("r", "w0", 1, LeaseAction::Release, 0),
+        ]);
+        assert_eq!(t.holder("r"), Some(("w1", 2)));
+        assert_eq!(t.state("r").unwrap().expires_ms, 300, "zombie renew ignored");
+        assert!(!t.state("r").unwrap().released, "zombie release ignored");
+    }
+
+    #[test]
+    fn renew_extends_only_the_current_holder() {
+        let t = table(&[
+            rec("r", "w0", 1, LeaseAction::Claim, 100),
+            rec("r", "w0", 1, LeaseAction::Renew, 250),
+        ]);
+        assert_eq!(t.state("r").unwrap().expires_ms, 250);
+        assert!(!t.claimable("r", 200));
+        assert!(t.claimable("r", 250), "expired leases are reclaimable");
+    }
+
+    #[test]
+    fn release_retires_the_lease() {
+        let t = table(&[
+            rec("r", "w0", 1, LeaseAction::Claim, 100),
+            rec("r", "w0", 1, LeaseAction::Release, 42),
+        ]);
+        assert!(t.claimable("r", 0), "released leases are claimable before expiry");
+        assert_eq!(t.holder("r"), None);
+        assert_eq!(t.max_token("r"), 1, "the token history survives release");
+        assert!(!t.any_active(0));
+    }
+
+    #[test]
+    fn load_tolerates_torn_and_missing_files() {
+        let dir = std::env::temp_dir().join(format!("addax_lease_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.leases.jsonl");
+        std::fs::remove_file(&path).ok();
+        assert_eq!(LeaseTable::load(&path).unwrap().corrupt_lines, 0, "missing = empty");
+        append(&path, &rec("r", "w0", 1, LeaseAction::Claim, 4_102_444_800_000)).unwrap();
+        // a kill mid-append tears the line — with an invalid UTF-8 tail
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"{\"action\":\"claim\",\"run_id\":\"caf");
+        bytes.push(0xC3);
+        std::fs::write(&path, &bytes).unwrap();
+        let t = LeaseTable::load(&path).unwrap();
+        assert_eq!(t.corrupt_lines, 1);
+        assert_eq!(t.holder("r"), Some(("w0", 1)));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn leases_path_is_a_sibling() {
+        let p = leases_path(Path::new("results/sweep/manifest.jsonl"));
+        assert_eq!(p, PathBuf::from("results/sweep/manifest.leases.jsonl"));
+    }
+}

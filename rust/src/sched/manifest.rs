@@ -22,12 +22,13 @@
 //! the analytic memory model) is sufficient to regenerate every report.
 
 use std::collections::BTreeMap;
-use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::{EvalOut, RunResult};
+use crate::ioutil;
 use crate::jsonlite::{obj, Json};
 use crate::metrics::Curve;
 
@@ -138,7 +139,16 @@ impl ManifestRow {
     }
 
     pub fn from_line(line: &str) -> Result<Self> {
-        let v = Json::parse(line)?;
+        Self::from_json(&Json::parse(line)?)
+    }
+
+    /// Parse from the already-parsed JSON form. Extra keys (e.g. the
+    /// fleet's `lease` stamp) are ignored — the canonical [`to_line`]
+    /// form never carries them, which is exactly how compaction strips
+    /// lease noise from fleet manifests.
+    ///
+    /// [`to_line`]: ManifestRow::to_line
+    pub fn from_json(v: &Json) -> Result<Self> {
         let o = v.get("outcome")?;
         Ok(Self {
             run_id: v.get("run_id")?.as_str()?.to_string(),
@@ -163,36 +173,80 @@ impl ManifestRow {
     }
 }
 
+/// The fencing stamp of a parsed manifest line. Unstamped (classic or
+/// compacted) rows are authoritative, so they rank above every token.
+fn stamp_token(v: &Json) -> u64 {
+    v.opt("lease")
+        .and_then(|l| l.opt("token"))
+        .and_then(|t| t.as_u64().ok())
+        .unwrap_or(u64::MAX)
+}
+
 /// The on-disk manifest plus its in-memory index by run id.
 #[derive(Debug)]
 pub struct SweepManifest {
     pub path: PathBuf,
     rows: BTreeMap<String, ManifestRow>,
+    /// Fencing stamp of each indexed row (fleet appends carry one;
+    /// classic rows rank as `u64::MAX`). Only consulted when two rows
+    /// claim the same run id.
+    tokens: BTreeMap<String, u64>,
     /// Unparseable lines skipped on load (a crash tears at most one).
     pub corrupt_lines: usize,
+    /// Rows dropped because a higher fencing token holds the same run —
+    /// a zombie worker's late append, detected and ignored on load.
+    pub fenced_rows: usize,
 }
 
 impl SweepManifest {
     /// Load (a missing file is an empty manifest).
+    ///
+    /// Torn lines — including ones torn mid-way through a multi-byte
+    /// UTF-8 character, which would poison a strict whole-file read —
+    /// are skipped and counted. When two rows carry the same run id,
+    /// the one with the higher fencing stamp wins (ties: last wins, the
+    /// historical behavior); superseded rows count as `fenced_rows`.
     pub fn load(path: &Path) -> Result<Self> {
-        let mut m = Self { path: path.to_path_buf(), rows: BTreeMap::new(), corrupt_lines: 0 };
-        let text = match std::fs::read_to_string(path) {
-            Ok(t) => t,
+        let mut m = Self {
+            path: path.to_path_buf(),
+            rows: BTreeMap::new(),
+            tokens: BTreeMap::new(),
+            corrupt_lines: 0,
+            fenced_rows: 0,
+        };
+        let lines = match ioutil::read_lossy_lines(path) {
+            Ok(l) => l,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(m),
             Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
         };
-        for line in text.lines() {
+        for line in &lines {
             if line.trim().is_empty() {
                 continue;
             }
-            match ManifestRow::from_line(line) {
-                Ok(row) => {
-                    m.rows.insert(row.run_id.clone(), row);
-                }
+            let parsed = Json::parse(line).and_then(|v| {
+                let token = stamp_token(&v);
+                ManifestRow::from_json(&v).map(|row| (token, row))
+            });
+            match parsed {
+                Ok((token, row)) => m.index(row, token),
                 Err(_) => m.corrupt_lines += 1,
             }
         }
         Ok(m)
+    }
+
+    /// Index one row under fencing rules (see [`SweepManifest::load`]).
+    fn index(&mut self, row: ManifestRow, token: u64) {
+        match self.tokens.get(&row.run_id) {
+            Some(&held) if token < held => self.fenced_rows += 1,
+            other => {
+                if matches!(other, Some(&held) if token > held) {
+                    self.fenced_rows += 1; // the row being superseded
+                }
+                self.tokens.insert(row.run_id.clone(), token);
+                self.rows.insert(row.run_id.clone(), row);
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -216,30 +270,63 @@ impl SweepManifest {
         self.rows.values()
     }
 
-    /// Crash-safe append: one line, flushed, then indexed.
+    /// Crash-safe append: one line in one write (with bounded retry on
+    /// transient errors), then indexed. A single `write_all` on an
+    /// `O_APPEND` handle cannot interleave with a concurrent worker's
+    /// append — the multi-process safety the fleet relies on.
     pub fn append(&mut self, row: ManifestRow) -> Result<()> {
+        self.append_raw(&row.to_line())?;
+        self.index(row, u64::MAX);
+        Ok(())
+    }
+
+    /// Fleet append: the row plus a `lease` stamp (`token`, `worker`).
+    /// The stamp lets any later load fence a zombie's duplicate (lower
+    /// tokens lose), and [`SweepManifest::compact`] strips it — the
+    /// canonical form is stamp-free, so a compacted fleet manifest is
+    /// byte-identical to a single-process one.
+    pub fn append_stamped(&mut self, row: ManifestRow, token: u64, worker: &str) -> Result<()> {
+        let mut j = row.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert(
+                "lease".to_string(),
+                obj(vec![
+                    ("token", Json::from(token as usize)),
+                    ("worker", Json::from(worker)),
+                ]),
+            );
+        }
+        self.append_raw(&j.dump())?;
+        self.index(row, token);
+        Ok(())
+    }
+
+    fn append_raw(&self, line: &str) -> Result<()> {
         if let Some(dir) = self.path.parent() {
             std::fs::create_dir_all(dir).ok();
         }
-        let mut f = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(&self.path)
-            .with_context(|| format!("opening {} for append", self.path.display()))?;
-        writeln!(f, "{}", row.to_line())?;
-        f.flush()?;
-        self.rows.insert(row.run_id.clone(), row);
-        Ok(())
+        ioutil::append_line_retry(&self.path, line, "manifest append")
+            .with_context(|| format!("appending to {}", self.path.display()))
     }
 
     /// Rewrite the file in canonical order (sorted by run id) via a temp
     /// file + atomic rename. Run after a sweep completes; the result is
-    /// byte-identical for identical row sets.
+    /// byte-identical for identical row sets. Rows are re-serialized
+    /// through [`ManifestRow::to_line`], which drops fleet lease stamps
+    /// — compaction is where lease noise dies.
     pub fn compact(&self) -> Result<()> {
         if let Some(dir) = self.path.parent() {
             std::fs::create_dir_all(dir).ok();
         }
-        let tmp = self.path.with_extension("jsonl.tmp");
+        // Unique per process + call: concurrent fleet workers may compact
+        // the same manifest simultaneously (they write identical bytes,
+        // and the rename is atomic) — a shared tmp name could tear.
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let tmp = self.path.with_extension(format!(
+            "jsonl.tmp.{}.{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
         let mut out = String::new();
         for row in self.rows.values() {
             out.push_str(&row.to_line());
@@ -272,11 +359,6 @@ impl SweepManifest {
         resumed_from_step: Option<usize>,
         note: Option<&str>,
     ) -> Result<()> {
-        let path = Self::times_path(manifest);
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir).ok();
-        }
-        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
         let mut fields = vec![
             ("run_id", Json::from(run_id)),
             ("total_secs", Json::from(finite(total_secs))),
@@ -288,19 +370,46 @@ impl SweepManifest {
         if let Some(note) = note {
             fields.push(("note", Json::from(note)));
         }
-        let row = obj(fields);
-        writeln!(f, "{}", row.dump())?;
-        f.flush()?;
-        Ok(())
+        Self::append_telemetry(manifest, obj(fields))
+    }
+
+    /// Append a fleet lifecycle event (lease reclaim, fenced zombie
+    /// append, ...) to the times side file as a telemetry note. Event
+    /// rows deliberately carry no `total_secs`, so [`load_times`] can
+    /// never mistake one for a timing — and events never become
+    /// manifest rows, keeping the byte-identity contract untouched.
+    ///
+    /// [`load_times`]: SweepManifest::load_times
+    pub fn append_event(manifest: &Path, run_id: &str, event: &str, note: &str) -> Result<()> {
+        Self::append_telemetry(
+            manifest,
+            obj(vec![
+                ("event", Json::from(event)),
+                ("note", Json::from(note)),
+                ("run_id", Json::from(run_id)),
+            ]),
+        )
+    }
+
+    fn append_telemetry(manifest: &Path, row: Json) -> Result<()> {
+        let path = Self::times_path(manifest);
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        ioutil::append_line_retry(&path, &row.dump(), "times append")
+            .with_context(|| format!("appending to {}", path.display()))
     }
 
     /// Load timings: run id → (total, time-to-best); empty when absent.
+    /// Torn lines (even ones tearing a multi-byte character — a worker
+    /// killed mid-telemetry-append) and event rows are skipped; they
+    /// must never poison the rest of the file.
     pub fn load_times(manifest: &Path) -> BTreeMap<String, (f64, f64)> {
         let mut out = BTreeMap::new();
-        let Ok(text) = std::fs::read_to_string(Self::times_path(manifest)) else {
+        let Ok(lines) = ioutil::read_lossy_lines(&Self::times_path(manifest)) else {
             return out;
         };
-        for line in text.lines() {
+        for line in &lines {
             let Ok(v) = Json::parse(line) else { continue };
             let (Ok(id), Ok(t), Ok(b)) = (
                 v.get("run_id").and_then(|j| j.as_str()),
@@ -426,5 +535,102 @@ mod tests {
         assert_eq!(text.matches("resumed_from_step").count(), 1);
         assert!(SweepManifest::load_times(&dir.join("missing.jsonl")).is_empty());
         std::fs::remove_file(&times).ok();
+    }
+
+    #[test]
+    fn torn_multibyte_line_does_not_poison_the_load() {
+        // A kill mid-append can tear a line inside a multi-byte UTF-8
+        // character; a strict whole-file read_to_string would then fail
+        // and lose every intact row.
+        let dir = tmpdir("torn_utf8");
+        let path = dir.join("m.jsonl");
+        std::fs::remove_file(&path).ok();
+        let mut m = SweepManifest::load(&path).unwrap();
+        m.append(row(0)).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"{\"run_id\": \"caf");
+        bytes.push(0xC3); // first byte of a 2-byte char; the kill ate the rest
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(std::fs::read_to_string(&path).is_err(), "the premise");
+        let loaded = SweepManifest::load(&path).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded.corrupt_lines, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_times_line_does_not_poison_load_times() {
+        let dir = tmpdir("torn_times");
+        let path = dir.join("m.jsonl");
+        let times = SweepManifest::times_path(&path);
+        std::fs::remove_file(&times).ok();
+        SweepManifest::append_time(&path, "a", 1.0, 0.5, None, None).unwrap();
+        let mut bytes = std::fs::read(&times).unwrap();
+        bytes.extend_from_slice(b"{\"run_id\": \"caf");
+        bytes.push(0xC3);
+        bytes.push(b'\n');
+        std::fs::write(&times, &bytes).unwrap();
+        // a later worker appends past the torn line; both loads must see "a"
+        SweepManifest::append_time(&path, "b", 2.0, 1.0, None, None).unwrap();
+        let t = SweepManifest::load_times(&path);
+        assert_eq!(t.get("a"), Some(&(1.0, 0.5)));
+        assert_eq!(t.get("b"), Some(&(2.0, 1.0)));
+        std::fs::remove_file(&times).ok();
+    }
+
+    #[test]
+    fn event_rows_are_telemetry_not_timings() {
+        let dir = tmpdir("events");
+        let path = dir.join("m.jsonl");
+        let times = SweepManifest::times_path(&path);
+        std::fs::remove_file(&times).ok();
+        SweepManifest::append_time(&path, "a", 1.0, 0.5, None, None).unwrap();
+        SweepManifest::append_event(&path, "a", "reclaim", "w1 reclaimed lease (token 2)")
+            .unwrap();
+        let t = SweepManifest::load_times(&path);
+        assert_eq!(t.get("a"), Some(&(1.0, 0.5)), "events must not clobber timings");
+        let text = std::fs::read_to_string(&times).unwrap();
+        assert!(text.contains("\"event\":\"reclaim\""), "{text}");
+        // events live in the side file, never in the manifest
+        assert!(SweepManifest::load(&path).unwrap().is_empty());
+        std::fs::remove_file(&times).ok();
+    }
+
+    #[test]
+    fn stamped_rows_fence_by_token_and_compact_stamp_free() {
+        let dir = tmpdir("fence");
+        let path = dir.join("m.jsonl");
+        std::fs::remove_file(&path).ok();
+        let mut m = SweepManifest::load(&path).unwrap();
+        // the reclaimer (token 2) commits, then a zombie's late append
+        // (token 1) lands — the zombie row must lose on load
+        m.append_stamped(row(0), 2, "w-reclaimer").unwrap();
+        m.append_stamped(row(0), 1, "w-zombie").unwrap();
+        m.append_stamped(row(1), 1, "w0").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.matches("\"lease\":").count(), 3, "appends carry the stamp");
+        let loaded = SweepManifest::load(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded.fenced_rows, 1, "the zombie append is detected and dropped");
+        // compaction strips every stamp: canonical bytes match a manifest
+        // that never saw a fleet
+        loaded.compact().unwrap();
+        let compacted = std::fs::read_to_string(&path).unwrap();
+        assert!(!compacted.contains("lease"), "{compacted}");
+        let classic_path = dir.join("classic.jsonl");
+        std::fs::remove_file(&classic_path).ok();
+        let mut classic = SweepManifest::load(&classic_path).unwrap();
+        classic.append(row(0)).unwrap();
+        classic.append(row(1)).unwrap();
+        classic.compact().unwrap();
+        assert_eq!(compacted, std::fs::read_to_string(&classic_path).unwrap());
+        // an unstamped (compacted) row outranks any later stamped one
+        let mut m2 = SweepManifest::load(&path).unwrap();
+        m2.append_stamped(row(0), 5, "w-late").unwrap();
+        let reloaded = SweepManifest::load(&path).unwrap();
+        assert_eq!(reloaded.fenced_rows, 1);
+        assert_eq!(reloaded.len(), 2);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&classic_path).ok();
     }
 }

@@ -19,21 +19,37 @@
 //!   subsystem (each run checkpoints into its own directory and a killed
 //!   run continues from its latest valid snapshot, byte-identically);
 //! * [`manifest`] — the crash-safe JSONL manifest whose compacted form is
-//!   byte-identical for a given spec at any worker count.
+//!   byte-identical for a given spec at any worker count;
+//! * [`lease`] — the append-only lease ledger (claim / renew / reclaim /
+//!   release records with monotonic fencing tokens) that lets *separate
+//!   processes* share one manifest safely;
+//! * [`chaos`] — seeded deterministic fault injection (worker crashes,
+//!   heartbeat stalls, transient I/O bursts) proving the fleet's failure
+//!   paths instead of hoping about them.
 //!
 //! The repro layer (`repro/`) is a client: every table/figure expands its
 //! cells into `RunSpec`s, hands them to [`run_sweep`], and aggregates
-//! over manifest rows — the sweep engine owns the training loop.
+//! over manifest rows — the sweep engine owns the training loop. Multi-
+//! process fleets enter through [`run_sweep_fleet`] instead: each
+//! `addax sweep --worker-id <id>` invocation claims runs under leases,
+//! heartbeats while executing, reclaims expired leases (resuming the run
+//! from its snapshots), and fences zombie commits — with the guarantee
+//! that the compacted manifest stays byte-identical to a single-process
+//! sweep's under any kill/reclaim pattern.
 
+pub mod chaos;
+pub mod lease;
 pub mod manifest;
 pub mod pack;
 pub mod spec;
 pub mod worker;
 
+pub use chaos::{ChaosPlan, RunFaults};
+pub use lease::{leases_path, LeaseAction, LeaseRecord, LeaseTable};
 pub use manifest::{ManifestRow, SweepManifest};
 pub use pack::{pack, price, PricedRun, Wave};
 pub use spec::{Backend, LT_NONE, RunSpec, SweepSpec};
 pub use worker::{
-    execute_run, execute_run_with, run_sweep, run_sweep_collect, RunCtx, RunTiming,
-    SweepOptions, SweepSummary,
+    execute_run, execute_run_with, fleet_commit, run_sweep, run_sweep_collect, run_sweep_fleet,
+    FleetExit, FleetOptions, RunCtx, RunTiming, SweepOptions, SweepSummary,
 };

@@ -290,6 +290,11 @@ pub struct SweepSpec {
     pub n_test: usize,
     /// Addax on long tasks partitions at the 60th length percentile.
     pub lt_auto: bool,
+    /// Fleet lease TTL in seconds (`--lease-ttl` overrides). A worker
+    /// whose lease goes this long without a heartbeat renewal is
+    /// presumed dead and its run reclaimable. Not part of run identity:
+    /// TTL shapes *when* work is reclaimed, never what it computes.
+    pub lease_ttl_secs: f64,
 }
 
 impl SweepSpec {
@@ -317,6 +322,7 @@ impl SweepSpec {
             n_val: cfg.usize_or("sweep.val", 300)?,
             n_test: cfg.usize_or("sweep.test", 500)?,
             lt_auto: cfg.bool_or("sweep.lt_auto", true)?,
+            lease_ttl_secs: cfg.f32_or("sweep.lease_ttl_secs", 30.0)? as f64,
         };
         // Fail early on anything the executor would reject mid-sweep.
         geometry::by_name(&spec.geometry)

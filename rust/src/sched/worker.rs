@@ -28,19 +28,22 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::time::Instant;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{evaluate, train, Halted, TrainConfig};
 use crate::data::Dataset;
+use crate::ioutil;
 use crate::params::ParamStore;
 use crate::runtime::manifest::default_artifacts_dir;
 use crate::runtime::mock::QuadraticExec;
 use crate::runtime::{ModelExec, XlaExec};
 use crate::zorng::derive_seed;
 
+use super::chaos::ChaosPlan;
+use super::lease::{self, LeaseAction, LeaseRecord, LeaseTable};
 use super::manifest::{ManifestRow, SweepManifest};
 use super::pack::pack;
 use super::spec::{Backend, RunSpec};
@@ -127,19 +130,31 @@ pub struct SweepSummary {
     /// Runs preempted by `halt_after` (checkpointed, not completed — a
     /// later `--resume` sweep finishes them step-level).
     pub halted: usize,
+    /// Expired leases this worker reclaimed (fleet mode). A reclaimed
+    /// run resumes step-level and is counted exactly once — here, never
+    /// also under `executed` by the dead worker.
+    pub reclaimed: usize,
+    /// Zombie commits this worker had rejected by the fencing check
+    /// (fleet mode): the run executed to completion under a stale
+    /// token, so its row was discarded, not merged.
+    pub fenced: usize,
     pub waves: usize,
     pub manifest_path: std::path::PathBuf,
 }
 
 impl SweepSummary {
-    /// Stable one-line form (CI greps `executed=` and `halted=`).
+    /// Stable one-line form (CI greps `executed=`, `halted=` and
+    /// `reclaimed=`).
     pub fn line(&self) -> String {
         format!(
-            "sweep: total={} executed={} skipped={} halted={} waves={} manifest={}",
+            "sweep: total={} executed={} skipped={} halted={} reclaimed={} fenced={} \
+             waves={} manifest={}",
             self.total,
             self.executed,
             self.skipped,
             self.halted,
+            self.reclaimed,
+            self.fenced,
             self.waves,
             self.manifest_path.display()
         )
@@ -340,10 +355,396 @@ pub fn run_sweep_collect(
         executed,
         skipped,
         halted,
+        reclaimed: 0,
+        fenced: 0,
         waves: n_waves,
         manifest_path: opts.manifest_path.clone(),
     };
     Ok((summary, manifest))
+}
+
+/// Fleet knobs: one worker process in a lease-coordinated multi-process
+/// sweep (`addax sweep --worker-id <id> --lease-ttl <secs>`).
+#[derive(Clone, Debug)]
+pub struct FleetOptions {
+    /// This worker's identity in lease records (must be unique per live
+    /// process; reusing an id after a crash is fine — fencing tokens,
+    /// not ids, arbitrate).
+    pub worker_id: String,
+    /// Lease TTL. A lease not renewed within this window is presumed
+    /// dead and reclaimable; heartbeats renew at TTL/3.
+    pub lease_ttl_ms: u64,
+    /// Deterministic fault injection (`--chaos-seed`).
+    pub chaos: Option<ChaosPlan>,
+}
+
+/// How a fleet worker's invocation ended.
+#[derive(Clone, Debug)]
+pub struct FleetExit {
+    pub summary: SweepSummary,
+    /// Set when the chaos plan killed this worker mid-run (the run id it
+    /// died holding). The CLI turns this into exit code 96 so a restart
+    /// loop can tell a planned crash from a real failure. The lease was
+    /// NOT released — it must expire and be reclaimed, exactly like a
+    /// real SIGKILL.
+    pub crashed: Option<String>,
+}
+
+/// Lease heartbeat: a thread renewing `run_id`'s lease at TTL/3 while
+/// the run executes. A `stalled` heartbeat (chaos) never renews — the
+/// lease expires under a live holder, manufacturing a zombie.
+struct Heartbeat {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Heartbeat {
+    fn start(
+        lease_path: PathBuf,
+        run_id: String,
+        worker: String,
+        token: u64,
+        ttl_ms: u64,
+        stalled: bool,
+    ) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        if stalled {
+            return Self { stop, handle: None };
+        }
+        let stop2 = Arc::clone(&stop);
+        let interval = Duration::from_millis((ttl_ms / 3).max(5));
+        // Sleep in short slices so `finish()` never blocks a completed
+        // run for a whole renewal interval.
+        let slice = interval.min(Duration::from_millis(20));
+        let handle = std::thread::spawn(move || {
+            let mut next = Instant::now() + interval;
+            loop {
+                std::thread::sleep(slice);
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                if Instant::now() < next {
+                    continue;
+                }
+                next = Instant::now() + interval;
+                // Renewal failures are survivable (the next beat
+                // retries; at worst the lease lapses and the run is
+                // reclaimed).
+                lease::append(
+                    &lease_path,
+                    &LeaseRecord {
+                        run_id: run_id.clone(),
+                        worker: worker.clone(),
+                        token,
+                        action: LeaseAction::Renew,
+                        expires_ms: lease::now_ms() + ttl_ms,
+                    },
+                )
+                .ok();
+            }
+        });
+        Self { stop, handle: Some(handle) }
+    }
+
+    fn finish(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+/// Commit one finished run under a lease: re-check the fencing token,
+/// then append the stamped row + timing telemetry and release the
+/// lease. Returns `false` — logging a `fenced` event to the times side
+/// file, appending nothing to the manifest — when a higher token has
+/// claimed the run (this holder is a zombie).
+///
+/// Public because the fleet tests drive synthetic zombies through the
+/// exact commit path the workers use.
+pub fn fleet_commit(
+    manifest: &mut SweepManifest,
+    worker_id: &str,
+    token: u64,
+    row: ManifestRow,
+    timing: &RunTiming,
+) -> Result<bool> {
+    let manifest_path = manifest.path.clone();
+    let lease_path = lease::leases_path(&manifest_path);
+    let table = LeaseTable::load(&lease_path)?;
+    let run_id = row.run_id.clone();
+    let current = table.max_token(&run_id);
+    if current > token {
+        SweepManifest::append_event(
+            &manifest_path,
+            &run_id,
+            "fenced",
+            &format!(
+                "fenced zombie append rejected: worker {worker_id} holds stale token \
+                 {token} (current {current}); row discarded, not merged"
+            ),
+        )?;
+        return Ok(false);
+    }
+    manifest.append_stamped(row, token, worker_id)?;
+    SweepManifest::append_time(
+        &manifest_path,
+        &run_id,
+        timing.total_secs,
+        timing.time_to_best_secs,
+        timing.resumed_from_step,
+        timing.note.as_deref(),
+    )
+    .ok();
+    lease::append(
+        &lease_path,
+        &LeaseRecord {
+            run_id,
+            worker: worker_id.to_string(),
+            token,
+            action: LeaseAction::Release,
+            expires_ms: lease::now_ms(),
+        },
+    )?;
+    Ok(true)
+}
+
+/// One fleet worker: claim → heartbeat → execute → fenced commit,
+/// until every run in `specs` has a durable manifest row.
+///
+/// Any number of `run_sweep_fleet` processes (or threads — the tests'
+/// in-process harness) may share a manifest path; the lease file is the
+/// only coordination. Each worker runs one run at a time (fleet
+/// parallelism lives across processes), so every run must fit the
+/// device budget alone. A worker that finds an expired lease reclaims
+/// it and the run *resumes* from its step-level snapshots — the ckpt
+/// subsystem validates identity/dtype and falls back from corrupt
+/// snapshots exactly as in the single-process path. The last worker out
+/// compacts: the compacted manifest is byte-identical to a
+/// single-process sweep's, at any worker count and under any
+/// kill/reclaim pattern.
+pub fn run_sweep_fleet(
+    specs: Vec<RunSpec>,
+    opts: &SweepOptions,
+    fleet: &FleetOptions,
+) -> Result<FleetExit> {
+    if fleet.worker_id.trim().is_empty() {
+        bail!("fleet mode needs a non-empty --worker-id");
+    }
+    if fleet.lease_ttl_ms < 20 {
+        bail!("--lease-ttl below 20 ms cannot outlive its own heartbeat");
+    }
+    if !opts.ckpt {
+        bail!("fleet reclaim resumes runs from checkpoints (drop --no-ckpt)");
+    }
+    if opts.halt_after > 0 {
+        bail!("--halt-after is a single-process kill knob; in fleet mode use --chaos-seed");
+    }
+    if !opts.resume {
+        bail!("fleet workers join a shared manifest mid-sweep — pass --resume");
+    }
+    let mut deduped: Vec<RunSpec> = Vec::with_capacity(specs.len());
+    {
+        let mut seen = std::collections::BTreeSet::new();
+        for s in specs {
+            if s.run_id.is_empty() {
+                bail!("unsealed RunSpec (empty run_id) — call RunSpec::sealed()");
+            }
+            if seen.insert(s.run_id.clone()) {
+                deduped.push(s);
+            }
+        }
+    }
+    let total = deduped.len();
+    // Packing is a plan-validity check here (every run must fit alone);
+    // fleet workers pull one run at a time rather than executing waves.
+    pack(deduped.clone(), opts.budget_gb * 1e9 * opts.gpus as f64)?;
+
+    let lease_path = lease::leases_path(&opts.manifest_path);
+    let ckpt_root = opts.ckpt_root();
+    let params_dir = opts.params_dir();
+    let ttl = fleet.lease_ttl_ms;
+    let poll = Duration::from_millis((ttl / 4).clamp(5, 200));
+    let mut executed = 0usize;
+    let mut reclaimed = 0usize;
+    let mut fenced = 0usize;
+    let mut crashed: Option<String> = None;
+
+    loop {
+        let table = LeaseTable::load(&lease_path)?;
+        let manifest = SweepManifest::load(&opts.manifest_path)?;
+        let pending: Vec<&RunSpec> =
+            deduped.iter().filter(|s| !manifest.contains(&s.run_id)).collect();
+        if pending.is_empty() {
+            // Every row is durable. Live leases can only belong to
+            // workers about to discover that (or to harmless zombies);
+            // wait them out so nothing appends after compaction.
+            if table.any_active(lease::now_ms()) {
+                std::thread::sleep(poll);
+                continue;
+            }
+            for s in &deduped {
+                std::fs::remove_dir_all(s.ckpt_dir(&ckpt_root)).ok();
+            }
+            // Idempotent across workers: everyone compacts the same row
+            // set to the same bytes, each through its own tmp file.
+            manifest.compact()?;
+            break;
+        }
+        let now = lease::now_ms();
+        let Some(spec) = pending.iter().find(|s| table.claimable(&s.run_id, now)).copied()
+        else {
+            // everything pending is leased to someone live
+            std::thread::sleep(poll);
+            continue;
+        };
+        // Claim at the next fencing token. A claim over an unreleased
+        // (expired) lease is a reclaim: the holder is presumed dead.
+        let token = table.max_token(&spec.run_id) + 1;
+        let is_reclaim = matches!(table.state(&spec.run_id), Some(s) if !s.released);
+        lease::append(
+            &lease_path,
+            &LeaseRecord {
+                run_id: spec.run_id.clone(),
+                worker: fleet.worker_id.clone(),
+                token,
+                action: if is_reclaim { LeaseAction::Reclaim } else { LeaseAction::Claim },
+                expires_ms: lease::now_ms() + ttl,
+            },
+        )?;
+        // Confirm the claim won (equal tokens: first appender wins).
+        let confirm = LeaseTable::load(&lease_path)?;
+        if confirm.holder(&spec.run_id) != Some((fleet.worker_id.as_str(), token)) {
+            continue;
+        }
+        // Post-claim re-check: the run may have completed between our
+        // manifest read and the claim landing. Back off without
+        // executing — a leased run is never double-executed.
+        if SweepManifest::load(&opts.manifest_path)?.contains(&spec.run_id) {
+            lease::append(
+                &lease_path,
+                &LeaseRecord {
+                    run_id: spec.run_id.clone(),
+                    worker: fleet.worker_id.clone(),
+                    token,
+                    action: LeaseAction::Release,
+                    expires_ms: lease::now_ms(),
+                },
+            )?;
+            continue;
+        }
+        if is_reclaim {
+            reclaimed += 1;
+            // Telemetry note in the times side file — never a manifest
+            // row, so reclaim history cannot perturb the byte-identity
+            // contract.
+            SweepManifest::append_event(
+                &opts.manifest_path,
+                &spec.run_id,
+                "reclaim",
+                &format!(
+                    "worker {} reclaimed expired lease at token {token}; resuming from \
+                     the run's snapshots",
+                    fleet.worker_id
+                ),
+            )?;
+            if opts.verbose {
+                println!("[fleet {}] reclaimed {} (token {token})", fleet.worker_id, spec.run_id);
+            }
+        }
+        let faults =
+            fleet.chaos.map(|c| c.for_run(&spec.run_id, spec.steps)).unwrap_or_default();
+        // Chaos arms only on the run's first execution (token 1): a
+        // reclaimed run never re-crashes, so every plan terminates.
+        let crash_after = if token == 1 { faults.crash_after } else { None };
+        let stalled = token == 1 && faults.stall_heartbeat;
+        let hb = Heartbeat::start(
+            lease_path.clone(),
+            spec.run_id.clone(),
+            fleet.worker_id.clone(),
+            token,
+            ttl,
+            stalled,
+        );
+        let ctx = RunCtx {
+            ckpt_dir: Some(spec.ckpt_dir(&ckpt_root)),
+            ckpt_every: opts.ckpt_every,
+            ckpt_keep: opts.ckpt_keep,
+            // The chaos crash rides the deterministic-preemption rail: a
+            // snapshot lands, then the run "dies". A real SIGKILL leaves
+            // equivalent on-disk state (ADDAXCK1 writes are atomic).
+            halt_after: crash_after.unwrap_or(0),
+            dump_path: opts
+                .dump_params
+                .then(|| params_dir.join(format!("{}.bin", spec.run_id))),
+        };
+        let res = execute_run_with(spec, &ctx);
+        hb.finish();
+        match res {
+            Err(e) if crash_after.is_some() && e.downcast_ref::<Halted>().is_some() => {
+                let at = e.downcast_ref::<Halted>().map(|h| h.at_step).unwrap_or(0);
+                if opts.verbose {
+                    println!(
+                        "[fleet {}] chaos crash in {} at step {at} (lease left to expire)",
+                        fleet.worker_id, spec.run_id
+                    );
+                }
+                crashed = Some(spec.run_id.clone());
+                break;
+            }
+            Err(e) => {
+                return Err(e.context(format!(
+                    "run {} failed (fleet worker {})",
+                    spec.run_id, fleet.worker_id
+                )))
+            }
+            Ok((row, timing)) => {
+                if faults.append_faults > 0 {
+                    // a bounded burst of transient I/O errors ahead of
+                    // the commit appends — absorbed by retry_io
+                    ioutil::inject_transient_faults(faults.append_faults);
+                }
+                let mut fresh = SweepManifest::load(&opts.manifest_path)?;
+                if fleet_commit(&mut fresh, &fleet.worker_id, token, row, &timing)? {
+                    executed += 1;
+                    std::fs::remove_dir_all(spec.ckpt_dir(&ckpt_root)).ok();
+                    if opts.verbose {
+                        match timing.resumed_from_step {
+                            Some(s) => println!(
+                                "[fleet {}] done {} ({:.1}s, resumed from step {s})",
+                                fleet.worker_id, spec.run_id, timing.total_secs
+                            ),
+                            None => println!(
+                                "[fleet {}] done {} ({:.1}s)",
+                                fleet.worker_id, spec.run_id, timing.total_secs
+                            ),
+                        }
+                    }
+                } else {
+                    fenced += 1;
+                    if opts.verbose {
+                        println!(
+                            "[fleet {}] fenced on {} (stale token {token}) — row discarded",
+                            fleet.worker_id, spec.run_id
+                        );
+                    }
+                }
+            }
+        }
+    }
+    let summary = SweepSummary {
+        total,
+        executed,
+        // A crashed worker's view is partial by design; completed-by-
+        // others accounting is only meaningful on a clean exit.
+        skipped: if crashed.is_some() { 0 } else { total - executed },
+        halted: 0,
+        reclaimed,
+        fenced,
+        waves: 0,
+        manifest_path: opts.manifest_path.clone(),
+    };
+    Ok(FleetExit { summary, crashed })
 }
 
 /// Wall-clock + resume telemetry for the side file (never enters the
