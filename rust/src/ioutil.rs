@@ -166,6 +166,37 @@ pub fn append_line_retry(path: &Path, line: &str, label: &str) -> io::Result<()>
     retry_io(label, 4, Duration::from_millis(2), || append_line(path, line))
 }
 
+/// [`append_line`] + `fdatasync`: the line is on the platter (not just
+/// in the page cache) before this returns. `append_line` alone survives
+/// a process kill but NOT a power loss — a fencing record that vanishes
+/// with the page cache could un-fence a zombie, so lease claims,
+/// reclaims, releases and manifest row commits go through this variant.
+/// High-frequency heartbeat renewals stay on the unsynced path: losing
+/// one costs at most a premature (and confirmed) reclaim, never safety.
+pub fn append_line_durable(path: &Path, line: &str) -> io::Result<()> {
+    let mut buf = String::with_capacity(line.len() + 1);
+    buf.push_str(line);
+    buf.push('\n');
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    f.write_all(buf.as_bytes())?;
+    f.sync_data()
+}
+
+/// [`append_line_durable`] under the standard retry policy.
+pub fn append_line_retry_durable(path: &Path, line: &str, label: &str) -> io::Result<()> {
+    retry_io(label, 4, Duration::from_millis(2), || append_line_durable(path, line))
+}
+
+/// fsync a directory so a just-renamed (or just-created) entry inside it
+/// survives power loss. A rename is only durable once its *parent
+/// directory* is synced; file-level fsync does not cover the dirent.
+/// No-op errors on platforms that refuse directory handles are surfaced
+/// to the caller (callers on the rotation path treat them as fatal —
+/// an unsynced rotation could resurrect pre-rotation ledger state).
+pub fn fsync_dir(dir: &Path) -> io::Result<()> {
+    std::fs::File::open(dir)?.sync_all()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -283,6 +314,21 @@ mod tests {
         let lines = read_lossy_lines(&path).unwrap();
         assert_eq!(lines[0], "{\"ok\":1}");
         assert!(lines[1].contains('\u{FFFD}'), "torn tail decodes lossily: {:?}", lines[1]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn durable_append_roundtrips_and_syncs_its_directory() {
+        let dir = std::env::temp_dir().join(format!("addax_ioutil_d_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("durable.jsonl");
+        std::fs::remove_file(&path).ok();
+        append_line_retry_durable(&path, "{\"claim\":1}", "lease append").unwrap();
+        append_line_retry_durable(&path, "{\"claim\":2}", "lease append").unwrap();
+        let lines = read_lossy_lines(&path).unwrap();
+        assert_eq!(&lines[..2], &["{\"claim\":1}".to_string(), "{\"claim\":2}".to_string()]);
+        fsync_dir(&dir).unwrap();
+        assert!(fsync_dir(&dir.join("missing")).is_err(), "missing dirs surface errors");
         std::fs::remove_file(&path).ok();
     }
 

@@ -58,7 +58,9 @@ fn print_help() {
          addax sweep  [--spec FILE | --smoke] [--budget-gb G] [--gpus N] [--workers W]\n  \
          \x20            [--resume] [--manifest PATH] [--dry-run] [--set section.key=value ...]\n  \
          \x20            [--no-ckpt] [--ckpt-every N] [--ckpt-keep K] [--halt-after N]\n  \
-         \x20            [--dump-params] [--worker-id ID [--lease-ttl SECS] [--chaos-seed S]]\n  \
+         \x20            [--dump-params] [--worker-id ID [--lease-ttl SECS] [--chaos-seed S]\n  \
+         \x20            [--skew-margin-ms MS] [--clock-offset-ms MS] [--rotate-after N]\n  \
+         \x20            [--no-steal] [--steal-wait-ms MS]]\n  \
          addax ckpt   inspect FILE... | verify FILE... | diff A B\n  \
          addax repro  <id|all> [--fast] [--model KEY]\n  \
          addax memory --geometry G --method M [--batch B] [--len L] [--gpus N] [--hbm GB]\n  \
@@ -85,11 +87,22 @@ fn print_help() {
          manifest.leases.jsonl, heartbeat at TTL/3 (--lease-ttl SECS, default\n  \
          from sweep.lease_ttl_secs), reclaim expired leases and resume the dead\n  \
          worker's run from its step-level snapshots; a zombie's late commit is\n  \
-         fenced by token and discarded. --chaos-seed S deterministically injects\n  \
-         worker crashes (exit 96, lease left to expire), heartbeat stalls and\n  \
-         transient I/O faults — same seed, same faults, every machine. The\n  \
-         compacted manifest stays byte-identical to a single-process sweep's\n  \
-         under any kill/reclaim pattern.\n\nCKPT:\n  \
+         fenced by token and discarded. Reclaim is skew-tolerant: a lease only\n  \
+         looks expired --skew-margin-ms MS (default sweep.skew_margin_ms) past\n  \
+         its expiry, and the reclaimer first confirms the holder is logically\n  \
+         quiet (no new renewal seq across spaced ledger reloads) — so a live\n  \
+         worker on a skewed clock is never reclaimed. When every lease is\n  \
+         released and the ledger exceeds --rotate-after N lines (default 512,\n  \
+         0 = never), it is rotated to one release line per run, preserving\n  \
+         fencing-token monotonicity. Idle workers steal probe-shard work from\n  \
+         still-leased mock ZO runs (bit-identical; --no-steal opts out;\n  \
+         --steal-wait-ms MS makes holders wait for a thief — CI only).\n  \
+         --chaos-seed S deterministically injects worker crashes (exit 96,\n  \
+         lease left to expire), heartbeat stalls, transient I/O faults and\n  \
+         per-worker clock skew (±TTL; --clock-offset-ms MS pins it) — same\n  \
+         seed, same faults, every machine. The compacted manifest stays\n  \
+         byte-identical to a single-process sweep's under any kill/reclaim\n  \
+         pattern.\n\nCKPT:\n  \
          inspect prints a snapshot's header (identity hash, dtype, step, eval\n  \
          cadence, tensors); verify additionally checks every chunk CRC; diff\n  \
          compares two snapshots (header fields + per-tensor element diffs).\n\n\
@@ -302,16 +315,27 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
             Some(s) => s.parse().context("--lease-ttl wants seconds (a number)")?,
             None => sweep.lease_ttl_secs,
         };
-        let fleet = FleetOptions {
-            worker_id: worker_id.to_string(),
-            lease_ttl_ms: (ttl_secs * 1000.0).round().max(0.0) as u64,
-            chaos: match flag(args, "--chaos-seed") {
-                Some(s) => {
-                    Some(ChaosPlan::new(s.parse().context("--chaos-seed wants a u64")?))
-                }
-                None => None,
-            },
+        let mut fleet = FleetOptions::new(worker_id, (ttl_secs * 1000.0).round().max(0.0) as u64);
+        fleet.chaos = match flag(args, "--chaos-seed") {
+            Some(s) => Some(ChaosPlan::new(s.parse().context("--chaos-seed wants a u64")?)),
+            None => None,
         };
+        fleet.skew_margin_ms = match flag(args, "--skew-margin-ms") {
+            Some(s) => s.parse().context("--skew-margin-ms wants milliseconds")?,
+            None => sweep.skew_margin_ms,
+        };
+        if let Some(s) = flag(args, "--clock-offset-ms") {
+            // Test/CI knob: pin this worker's lease clock offset instead
+            // of deriving one from --chaos-seed.
+            fleet.clock_offset_ms = Some(s.parse().context("--clock-offset-ms wants signed ms")?);
+        }
+        if let Some(s) = flag(args, "--rotate-after") {
+            fleet.rotate_after_lines = s.parse().context("--rotate-after wants a line count")?;
+        }
+        if let Some(s) = flag(args, "--steal-wait-ms") {
+            fleet.steal_wait_ms = s.parse().context("--steal-wait-ms wants milliseconds")?;
+        }
+        fleet.no_steal = has(args, "--no-steal");
         let exit = run_sweep_fleet(specs, &opts, &fleet)?;
         println!("{}", exit.summary.line());
         if let Some(run_id) = exit.crashed {
@@ -322,10 +346,20 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         }
         return Ok(());
     }
-    for f in ["--lease-ttl", "--chaos-seed"] {
+    for f in [
+        "--lease-ttl",
+        "--chaos-seed",
+        "--skew-margin-ms",
+        "--clock-offset-ms",
+        "--rotate-after",
+        "--steal-wait-ms",
+    ] {
         if flag(args, f).is_some() {
             bail!("{f} is a fleet flag — pair it with --worker-id <id>");
         }
+    }
+    if has(args, "--no-steal") {
+        bail!("--no-steal is a fleet flag — pair it with --worker-id <id>");
     }
     let summary = run_sweep(specs, &opts)?;
     println!("{}", summary.line());

@@ -323,6 +323,15 @@ pub fn spsa_probe(
     eps: f32,
     seed: u64,
 ) -> Result<(f64, f64)> {
+    // Fleet tail work-stealing seam: when a `steal::StealCtx` is
+    // installed on this thread AND a thief has advertised, the probe is
+    // sharded across workers — bit-identically, so this branch is
+    // invisible to everything downstream (see `sched::steal` docs). With
+    // no context installed (every non-fleet caller) this is one
+    // thread-local read.
+    if let Some(out) = crate::sched::steal::sharded_probe(params, exec, batch, eps, seed)? {
+        return Ok(out);
+    }
     params.perturb(seed, eps);
     let l_plus = exec.mean_loss(params, batch)?;
     params.perturb(seed, -2.0 * eps);

@@ -8,7 +8,7 @@
 //! reproducible as the training it disrupts. Same seed + same grid =
 //! the same crashes at the same steps on every machine.
 //!
-//! Three fault families (mirroring how fleets really die):
+//! Four fault families (mirroring how fleets really die):
 //!
 //! * **worker crash** — the process "dies" (exits, without releasing its
 //!   lease) after a chosen step; the snapshot machinery makes the state
@@ -25,6 +25,12 @@
 //!   `ioutil::inject_transient_faults`), exercising the retry/backoff
 //!   path. Bounded below the retry budget, so injected faults are never
 //!   fatal — they must be *absorbed*.
+//! * **clock skew** — a per-*worker* (not per-run) signed offset in
+//!   `[-TTL, +TTL]` applied to every lease-liveness clock read via
+//!   [`ChaosPlan::clock_offset_ms`] and the `LeaseClock` seam. Unlike
+//!   the other families it never kills anything; it tries to make a
+//!   *correct* worker do something wrong (reclaim a live lease, keep a
+//!   dead one), which the skew margin + seq confirmation must prevent.
 
 use crate::zorng::{derive_seed, fnv1a};
 
@@ -77,6 +83,23 @@ impl ChaosPlan {
     /// hoping.
     pub fn crashes_any<'a>(&self, runs: impl IntoIterator<Item = (&'a str, usize)>) -> bool {
         runs.into_iter().any(|(id, steps)| self.for_run(id, steps).crash_after.is_some())
+    }
+
+    /// The fourth fault family: a deterministic per-worker clock offset
+    /// in `[-ttl_ms, +ttl_ms]`, injected through the [`LeaseClock`] seam
+    /// (every fleet-path liveness comparison flows through it). ±TTL is
+    /// the worst interesting skew — at `+ttl` a worker believes every
+    /// fresh lease already expired; at `-ttl` it believes expired leases
+    /// are still live — so a fleet that stays correct across this span
+    /// has *proved* the margin + logical-confirmation design, not
+    /// assumed it.
+    ///
+    /// [`LeaseClock`]: crate::sched::lease::LeaseClock
+    pub fn clock_offset_ms(&self, worker_id: &str, ttl_ms: u64) -> i64 {
+        let h = derive_seed(self.seed, fnv1a(worker_id) ^ 0xC10C);
+        let ttl = ttl_ms.min(i64::MAX as u64 / 4) as i64;
+        let span = (2 * ttl + 1) as u64;
+        (h % span) as i64 - ttl
     }
 }
 
@@ -132,5 +155,22 @@ mod tests {
         assert!(fs.iter().any(|f| f.crash_after.is_none() && !f.stall_heartbeat));
         assert!(plan.crashes_any(runs.iter().map(|r| (r.as_str(), 40))));
         assert!(!plan.crashes_any(runs.iter().map(|r| (r.as_str(), 0))));
+    }
+
+    #[test]
+    fn clock_offsets_are_deterministic_bounded_and_worker_distinct() {
+        let plan = ChaosPlan::new(11);
+        let ttl = 2_000u64;
+        assert_eq!(plan.clock_offset_ms("w0", ttl), plan.clock_offset_ms("w0", ttl));
+        let offs: Vec<i64> =
+            (0..32).map(|i| plan.clock_offset_ms(&format!("w{i}"), ttl)).collect();
+        for &o in &offs {
+            assert!((-(ttl as i64)..=ttl as i64).contains(&o), "offset {o} out of ±TTL");
+        }
+        // workers decorrelate: both signs appear and not all offsets collide
+        assert!(offs.iter().any(|&o| o > 0) && offs.iter().any(|&o| o < 0));
+        assert!(offs.iter().collect::<std::collections::HashSet<_>>().len() > 16);
+        // a zero TTL degenerates to no skew, never a panic
+        assert_eq!(plan.clock_offset_ms("w0", 0), 0);
     }
 }

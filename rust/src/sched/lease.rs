@@ -11,7 +11,7 @@
 //! Record shape (one JSON object per line; keys in canonical order):
 //!
 //! ```json
-//! {"action":"claim","expires_ms":1754650000000,"run_id":"...","token":1,"worker":"w0"}
+//! {"action":"claim","expires_ms":1754650000000,"run_id":"...","seq":0,"token":1,"worker":"w0"}
 //! ```
 //!
 //! * `token` is the **fencing token**: claims carry `max token + 1` for
@@ -19,11 +19,15 @@
 //!   A worker that lost its lease (crash, stall, partition) holds a
 //!   stale token forever — its late writes are detectable and
 //!   rejectable by comparing tokens, no matter when they arrive.
+//! * `seq` is the holder's **renewal sequence number**: 0 on the claim,
+//!   incremented on every heartbeat renewal. Unlike `expires_ms` it is
+//!   a *logical* clock — observers on skewed wall clocks still agree on
+//!   whether it advanced, which is what [`confirm_expired`] leans on.
 //! * `action` is `claim` (fresh), `reclaim` (a claim over an expired
 //!   lease — identical semantics, distinct label so reclaims are
 //!   observable in telemetry and CI), `renew` (heartbeat: extends
-//!   `expires_ms`), or `release` (the run's row is durable; the lease
-//!   is retired).
+//!   `expires_ms`, bumps `seq`), or `release` (the run's row is
+//!   durable; the lease is retired).
 //!
 //! Replay rules (applied in file order; all readers converge):
 //!
@@ -31,14 +35,23 @@
 //!   lease; an **equal** token loses to the earlier record (`O_APPEND`
 //!   ordering breaks the tie — "first appender wins"); a lower token is
 //!   stale noise and ignored;
-//! * a renew extends the expiry only when worker *and* token match the
-//!   current lease (a zombie's renewals are no-ops);
-//! * a release retires the current lease only at a matching token.
+//! * a renew extends the expiry (and advances `seq`) only when worker
+//!   *and* token match the current lease (a zombie's renewals are
+//!   no-ops);
+//! * a release retires the current lease only at a matching token — or,
+//!   on a run with **no prior record**, installs a released state
+//!   wholesale: that is the compacted form a [ledger rotation](rotate)
+//!   writes, one release line per run carrying the run's max token.
 //!
 //! A run is **claimable** when it has no lease, its lease was released,
-//! or `now` is past `expires_ms` (the holder is presumed dead; the next
-//! claim is a reclaim and resumes the run from its step-level
-//! snapshots).
+//! or `now` is past `expires_ms + skew_margin` (the holder is presumed
+//! dead; the next claim is a reclaim and resumes the run from its
+//! step-level snapshots). Raw wall-clock comparisons are NOT trusted
+//! across hosts: the skew margin absorbs loosely-synced clocks, and
+//! reclaims additionally require [`confirm_expired`] — K consecutive
+//! ledger reloads spaced TTL/3 apart showing no renewal-`seq` progress
+//! from the holder — so a fast-clocked observer can never reclaim a
+//! live run no matter how large its offset.
 //!
 //! The lease file is telemetry-adjacent scaffolding, *outside* the
 //! manifest's byte-identity contract — like `manifest.times.jsonl`, it
@@ -62,11 +75,45 @@ pub fn leases_path(manifest: &Path) -> PathBuf {
 /// Milliseconds since the Unix epoch (the lease clock). Wall-clock is
 /// fine here: expiry only gates *liveness* decisions, never results —
 /// nothing time-derived can reach a manifest row.
+///
+/// A clock before the epoch is a *broken* clock, and silently mapping
+/// it to 0 (the old behavior) would make every lease in the fleet look
+/// expired at once — a mass-reclaim stampede triggered by one bad CMOS
+/// battery. Fail loudly instead: this host must not make liveness
+/// decisions until its clock is fixed.
 pub fn now_ms() -> u64 {
-    SystemTime::now()
-        .duration_since(UNIX_EPOCH)
-        .map(|d| d.as_millis() as u64)
-        .unwrap_or(0)
+    match SystemTime::now().duration_since(UNIX_EPOCH) {
+        Ok(d) => d.as_millis() as u64,
+        Err(e) => panic!(
+            "system clock is {}s BEFORE the Unix epoch — refusing to make lease \
+             liveness decisions on a broken clock (fix the host's time source)",
+            e.duration().as_secs()
+        ),
+    }
+}
+
+/// The testable clock seam every fleet-path time read goes through: a
+/// wall clock plus a signed offset. Production workers run at offset 0;
+/// the chaos plan (or `--clock-offset-ms`) gives each worker a
+/// deterministic offset in ±TTL so skew tolerance is *provable* — the
+/// skewed-fleet tests and CI job are real multi-observer scenarios, not
+/// mocks of one.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LeaseClock {
+    /// Signed skew added to the real wall clock, in ms.
+    pub offset_ms: i64,
+}
+
+impl LeaseClock {
+    pub fn new(offset_ms: i64) -> Self {
+        Self { offset_ms }
+    }
+
+    /// This observer's (possibly skewed) view of [`now_ms`].
+    pub fn now_ms(&self) -> u64 {
+        let real = now_ms() as i64;
+        real.saturating_add(self.offset_ms).max(0) as u64
+    }
 }
 
 /// What a lease record does (see the module docs for replay rules).
@@ -106,6 +153,9 @@ pub struct LeaseRecord {
     pub worker: String,
     /// Fencing token (strictly increasing per run across claims).
     pub token: u64,
+    /// Per-holder renewal sequence: 0 on claim, +1 per heartbeat. A
+    /// logical liveness signal that skewed wall clocks cannot distort.
+    pub seq: u64,
     pub action: LeaseAction,
     /// Lease expiry, ms since epoch (claim/reclaim/renew; a release
     /// carries the append time, informational only).
@@ -118,6 +168,7 @@ impl LeaseRecord {
             ("action", Json::from(self.action.label())),
             ("expires_ms", Json::from(self.expires_ms as usize)),
             ("run_id", Json::from(self.run_id.clone())),
+            ("seq", Json::from(self.seq as usize)),
             ("token", Json::from(self.token as usize)),
             ("worker", Json::from(self.worker.clone())),
         ])
@@ -130,18 +181,36 @@ impl LeaseRecord {
             run_id: v.get("run_id")?.as_str()?.to_string(),
             worker: v.get("worker")?.as_str()?.to_string(),
             token: v.get("token")?.as_u64()?,
+            // Absent on pre-rotation-era ledgers: default 0 (a holder
+            // that never renewed), so old ledgers replay unchanged.
+            seq: v.opt("seq").and_then(|s| s.as_u64().ok()).unwrap_or(0),
             action: LeaseAction::parse(v.get("action")?.as_str()?)?,
             expires_ms: v.get("expires_ms")?.as_u64()?,
         })
     }
 }
 
-/// Append one record durably (single write, bounded retry).
+/// Append one record (single `O_APPEND` write, bounded retry). The
+/// page cache is NOT flushed — this is the heartbeat-renewal path,
+/// where losing a record to power loss costs at most a premature (and
+/// confirmed) reclaim.
 pub fn append(path: &Path, rec: &LeaseRecord) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir).ok();
     }
     ioutil::append_line_retry(path, &rec.to_line(), "lease append")
+        .with_context(|| format!("appending lease record to {}", path.display()))
+}
+
+/// [`append`] + `fdatasync`: for records whose *loss* would be unsafe
+/// rather than merely slow — claims, reclaims and releases, whose
+/// fencing tokens must survive power loss or a zombie could be
+/// un-fenced by a vanished record.
+pub fn append_durable(path: &Path, rec: &LeaseRecord) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    ioutil::append_line_retry_durable(path, &rec.to_line(), "lease append durable")
         .with_context(|| format!("appending lease record to {}", path.display()))
 }
 
@@ -151,6 +220,8 @@ pub struct LeaseState {
     pub worker: String,
     pub token: u64,
     pub expires_ms: u64,
+    /// Highest renewal `seq` seen from the current holder.
+    pub seq: u64,
     pub released: bool,
 }
 
@@ -193,6 +264,7 @@ impl LeaseTable {
                     worker: rec.worker,
                     token: rec.token,
                     expires_ms: rec.expires_ms,
+                    seq: rec.seq,
                     released: false,
                 };
                 match entry {
@@ -213,14 +285,32 @@ impl LeaseTable {
                     let s = o.get_mut();
                     if s.token == rec.token && s.worker == rec.worker && !s.released {
                         s.expires_ms = s.expires_ms.max(rec.expires_ms);
+                        s.seq = s.seq.max(rec.seq);
                     }
                 }
             }
             LeaseAction::Release => {
-                if let std::collections::btree_map::Entry::Occupied(mut o) = entry {
-                    let s = o.get_mut();
-                    if s.token == rec.token {
-                        s.released = true;
+                match entry {
+                    std::collections::btree_map::Entry::Occupied(mut o) => {
+                        let s = o.get_mut();
+                        if s.token == rec.token {
+                            s.released = true;
+                            s.seq = s.seq.max(rec.seq);
+                        }
+                    }
+                    // A release with no prior record is the compacted
+                    // form a ledger rotation writes (one max-token line
+                    // per run): install the full released state so the
+                    // rotated ledger replays to the same table — and
+                    // the same fencing floor — as the file it replaced.
+                    std::collections::btree_map::Entry::Vacant(v) => {
+                        v.insert(LeaseState {
+                            worker: rec.worker,
+                            token: rec.token,
+                            expires_ms: rec.expires_ms,
+                            seq: rec.seq,
+                            released: true,
+                        });
                     }
                 }
             }
@@ -251,18 +341,196 @@ impl LeaseTable {
     }
 
     /// May a new claim be appended for this run right now?
-    pub fn claimable(&self, run_id: &str, now_ms: u64) -> bool {
+    /// `skew_margin_ms` pads the expiry: across hosts, `now_ms` and
+    /// `expires_ms` were read from *different* clocks, and the margin is
+    /// the declared bound on their disagreement. An expired-looking
+    /// lease is additionally gated by [`confirm_expired`] on the
+    /// reclaim path; the margin alone only filters the obvious cases
+    /// cheaply.
+    pub fn claimable(&self, run_id: &str, now_ms: u64, skew_margin_ms: u64) -> bool {
         match self.states.get(run_id) {
             None => true,
-            Some(s) => s.released || now_ms >= s.expires_ms,
+            Some(s) => s.released || now_ms >= s.expires_ms.saturating_add(skew_margin_ms),
         }
     }
 
-    /// Is any lease still live (unreleased and unexpired)? Gates fleet
-    /// compaction: a live lease means a worker may still append.
-    pub fn any_active(&self, now_ms: u64) -> bool {
-        self.states.values().any(|s| !s.released && now_ms < s.expires_ms)
+    /// Is this run claimable *without* presuming anyone dead — no lease
+    /// record at all, or a released one? Fresh claims need no logical
+    /// confirmation, so workers prefer them over expired leases.
+    pub fn fresh_claimable(&self, run_id: &str) -> bool {
+        self.states.get(run_id).map_or(true, |s| s.released)
     }
+
+    /// Is any lease still live (unreleased and unexpired, under the
+    /// same skew margin as [`claimable`])? Gates fleet compaction and
+    /// ledger rotation: a live lease means a worker may still append.
+    pub fn any_active(&self, now_ms: u64, skew_margin_ms: u64) -> bool {
+        self.states
+            .values()
+            .any(|s| !s.released && now_ms < s.expires_ms.saturating_add(skew_margin_ms))
+    }
+
+    /// Every recorded lease is released (the rotation precondition: a
+    /// compacted ledger of release lines can represent this state
+    /// exactly, and no in-flight holder can be racing us for *content*
+    /// — only for brand-new claims, which the claim protocol absorbs).
+    pub fn all_released(&self) -> bool {
+        self.states.values().all(|s| s.released)
+    }
+
+    /// Run ids with any recorded lease, in sorted order.
+    pub fn run_ids(&self) -> impl Iterator<Item = &str> {
+        self.states.keys().map(String::as_str)
+    }
+}
+
+/// Rotate (garbage-collect) the ledger when every recorded lease is
+/// released and the raw file has grown past `min_lines`: rewrite it as
+/// ONE release line per run carrying the run's max fencing token and
+/// last renewal seq, via tmp + fsync + rename + parent-dir fsync.
+/// Returns `true` when a rotation happened.
+///
+/// Invariants preserved:
+///
+/// * **fencing-token monotonicity** — the compacted line carries the
+///   max token ever claimed, so a zombie holding any pre-rotation token
+///   is still fenced after GC (its token is `≤` the recorded one, and
+///   claims still go to `max_token + 1`);
+/// * **replay equivalence** — replaying the rotated ledger yields the
+///   same [`LeaseTable`] as the full one (release-on-vacant installs
+///   the recorded state wholesale);
+/// * **bounded size** — the ledger can no longer grow without bound
+///   over a week-long sweep: every all-released point compacts it to
+///   one line per touched run.
+///
+/// Concurrency: a claim appended between our load and the rename is
+/// overwritten. That is safe by protocol, not by luck — the claimant
+/// confirms by *re-reading* the ledger, and a claim the rotation
+/// swallowed either fails confirmation (the claimant walks away) or, in
+/// the worst interleaving, leads to one duplicate execution whose
+/// committed row is byte-identical by seed-replay determinism and is
+/// deduplicated by run id on load. The metadata re-check below shrinks
+/// that window to microseconds; it cannot (and need not) close it.
+pub fn rotate(path: &Path, min_lines: usize) -> Result<bool> {
+    let raw_len = match std::fs::metadata(path) {
+        Ok(m) => m.len(),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(false),
+        Err(e) => return Err(e).with_context(|| format!("reading metadata of {}", path.display())),
+    };
+    let lines = ioutil::read_lossy_lines(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let n_lines = lines.iter().filter(|l| !l.trim().is_empty()).count();
+    if n_lines < min_lines.max(1) {
+        return Ok(false);
+    }
+    let table = LeaseTable::load(path)?;
+    if table.states.is_empty() || !table.all_released() {
+        return Ok(false);
+    }
+    if n_lines <= table.states.len() {
+        return Ok(false); // already compact
+    }
+    let mut out = String::new();
+    for (run_id, s) in &table.states {
+        let rec = LeaseRecord {
+            run_id: run_id.clone(),
+            worker: s.worker.clone(),
+            token: s.token,
+            seq: s.seq,
+            action: LeaseAction::Release,
+            expires_ms: s.expires_ms,
+        };
+        out.push_str(&rec.to_line());
+        out.push('\n');
+    }
+    // Unique per process + call: concurrent workers may rotate the same
+    // ledger at the same all-released moment (they write identical
+    // bytes; the rename is atomic).
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let tmp = path.with_extension(format!(
+        "jsonl.rot.{}.{}",
+        std::process::id(),
+        SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(out.as_bytes())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        // The compacted content must be on the platter BEFORE the rename
+        // makes it the ledger: a post-rename power loss must never
+        // surface an empty (un-fenced) file.
+        f.sync_data().with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    // Best-effort race-window shrink: if someone appended since our
+    // load, skip this rotation; the next all-released point retries.
+    if std::fs::metadata(path).map(|m| m.len()).unwrap_or(0) != raw_len {
+        std::fs::remove_file(&tmp).ok();
+        return Ok(false);
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    if let Some(dir) = path.parent() {
+        // The rename itself is only durable once the directory is.
+        ioutil::fsync_dir(dir)
+            .with_context(|| format!("fsyncing ledger directory {}", dir.display()))?;
+    }
+    Ok(true)
+}
+
+/// Logical (skew-proof) confirmation that an expired-looking lease is
+/// truly dead: reload the ledger `k` times spaced `ttl_ms/3` apart (one
+/// heartbeat interval) and require that the holder shows **no sign of
+/// life** across every reload — no renewal-`seq` advance, no expiry
+/// extension, no token change, no release. Returns `false` the moment
+/// any progress is observed (the holder is alive, or someone else
+/// already acted); `true` only after `k` consecutive quiet reloads.
+///
+/// This is what makes reclaim correct under arbitrary clock skew: a
+/// fast-clocked observer may *think* a lease expired, but a live holder
+/// heartbeats every TTL/3, so its `seq` — a logical counter no clock
+/// can distort — advances within the confirmation window and the
+/// reclaim is vetoed.
+pub fn confirm_expired(
+    path: &Path,
+    run_id: &str,
+    k: u32,
+    ttl_ms: u64,
+    clock: &LeaseClock,
+    skew_margin_ms: u64,
+) -> Result<bool> {
+    let Some(before) = LeaseTable::load(path)?.state(run_id).cloned() else {
+        // no record at all: a fresh claim, nothing to confirm
+        return Ok(true);
+    };
+    if before.released {
+        return Ok(true);
+    }
+    let pause = std::time::Duration::from_millis((ttl_ms / 3).max(5));
+    for _ in 0..k.max(1) {
+        std::thread::sleep(pause);
+        let table = LeaseTable::load(path)?;
+        let Some(now) = table.state(run_id) else {
+            // the ledger rotated underneath us and the run vanished from
+            // it — only possible if everything was released; re-claim
+            // decisions restart from the fresh table
+            return Ok(false);
+        };
+        let quiet = now.token == before.token
+            && now.worker == before.worker
+            && now.seq == before.seq
+            && now.expires_ms == before.expires_ms
+            && !now.released;
+        if !quiet {
+            return Ok(false);
+        }
+        // still expired from this observer's (skew-adjusted) view?
+        if !table.claimable(run_id, clock.now_ms(), skew_margin_ms) {
+            return Ok(false);
+        }
+    }
+    Ok(true)
 }
 
 #[cfg(test)]
@@ -274,9 +542,21 @@ mod tests {
             run_id: run.to_string(),
             worker: worker.to_string(),
             token,
+            seq: 0,
             action,
             expires_ms: expires,
         }
+    }
+
+    fn rec_seq(
+        run: &str,
+        worker: &str,
+        token: u64,
+        seq: u64,
+        action: LeaseAction,
+        expires: u64,
+    ) -> LeaseRecord {
+        LeaseRecord { seq, ..rec(run, worker, token, action, expires) }
     }
 
     fn table(recs: &[LeaseRecord]) -> LeaseTable {
@@ -289,15 +569,32 @@ mod tests {
 
     #[test]
     fn record_roundtrips() {
-        let r = rec("run-a", "w0", 3, LeaseAction::Reclaim, 1_754_650_000_000);
+        let r = rec_seq("run-a", "w0", 3, 7, LeaseAction::Reclaim, 1_754_650_000_000);
         let back = LeaseRecord::from_line(&r.to_line()).unwrap();
         assert_eq!(back.run_id, "run-a");
         assert_eq!(back.worker, "w0");
         assert_eq!(back.token, 3);
+        assert_eq!(back.seq, 7);
         assert_eq!(back.action, LeaseAction::Reclaim);
         assert_eq!(back.expires_ms, 1_754_650_000_000);
         assert_eq!(back.to_line(), r.to_line(), "serialization is canonical");
         assert!(LeaseRecord::from_line("{\"action\":\"explode\"}").is_err());
+        // pre-seq-era ledger lines (no "seq" key) still parse, seq = 0
+        let legacy =
+            "{\"action\":\"claim\",\"expires_ms\":50,\"run_id\":\"r\",\"token\":1,\"worker\":\"w\"}";
+        assert_eq!(LeaseRecord::from_line(legacy).unwrap().seq, 0);
+    }
+
+    #[test]
+    fn lease_clock_applies_signed_offsets() {
+        let real = now_ms();
+        let fast = LeaseClock::new(5_000).now_ms();
+        let slow = LeaseClock::new(-5_000).now_ms();
+        assert!(fast >= real + 5_000);
+        assert!(slow <= real - 5_000 + 100, "slow {slow} vs real {real}");
+        assert!(LeaseClock::default().now_ms() >= real);
+        // an absurd negative offset clamps at 0, never wraps
+        assert_eq!(LeaseClock::new(i64::MIN).now_ms().min(1), 0);
     }
 
     #[test]
@@ -329,11 +626,32 @@ mod tests {
     fn renew_extends_only_the_current_holder() {
         let t = table(&[
             rec("r", "w0", 1, LeaseAction::Claim, 100),
-            rec("r", "w0", 1, LeaseAction::Renew, 250),
+            rec_seq("r", "w0", 1, 1, LeaseAction::Renew, 250),
         ]);
         assert_eq!(t.state("r").unwrap().expires_ms, 250);
-        assert!(!t.claimable("r", 200));
-        assert!(t.claimable("r", 250), "expired leases are reclaimable");
+        assert_eq!(t.state("r").unwrap().seq, 1, "a renewal advances the holder seq");
+        assert!(!t.claimable("r", 200, 0));
+        assert!(t.claimable("r", 250, 0), "expired leases are reclaimable");
+        // zombie renewals never advance the seq either
+        let t = table(&[
+            rec("r", "w0", 1, LeaseAction::Claim, 100),
+            rec("r", "w1", 2, LeaseAction::Reclaim, 300),
+            rec_seq("r", "w0", 1, 9, LeaseAction::Renew, 900),
+        ]);
+        assert_eq!(t.state("r").unwrap().seq, 0);
+    }
+
+    #[test]
+    fn skew_margin_pads_expiry_decisions() {
+        let t = table(&[rec("r", "w0", 1, LeaseAction::Claim, 1_000)]);
+        assert!(t.claimable("r", 1_000, 0), "no margin: raw comparison");
+        assert!(!t.claimable("r", 1_000, 250), "margin absorbs observer skew");
+        assert!(!t.claimable("r", 1_249, 250));
+        assert!(t.claimable("r", 1_250, 250));
+        assert!(t.any_active(1_000, 250), "active view is padded symmetrically");
+        assert!(!t.any_active(1_250, 250));
+        assert!(t.fresh_claimable("never-claimed"));
+        assert!(!t.fresh_claimable("r"));
     }
 
     #[test]
@@ -342,10 +660,23 @@ mod tests {
             rec("r", "w0", 1, LeaseAction::Claim, 100),
             rec("r", "w0", 1, LeaseAction::Release, 42),
         ]);
-        assert!(t.claimable("r", 0), "released leases are claimable before expiry");
+        assert!(t.claimable("r", 0, 0), "released leases are claimable before expiry");
+        assert!(t.fresh_claimable("r"));
         assert_eq!(t.holder("r"), None);
         assert_eq!(t.max_token("r"), 1, "the token history survives release");
-        assert!(!t.any_active(0));
+        assert!(!t.any_active(0, 0));
+        assert!(t.all_released());
+    }
+
+    #[test]
+    fn release_on_vacant_installs_the_rotated_state() {
+        // the compacted line a rotation writes: one release per run
+        let t = table(&[rec_seq("r", "w3", 5, 12, LeaseAction::Release, 777)]);
+        let s = t.state("r").unwrap();
+        assert!(s.released);
+        assert_eq!((s.token, s.seq, s.expires_ms, s.worker.as_str()), (5, 12, 777, "w3"));
+        assert_eq!(t.max_token("r"), 5, "the fencing floor survives rotation");
+        assert!(t.claimable("r", 0, 10_000));
     }
 
     #[test]
@@ -371,5 +702,95 @@ mod tests {
     fn leases_path_is_a_sibling() {
         let p = leases_path(Path::new("results/sweep/manifest.jsonl"));
         assert_eq!(p, PathBuf::from("results/sweep/manifest.leases.jsonl"));
+    }
+
+    fn tmp_ledger(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("addax_lease_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.leases.jsonl");
+        std::fs::remove_file(&path).ok();
+        path
+    }
+
+    #[test]
+    fn rotation_compacts_and_replays_equivalently() {
+        let path = tmp_ledger("rot");
+        // two runs, a reclaim history, renewals, all released: 8 lines
+        for r in [
+            rec("a", "w0", 1, LeaseAction::Claim, 100),
+            rec_seq("a", "w0", 1, 1, LeaseAction::Renew, 200),
+            rec("b", "w1", 1, LeaseAction::Claim, 100),
+            rec("a", "w1", 2, LeaseAction::Reclaim, 300),
+            rec_seq("a", "w1", 2, 1, LeaseAction::Renew, 350),
+            rec_seq("a", "w1", 2, 2, LeaseAction::Renew, 400),
+            rec_seq("a", "w1", 2, 2, LeaseAction::Release, 400),
+            rec("b", "w1", 1, LeaseAction::Release, 100),
+        ] {
+            append(&path, &r).unwrap();
+        }
+        let full = LeaseTable::load(&path).unwrap();
+        assert!(full.all_released());
+        assert!(rotate(&path, 1).unwrap(), "all released + 8 > 2 lines: rotates");
+        let lines = ioutil::read_lossy_lines(&path).unwrap();
+        assert_eq!(lines.iter().filter(|l| !l.trim().is_empty()).count(), 2,
+            "one line per run after rotation");
+        let compact = LeaseTable::load(&path).unwrap();
+        for run in ["a", "b"] {
+            let (f, c) = (full.state(run).unwrap(), compact.state(run).unwrap());
+            assert_eq!((f.worker.as_str(), f.token, f.seq, f.expires_ms, f.released),
+                       (c.worker.as_str(), c.token, c.seq, c.expires_ms, c.released),
+                       "replaying the rotated ledger yields the same table for {run}");
+        }
+        assert_eq!(compact.max_token("a"), 2, "fencing floor survives");
+        assert!(!rotate(&path, 1).unwrap(), "already compact: second rotation is a no-op");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rotation_refuses_while_any_lease_is_live() {
+        let path = tmp_ledger("rot_live");
+        append(&path, &rec("a", "w0", 1, LeaseAction::Claim, u64::MAX)).unwrap();
+        append(&path, &rec("b", "w0", 1, LeaseAction::Claim, 50)).unwrap();
+        append(&path, &rec("b", "w0", 1, LeaseAction::Release, 50)).unwrap();
+        assert!(!rotate(&path, 1).unwrap(), "run `a` is unreleased");
+        assert!(!rotate(&path, 100).unwrap(), "below min_lines is always a no-op");
+        let t = LeaseTable::load(&path).unwrap();
+        assert_eq!(t.holder("a"), Some(("w0", 1)), "ledger untouched");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn confirm_expired_vetoes_a_renewing_holder() {
+        let path = tmp_ledger("confirm_live");
+        append(&path, &rec("r", "w0", 1, LeaseAction::Claim, 10)).unwrap();
+        // holder heartbeats in the background while the observer confirms
+        let p2 = path.clone();
+        let h = std::thread::spawn(move || {
+            for seq in 1..=6u64 {
+                std::thread::sleep(std::time::Duration::from_millis(8));
+                append(&p2, &rec_seq("r", "w0", 1, seq, LeaseAction::Renew, 10 + seq)).unwrap();
+            }
+        });
+        let clock = LeaseClock::new(i64::MAX / 2); // observer's clock is absurdly fast
+        let ok = confirm_expired(&path, "r", 3, 60, &clock, 0).unwrap();
+        h.join().unwrap();
+        assert!(!ok, "a live holder's seq advances within TTL/3 and vetoes the reclaim");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn confirm_expired_passes_on_a_truly_dead_holder() {
+        let path = tmp_ledger("confirm_dead");
+        append(&path, &rec("r", "w0", 1, LeaseAction::Claim, 10)).unwrap();
+        let clock = LeaseClock::new(0);
+        assert!(confirm_expired(&path, "r", 2, 30, &clock, 0).unwrap(),
+            "no renewal across k reloads: the holder is dead");
+        assert!(confirm_expired(&path, "never-claimed", 2, 30, &clock, 0).unwrap(),
+            "a fresh run needs no confirmation");
+        append(&path, &rec("r", "w0", 1, LeaseAction::Release, 10)).unwrap();
+        assert!(confirm_expired(&path, "r", 2, 30, &clock, 0).unwrap(),
+            "released is as dead as it gets");
+        std::fs::remove_file(&path).ok();
     }
 }

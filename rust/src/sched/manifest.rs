@@ -305,7 +305,11 @@ impl SweepManifest {
         if let Some(dir) = self.path.parent() {
             std::fs::create_dir_all(dir).ok();
         }
-        ioutil::append_line_retry(&self.path, line, "manifest append")
+        // Durable (fsync'd) append: a manifest row is the *only* record
+        // that a run completed — if it evaporates in a power loss after
+        // the lease was released, the run would re-execute and the
+        // byte-identity proof would compare against a half-real history.
+        ioutil::append_line_retry_durable(&self.path, line, "manifest append")
             .with_context(|| format!("appending to {}", self.path.display()))
     }
 
@@ -332,9 +336,23 @@ impl SweepManifest {
             out.push_str(&row.to_line());
             out.push('\n');
         }
-        std::fs::write(&tmp, out).with_context(|| format!("writing {}", tmp.display()))?;
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(out.as_bytes())
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            // Content on the platter before the rename exposes it — a
+            // power loss right after the rename must never surface an
+            // empty manifest.
+            f.sync_data().with_context(|| format!("syncing {}", tmp.display()))?;
+        }
         std::fs::rename(&tmp, &self.path)
             .with_context(|| format!("renaming {} into place", tmp.display()))?;
+        if let Some(dir) = self.path.parent() {
+            ioutil::fsync_dir(dir)
+                .with_context(|| format!("fsyncing manifest directory {}", dir.display()))?;
+        }
         Ok(())
     }
 

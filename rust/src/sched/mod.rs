@@ -21,11 +21,17 @@
 //! * [`manifest`] — the crash-safe JSONL manifest whose compacted form is
 //!   byte-identical for a given spec at any worker count;
 //! * [`lease`] — the append-only lease ledger (claim / renew / reclaim /
-//!   release records with monotonic fencing tokens) that lets *separate
-//!   processes* share one manifest safely;
+//!   release records with monotonic fencing tokens and per-holder renewal
+//!   `seq` counters) that lets *separate processes* — and, with the skew
+//!   margin + logical reclaim confirmation, separate *machines* — share
+//!   one manifest safely; plus rotation/GC that bounds the ledger for
+//!   week-long sweeps;
+//! * [`steal`] — tail work-stealing: idle workers serve bit-identical
+//!   probe shards (per-example loss halves of the θ±εz evaluations) for
+//!   still-leased ZO runs through a per-run side dir;
 //! * [`chaos`] — seeded deterministic fault injection (worker crashes,
-//!   heartbeat stalls, transient I/O bursts) proving the fleet's failure
-//!   paths instead of hoping about them.
+//!   heartbeat stalls, transient I/O bursts, per-worker clock skew)
+//!   proving the fleet's failure paths instead of hoping about them.
 //!
 //! The repro layer (`repro/`) is a client: every table/figure expands its
 //! cells into `RunSpec`s, hands them to [`run_sweep`], and aggregates
@@ -42,10 +48,11 @@ pub mod lease;
 pub mod manifest;
 pub mod pack;
 pub mod spec;
+pub mod steal;
 pub mod worker;
 
 pub use chaos::{ChaosPlan, RunFaults};
-pub use lease::{leases_path, LeaseAction, LeaseRecord, LeaseTable};
+pub use lease::{leases_path, LeaseAction, LeaseClock, LeaseRecord, LeaseTable};
 pub use manifest::{ManifestRow, SweepManifest};
 pub use pack::{pack, price, PricedRun, Wave};
 pub use spec::{Backend, LT_NONE, RunSpec, SweepSpec};

@@ -295,6 +295,12 @@ pub struct SweepSpec {
     /// presumed dead and its run reclaimable. Not part of run identity:
     /// TTL shapes *when* work is reclaimed, never what it computes.
     pub lease_ttl_secs: f64,
+    /// Cross-node clock-skew allowance in milliseconds
+    /// (`--skew-margin-ms` overrides). A lease only *looks* expired once
+    /// it is this far past `expires_ms`, and reclaim still requires the
+    /// logical quiet-holder confirmation. Like the TTL, not part of run
+    /// identity.
+    pub skew_margin_ms: u64,
 }
 
 impl SweepSpec {
@@ -323,6 +329,7 @@ impl SweepSpec {
             n_test: cfg.usize_or("sweep.test", 500)?,
             lt_auto: cfg.bool_or("sweep.lt_auto", true)?,
             lease_ttl_secs: cfg.f32_or("sweep.lease_ttl_secs", 30.0)? as f64,
+            skew_margin_ms: cfg.f32_or("sweep.skew_margin_ms", 250.0)? as u64,
         };
         // Fail early on anything the executor would reject mid-sweep.
         geometry::by_name(&spec.geometry)

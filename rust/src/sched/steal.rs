@@ -1,0 +1,660 @@
+//! Tail work-stealing for zeroth-order probe evaluations.
+//!
+//! The fleet's tail problem: a grid's last long ZO run pins one worker
+//! while every other worker idle-polls a fully-leased ledger. MeZO-style
+//! probes make that tail *splittable* without touching the determinism
+//! contract, because a probe loss is a pure function of `(θ bytes, seed,
+//! batch rows)`: the counter-addressed block noise replays identically
+//! on any machine at any worker count, and per-example loss rows are
+//! independent — `FwdOut::mean_loss` just sums them in row order.
+//!
+//! ## Protocol (files under `<manifest dir>/steal/<run_id>/`)
+//!
+//! * the **holder** creates the run dir when its run starts and removes
+//!   it after release; a `done` marker is written first so a thief never
+//!   races a vanishing directory;
+//! * an idle **thief** advertises with an empty `thief.<worker>` marker
+//!   and then serves tasks: for each `task.<seed:016x>.json` (+ the
+//!   sibling `theta.<seed:016x>.bin` parameter snapshot) without a
+//!   `result.<seed:016x>.json`, it recomputes the probe's *upper row
+//!   shard* and publishes the per-row loss halves;
+//! * the holder, seeing a foreign marker at probe time, publishes the
+//!   task, computes the *lower* row shard locally, and waits up to a
+//!   timeout for the result — **falling back to computing the upper
+//!   shard itself** (from a `θ+εz` snapshot taken before the second
+//!   perturbation) when the thief is slow or dead. A dead thief can
+//!   therefore never stall a run; the holder also clears stale markers
+//!   on fallback so it stops offering shards to a corpse.
+//!
+//! ## Why stolen and unstolen runs are bit-identical
+//!
+//! Every number that crosses the files is exact: the probe seed travels
+//! as a 16-hex-digit string (u64 > 2^53 would be mangled by jsonlite's
+//! f64 numbers), `ε` as its u32 bit pattern, per-row loss sums/counts as
+//! u32 `f32::to_bits` patterns, and `θ` as the store's native-precision
+//! binary dump ([`ParamStore::save_bin`]). The thief replays the exact
+//! perturbation sweep the holder would have run (block noise is
+//! worker-count independent), and each row's loss depends only on the
+//! param bits and that row's token slice — so the reassembled
+//! `sums/counts` vectors are byte-for-byte the ones the holder would
+//! have produced alone, summed in the same row order. The manifest
+//! cannot tell whether a probe was stolen; only `manifest.times.jsonl`
+//! telemetry can.
+//!
+//! All files are published via tmp + rename so a reader never sees a
+//! torn task or result.
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonlite::{obj, Json};
+use crate::params::ParamStore;
+use crate::runtime::{FwdOut, ModelExec, TokenBatch};
+use crate::tensor::Dtype;
+
+/// Holder-side stealing state for the run executing on this thread.
+pub struct StealCtx {
+    /// `<manifest dir>/steal/<run_id>` — created by [`install`].
+    pub dir: PathBuf,
+    /// This worker's id (its own markers are not "a thief").
+    pub worker: String,
+    /// One-shot wait for a thief marker before the run's *first* probe
+    /// (CI determinism knob: guarantees a steal happens when a thief is
+    /// known to be coming). 0 = never wait, shard opportunistically.
+    pub first_wait_ms: u64,
+    /// Per-probe timeout on the thief's result before local fallback.
+    pub wait_ms: u64,
+    /// Probes actually sharded to a thief (telemetry).
+    pub stolen: u64,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<StealCtx>> = const { RefCell::new(None) };
+}
+
+/// Clears the thread's steal context on drop (panic-safe).
+pub struct StealGuard {
+    _priv: (),
+}
+
+impl Drop for StealGuard {
+    fn drop(&mut self) {
+        CTX.with(|c| *c.borrow_mut() = None);
+    }
+}
+
+/// Install a holder-side steal context for the current thread and create
+/// the run's side dir. Probes run while the guard lives may be sharded.
+pub fn install(ctx: StealCtx) -> Result<StealGuard> {
+    std::fs::create_dir_all(&ctx.dir)
+        .with_context(|| format!("creating steal dir {}", ctx.dir.display()))?;
+    CTX.with(|c| *c.borrow_mut() = Some(ctx));
+    Ok(StealGuard { _priv: () })
+}
+
+/// Probes sharded so far under the installed context (0 without one).
+pub fn stolen_count() -> u64 {
+    CTX.with(|c| c.borrow().as_ref().map_or(0, |x| x.stolen))
+}
+
+/// Tear down a run's steal dir: write `done` first (so a serving thief
+/// exits cleanly instead of racing the removal), then remove the tree.
+pub fn finish_run_dir(dir: &Path) {
+    if dir.exists() {
+        std::fs::write(dir.join("done"), b"").ok();
+        std::fs::remove_dir_all(dir).ok();
+    }
+}
+
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(())
+}
+
+/// Rows `[lo, hi)` of a batch as their own batch (same `seq`, so every
+/// row's token slice — and thus its example seed — is unchanged).
+fn row_slice(batch: &TokenBatch, lo: usize, hi: usize) -> TokenBatch {
+    TokenBatch {
+        ids: batch.ids[lo * batch.seq..hi * batch.seq].to_vec(),
+        labels: batch.labels[lo * batch.seq..hi * batch.seq].to_vec(),
+        batch: hi - lo,
+        seq: batch.seq,
+    }
+}
+
+fn foreign_marker(dir: &Path, own_worker: &str) -> Option<String> {
+    let own = format!("thief.{own_worker}");
+    let mut found: Vec<String> = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if name.starts_with("thief.") && name != own {
+                found.push(name);
+            }
+        }
+    }
+    found.sort();
+    found.into_iter().next()
+}
+
+fn f32_bits_arr(vals: &[f32]) -> Json {
+    Json::Arr(vals.iter().map(|v| Json::from(v.to_bits() as usize)).collect())
+}
+
+fn parse_f32_bits(v: &Json, key: &str) -> Result<Vec<f32>> {
+    v.get(key)?
+        .as_arr()?
+        .iter()
+        .map(|x| Ok(f32::from_bits(x.as_u64()? as u32)))
+        .collect()
+}
+
+/// `(sums_plus, counts_plus, sums_minus, counts_minus)` for one shard.
+type ShardHalves = (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>);
+
+fn i32_arr(vals: &[i32]) -> Json {
+    Json::Arr(vals.iter().map(|&v| Json::from(v as f64)).collect())
+}
+
+fn parse_i32_arr(v: &Json, key: &str) -> Result<Vec<i32>> {
+    v.get(key)?
+        .as_arr()?
+        .iter()
+        .map(|x| {
+            let f = x.as_f64()?;
+            if f.fract() != 0.0 || f < i32::MIN as f64 || f > i32::MAX as f64 {
+                bail!("{key}: {f} is not an i32");
+            }
+            Ok(f as i32)
+        })
+        .collect()
+}
+
+/// Holder side: try to shard this SPSA probe to a thief. Returns
+/// `Ok(None)` when stealing is inactive (no context installed, batch too
+/// small to split, or no thief advertised) — the caller then runs the
+/// normal local probe. Returns `Ok(Some((g0, probe_loss)))` with params
+/// left at `θ − εz`, exactly like `spsa_probe`, when it ran the probe —
+/// whether the shard came back from the thief or the timeout fallback
+/// recomputed it locally.
+pub fn sharded_probe(
+    params: &mut ParamStore,
+    exec: &mut dyn ModelExec,
+    batch: &TokenBatch,
+    eps: f32,
+    seed: u64,
+) -> Result<Option<(f64, f64)>> {
+    // Fast path: nothing installed on this thread (the common case for
+    // every non-fleet probe in the codebase).
+    let active = CTX.with(|c| c.borrow().is_some());
+    if !active || batch.batch < 2 {
+        return Ok(None);
+    }
+    let (dir, worker, wait_ms, first_wait_ms) = CTX.with(|c| {
+        let mut b = c.borrow_mut();
+        let ctx = b.as_mut().expect("checked above");
+        let fw = ctx.first_wait_ms;
+        ctx.first_wait_ms = 0; // one-shot
+        (ctx.dir.clone(), ctx.worker.clone(), ctx.wait_ms, fw)
+    });
+    let mut thief = foreign_marker(&dir, &worker);
+    if thief.is_none() && first_wait_ms > 0 {
+        let deadline = Instant::now() + Duration::from_millis(first_wait_ms);
+        while thief.is_none() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+            thief = foreign_marker(&dir, &worker);
+        }
+    }
+    if thief.is_none() {
+        return Ok(None);
+    }
+
+    // Publish θ + the task BEFORE perturbing, so the thief replays the
+    // same perturbation sweep from the same starting bytes.
+    let tag = format!("{seed:016x}");
+    let theta_name = format!("theta.{tag}.bin");
+    let mid = batch.batch / 2; // holder keeps [0, mid), thief [mid, batch)
+    {
+        let tmp = dir.join(format!("theta.{tag}.bin.tmp"));
+        params.save_bin(&tmp)?;
+        std::fs::rename(&tmp, dir.join(&theta_name))
+            .with_context(|| format!("publishing {theta_name}"))?;
+    }
+    let specs = Json::Arr(
+        params
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("name", Json::from(p.name.clone())),
+                    (
+                        "shape",
+                        Json::Arr(p.tensor.shape.iter().map(|&d| Json::from(d)).collect()),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    let task = obj(vec![
+        ("seed", Json::from(tag.clone())),
+        ("eps_bits", Json::from(eps.to_bits() as usize)),
+        ("dtype", Json::from(params.dtype().label())),
+        ("theta", Json::from(theta_name.clone())),
+        ("mid", Json::from(mid)),
+        ("batch", Json::from(batch.batch)),
+        ("seq", Json::from(batch.seq)),
+        ("ids", i32_arr(&batch.ids)),
+        ("labels", i32_arr(&batch.labels)),
+        ("tensors", specs),
+    ]);
+    write_atomic(&dir.join(format!("task.{tag}.json")), task.dump().as_bytes())?;
+
+    // Local lower shard: + half, snapshot, − half (2 sweeps, same as an
+    // unstolen probe — the snapshot is a byte copy, not a perturbation,
+    // so `noise_sweeps` accounting is unchanged).
+    let lower = row_slice(batch, 0, mid);
+    params.perturb(seed, eps);
+    let plus_lower = exec.forward(params, &lower)?;
+    let plus_snapshot = params.clone();
+    params.perturb(seed, -2.0 * eps);
+    let minus_lower = exec.forward(params, &lower)?;
+
+    // Wait for the thief's upper shard; fall back locally on timeout.
+    let result_path = dir.join(format!("result.{tag}.json"));
+    let deadline = Instant::now() + Duration::from_millis(wait_ms);
+    let mut upper: Option<ShardHalves> = None;
+    loop {
+        if let Ok(text) = std::fs::read_to_string(&result_path) {
+            let v = Json::parse(&text)
+                .with_context(|| format!("parsing {}", result_path.display()))?;
+            let parsed = (
+                parse_f32_bits(&v, "sums_plus")?,
+                parse_f32_bits(&v, "counts_plus")?,
+                parse_f32_bits(&v, "sums_minus")?,
+                parse_f32_bits(&v, "counts_minus")?,
+            );
+            let n = batch.batch - mid;
+            if parsed.0.len() != n
+                || parsed.1.len() != n
+                || parsed.2.len() != n
+                || parsed.3.len() != n
+            {
+                bail!("steal result {} has wrong shard width", result_path.display());
+            }
+            upper = Some(parsed);
+            break;
+        }
+        if Instant::now() >= deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let (sp, cp, sm, cm) = match upper {
+        Some(u) => {
+            CTX.with(|c| {
+                if let Some(ctx) = c.borrow_mut().as_mut() {
+                    ctx.stolen += 1;
+                }
+            });
+            u
+        }
+        None => {
+            // The thief is slow or dead: recompute the upper shard from
+            // the snapshots we already hold and stop advertising to it.
+            let upper_rows = row_slice(batch, mid, batch.batch);
+            let plus_upper = exec.forward(&plus_snapshot, &upper_rows)?;
+            let minus_upper = exec.forward(params, &upper_rows)?;
+            if let Some(marker) = thief {
+                std::fs::remove_file(dir.join(marker)).ok();
+            }
+            (plus_upper.sums, plus_upper.counts, minus_upper.sums, minus_upper.counts)
+        }
+    };
+    // Reassemble in original row order — the f64 summation in
+    // mean_loss() then runs over exactly the bytes an unstolen forward
+    // would have produced.
+    let assemble = |lower: &FwdOut, us: Vec<f32>, uc: Vec<f32>| -> f64 {
+        let mut sums = lower.sums.clone();
+        let mut counts = lower.counts.clone();
+        sums.extend(us);
+        counts.extend(uc);
+        FwdOut { sums, counts }.mean_loss()
+    };
+    let l_plus = assemble(&plus_lower, sp, cp);
+    let l_minus = assemble(&minus_lower, sm, cm);
+    for name in [format!("task.{tag}.json"), theta_name, format!("result.{tag}.json")] {
+        std::fs::remove_file(dir.join(name)).ok();
+    }
+    let g0 = (l_plus - l_minus) / (2.0 * eps as f64);
+    Ok(Some((g0, 0.5 * (l_plus + l_minus))))
+}
+
+/// Serve one published task file. Returns `false` when the task has no
+/// matching theta yet (retry later).
+fn serve_task(run_dir: &Path, task_path: &Path, exec: &mut dyn ModelExec) -> Result<bool> {
+    let text = match std::fs::read_to_string(task_path) {
+        Ok(t) => t,
+        // The holder consumed (removed) the task between our listing and
+        // this read — stale work, not an error.
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(false),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", task_path.display())),
+    };
+    let v = Json::parse(&text)?;
+    let tag = v.get("seed")?.as_str()?.to_string();
+    let seed = u64::from_str_radix(&tag, 16).with_context(|| format!("bad seed tag {tag:?}"))?;
+    let eps = f32::from_bits(v.get("eps_bits")?.as_u64()? as u32);
+    let dtype = Dtype::parse(v.get("dtype")?.as_str()?)?;
+    let theta_path = run_dir.join(v.get("theta")?.as_str()?);
+    if !theta_path.exists() {
+        return Ok(false);
+    }
+    let mid = v.get("mid")?.as_usize()?;
+    let n_batch = v.get("batch")?.as_usize()?;
+    let seq = v.get("seq")?.as_usize()?;
+    let batch = TokenBatch {
+        ids: parse_i32_arr(&v, "ids")?,
+        labels: parse_i32_arr(&v, "labels")?,
+        batch: n_batch,
+        seq,
+    };
+    if batch.ids.len() != n_batch * seq || mid >= n_batch {
+        bail!("malformed steal task {}", task_path.display());
+    }
+    let specs: Vec<(String, Vec<usize>)> = v
+        .get("tensors")?
+        .as_arr()?
+        .iter()
+        .map(|t| {
+            let name = t.get("name")?.as_str()?.to_string();
+            let shape = t
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            Ok((name, shape))
+        })
+        .collect::<Result<_>>()?;
+    let mut theta = ParamStore::load_bin_in(&specs, &theta_path, dtype)?;
+    let upper = row_slice(&batch, mid, n_batch);
+    theta.perturb(seed, eps);
+    let plus = exec.forward(&theta, &upper)?;
+    theta.perturb(seed, -2.0 * eps);
+    let minus = exec.forward(&theta, &upper)?;
+    let result = obj(vec![
+        ("seed", Json::from(tag.clone())),
+        ("sums_plus", f32_bits_arr(&plus.sums)),
+        ("counts_plus", f32_bits_arr(&plus.counts)),
+        ("sums_minus", f32_bits_arr(&minus.sums)),
+        ("counts_minus", f32_bits_arr(&minus.counts)),
+    ]);
+    write_atomic(&run_dir.join(format!("result.{tag}.json")), result.dump().as_bytes())?;
+    Ok(true)
+}
+
+/// Thief side: advertise in `run_dir` and serve probe shards until the
+/// run finishes (`done` marker / dir removal) or `idle_ms` passes with
+/// no new task. Returns the number of shards served. I/O races with the
+/// holder's cleanup are expected and benign: the run is over, results
+/// are moot, so errors after `done` appears are swallowed.
+pub fn serve_run(
+    run_dir: &Path,
+    worker: &str,
+    exec: &mut dyn ModelExec,
+    idle_ms: u64,
+) -> Result<u64> {
+    let marker = run_dir.join(format!("thief.{worker}"));
+    if std::fs::write(&marker, b"").is_err() {
+        return Ok(0); // dir vanished: the run already finished
+    }
+    let mut served = 0u64;
+    let mut last_activity = Instant::now();
+    let idle = Duration::from_millis(idle_ms.max(10));
+    loop {
+        if run_dir.join("done").exists() || !run_dir.exists() {
+            return Ok(served);
+        }
+        let mut tasks: Vec<PathBuf> = match std::fs::read_dir(run_dir) {
+            Ok(rd) => rd
+                .flatten()
+                .map(|e| e.path())
+                .filter(|p| {
+                    let name = p.file_name().unwrap_or_default().to_string_lossy();
+                    name.starts_with("task.") && name.ends_with(".json")
+                })
+                .collect(),
+            Err(_) => return Ok(served),
+        };
+        tasks.sort();
+        let mut did_work = false;
+        for task in tasks {
+            let tag = task
+                .file_name()
+                .unwrap_or_default()
+                .to_string_lossy()
+                .trim_start_matches("task.")
+                .trim_end_matches(".json")
+                .to_string();
+            if run_dir.join(format!("result.{tag}.json")).exists() {
+                continue;
+            }
+            match serve_task(run_dir, &task, exec) {
+                Ok(true) => {
+                    served += 1;
+                    did_work = true;
+                }
+                Ok(false) => {}
+                Err(_) if run_dir.join("done").exists() || !run_dir.exists() => {
+                    return Ok(served);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if did_work {
+            last_activity = Instant::now();
+        } else if last_activity.elapsed() >= idle {
+            std::fs::remove_file(&marker).ok();
+            return Ok(served);
+        } else {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+/// Scan a sweep's `steal/` root for a run dir with no thief yet and
+/// serve it. `mk_exec` maps a run id to a fresh executor replaying that
+/// run's objective (`None` = a run this worker cannot or should not
+/// serve, e.g. a non-mock backend — the dir is skipped). Returns shards
+/// served (0 when there was nothing to steal).
+pub fn try_steal(
+    steal_root: &Path,
+    worker: &str,
+    mk_exec: &mut dyn FnMut(&str) -> Option<Box<dyn ModelExec>>,
+    idle_ms: u64,
+) -> Result<u64> {
+    let mut dirs: Vec<PathBuf> = match std::fs::read_dir(steal_root) {
+        Ok(rd) => rd
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.is_dir())
+            .collect(),
+        Err(_) => return Ok(0),
+    };
+    dirs.sort();
+    for dir in dirs {
+        if dir.join("done").exists() || foreign_marker(&dir, worker).is_some() {
+            continue; // finished, or another thief is already on it
+        }
+        let run_id = dir
+            .file_name()
+            .unwrap_or_default()
+            .to_string_lossy()
+            .into_owned();
+        let Some(mut exec) = mk_exec(&run_id) else { continue };
+        return serve_run(&dir, worker, exec.as_mut(), idle_ms);
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::spsa_probe;
+    use crate::runtime::mock::QuadraticExec;
+
+    fn store(d: usize, seed: u64) -> ParamStore {
+        let mut p = ParamStore::zeros(&[("w".to_string(), vec![d])]);
+        p.perturb(seed, 1.0);
+        p
+    }
+
+    fn batch(b: usize) -> TokenBatch {
+        let rows: Vec<_> = (0..b)
+            .map(|i| (vec![i as i32 + 1, 31, 7], vec![-1, -1, -1]))
+            .collect();
+        TokenBatch::from_rows(&rows)
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("addax_steal_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn exec() -> QuadraticExec {
+        QuadraticExec::new(16, 0.5, 2.0, 0.1, 42)
+    }
+
+    #[test]
+    fn no_context_is_a_no_op() {
+        let mut p = store(16, 1);
+        let out = sharded_probe(&mut p, &mut exec(), &batch(4), 1e-3, 9).unwrap();
+        assert!(out.is_none());
+    }
+
+    #[test]
+    fn stolen_probe_is_bit_identical_to_local() {
+        let dir = tmp_dir("bitid").join("run-a");
+        let b = batch(5);
+        let (eps, seed) = (1e-3f32, 0xDEAD_BEEF_CAFE_0001u64);
+
+        // control: plain local probe
+        let mut p_ctrl = store(16, 1);
+        let (g0_ctrl, l_ctrl) = spsa_probe(&mut p_ctrl, &mut exec(), &b, eps, seed).unwrap();
+
+        // stolen: a thief thread serves the run dir while the holder probes
+        let guard = install(StealCtx {
+            dir: dir.clone(),
+            worker: "holder".into(),
+            first_wait_ms: 5_000,
+            wait_ms: 10_000,
+            stolen: 0,
+        })
+        .unwrap();
+        let thief_dir = dir.clone();
+        let thief = std::thread::spawn(move || {
+            let mut e = exec();
+            serve_run(&thief_dir, "thief", &mut e, 500).unwrap()
+        });
+        let mut p = store(16, 1);
+        let out = sharded_probe(&mut p, &mut exec(), &b, eps, seed).unwrap();
+        let (g0, l) = out.expect("a waiting thief means the probe is sharded");
+        assert_eq!(g0.to_bits(), g0_ctrl.to_bits(), "g0 must be bit-identical");
+        assert_eq!(l.to_bits(), l_ctrl.to_bits(), "probe loss must be bit-identical");
+        assert_eq!(p.dist_sq(&p_ctrl), 0.0, "params end at the same θ−εz");
+        assert_eq!(stolen_count(), 1);
+        finish_run_dir(&dir);
+        assert!(thief.join().unwrap() >= 1, "the thief actually served the shard");
+        drop(guard);
+        assert_eq!(stolen_count(), 0, "guard drop clears the context");
+    }
+
+    #[test]
+    fn dead_thief_falls_back_bit_identically_and_is_deadvertised() {
+        let dir = tmp_dir("dead").join("run-b");
+        let b = batch(4);
+        let (eps, seed) = (2e-3f32, 77u64);
+        let mut p_ctrl = store(16, 3);
+        let (g0_ctrl, l_ctrl) = spsa_probe(&mut p_ctrl, &mut exec(), &b, eps, seed).unwrap();
+
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("thief.ghost"), b"").unwrap(); // advertises, never serves
+        let _guard = install(StealCtx {
+            dir: dir.clone(),
+            worker: "holder".into(),
+            first_wait_ms: 0,
+            wait_ms: 30, // short timeout: force the fallback
+            stolen: 0,
+        })
+        .unwrap();
+        let mut p = store(16, 3);
+        let (g0, l) = sharded_probe(&mut p, &mut exec(), &b, eps, seed)
+            .unwrap()
+            .expect("marker present: the shard path engages");
+        assert_eq!(g0.to_bits(), g0_ctrl.to_bits());
+        assert_eq!(l.to_bits(), l_ctrl.to_bits());
+        assert_eq!(p.dist_sq(&p_ctrl), 0.0);
+        assert_eq!(stolen_count(), 0, "a timeout fallback is not a steal");
+        assert!(
+            !dir.join("thief.ghost").exists(),
+            "the dead thief's marker is cleared so it stops attracting shards"
+        );
+    }
+
+    #[test]
+    fn small_batches_and_absent_thieves_fall_through() {
+        let dir = tmp_dir("small").join("run-c");
+        let _guard = install(StealCtx {
+            dir: dir.clone(),
+            worker: "holder".into(),
+            first_wait_ms: 0,
+            wait_ms: 50,
+            stolen: 0,
+        })
+        .unwrap();
+        let mut p = store(8, 2);
+        let out = sharded_probe(&mut p, &mut exec(), &batch(1), 1e-3, 5).unwrap();
+        assert!(out.is_none(), "a 1-row batch cannot be split");
+        let out = sharded_probe(&mut p, &mut exec(), &batch(4), 1e-3, 5).unwrap();
+        assert!(out.is_none(), "no thief advertised: the local path runs");
+    }
+
+    #[test]
+    fn try_steal_skips_finished_and_occupied_runs() {
+        let root = tmp_dir("scan");
+        std::fs::create_dir_all(root.join("run-done")).unwrap();
+        std::fs::write(root.join("run-done/done"), b"").unwrap();
+        std::fs::create_dir_all(root.join("run-occupied")).unwrap();
+        std::fs::write(root.join("run-occupied/thief.other"), b"").unwrap();
+        std::fs::create_dir_all(root.join("run-foreign-backend")).unwrap();
+        let mut asked: Vec<String> = Vec::new();
+        let mut mk = |run_id: &str| -> Option<Box<dyn ModelExec>> {
+            asked.push(run_id.to_string());
+            None // "not a run I can serve" — every dir is skipped
+        };
+        assert_eq!(try_steal(&root, "me", &mut mk, 10).unwrap(), 0);
+        assert!(
+            !root.join("run-done/thief.me").exists()
+                && !root.join("run-occupied/thief.me").exists()
+                && !root.join("run-foreign-backend/thief.me").exists(),
+            "no marker left on skipped runs"
+        );
+        assert_eq!(
+            try_steal(&root.join("missing"), "me", &mut mk, 10).unwrap(),
+            0,
+            "a missing steal root is quietly nothing-to-do"
+        );
+        drop(mk);
+        assert_eq!(
+            asked,
+            vec!["run-foreign-backend".to_string()],
+            "done/occupied dirs are skipped before the resolver is consulted"
+        );
+    }
+}

@@ -43,10 +43,11 @@ use crate::runtime::{ModelExec, XlaExec};
 use crate::zorng::derive_seed;
 
 use super::chaos::ChaosPlan;
-use super::lease::{self, LeaseAction, LeaseRecord, LeaseTable};
+use super::lease::{self, LeaseAction, LeaseClock, LeaseRecord, LeaseTable};
 use super::manifest::{ManifestRow, SweepManifest};
 use super::pack::pack;
 use super::spec::{Backend, RunSpec};
+use super::steal;
 
 /// Scheduler knobs (the `sweep` subcommand's flags).
 #[derive(Clone, Debug)]
@@ -138,23 +139,30 @@ pub struct SweepSummary {
     /// (fleet mode): the run executed to completion under a stale
     /// token, so its row was discarded, not merged.
     pub fenced: usize,
+    /// Probe shards this worker computed for OTHER holders as a thief
+    /// (fleet mode) — fleet-wide sums count each stolen shard exactly
+    /// once. Shards of this worker's own runs that a thief computed show
+    /// up in the times side file (`"event":"steal"`), not here. Pure
+    /// telemetry — stolen and unstolen runs commit byte-identical rows.
+    pub stolen: u64,
     pub waves: usize,
     pub manifest_path: std::path::PathBuf,
 }
 
 impl SweepSummary {
-    /// Stable one-line form (CI greps `executed=`, `halted=` and
-    /// `reclaimed=`).
+    /// Stable one-line form (CI greps `executed=`, `halted=`,
+    /// `reclaimed=` and `stolen=`).
     pub fn line(&self) -> String {
         format!(
             "sweep: total={} executed={} skipped={} halted={} reclaimed={} fenced={} \
-             waves={} manifest={}",
+             stolen={} waves={} manifest={}",
             self.total,
             self.executed,
             self.skipped,
             self.halted,
             self.reclaimed,
             self.fenced,
+            self.stolen,
             self.waves,
             self.manifest_path.display()
         )
@@ -357,6 +365,7 @@ pub fn run_sweep_collect(
         halted,
         reclaimed: 0,
         fenced: 0,
+        stolen: 0,
         waves: n_waves,
         manifest_path: opts.manifest_path.clone(),
     };
@@ -374,8 +383,62 @@ pub struct FleetOptions {
     /// Lease TTL. A lease not renewed within this window is presumed
     /// dead and reclaimable; heartbeats renew at TTL/3.
     pub lease_ttl_ms: u64,
-    /// Deterministic fault injection (`--chaos-seed`).
+    /// Deterministic fault injection (`--chaos-seed`). Besides crashes /
+    /// stalls / I/O bursts, a chaos plan skews this worker's lease clock
+    /// by a per-worker deterministic offset in ±TTL (overridable with
+    /// `clock_offset_ms`).
     pub chaos: Option<ChaosPlan>,
+    /// Grace added to `expires_ms` before *this observer* treats a
+    /// foreign lease as expired (`--skew-margin-ms`, config
+    /// `sweep.skew_margin_ms`). Absorbs ordinary cross-node clock drift;
+    /// the logical reclaim confirmation handles anything bigger.
+    pub skew_margin_ms: u64,
+    /// Explicit clock-skew injection for this worker (`--clock-offset-ms`).
+    /// `None` = the chaos plan's derived offset, or 0 without chaos.
+    pub clock_offset_ms: Option<i64>,
+    /// Consecutive quiet ledger reloads (spaced TTL/3) required before an
+    /// expired-looking lease may actually be reclaimed. A live holder
+    /// renews its `seq` every TTL/3, so any `k ≥ 1` vetoes reclaims of
+    /// live runs under arbitrary skew; higher k buys margin against I/O
+    /// hiccups delaying a renewal append.
+    pub confirm_reloads: u32,
+    /// Rotate (GC) the lease ledger at all-released points once it holds
+    /// at least this many lines (`--rotate-after`; 0 disables rotation).
+    pub rotate_after_lines: usize,
+    /// Disable tail work-stealing (`--no-steal`).
+    pub no_steal: bool,
+    /// Holder-side one-shot wait for a thief marker before a run's first
+    /// probe (`--steal-wait-ms`). 0 = shard opportunistically; CI sets it
+    /// high to *guarantee* a stolen probe in the determinism proof.
+    pub steal_wait_ms: u64,
+}
+
+impl FleetOptions {
+    /// Defaults for everything but identity and TTL.
+    pub fn new(worker_id: impl Into<String>, lease_ttl_ms: u64) -> Self {
+        Self {
+            worker_id: worker_id.into(),
+            lease_ttl_ms,
+            chaos: None,
+            skew_margin_ms: 250,
+            clock_offset_ms: None,
+            confirm_reloads: 2,
+            rotate_after_lines: 512,
+            no_steal: false,
+            steal_wait_ms: 0,
+        }
+    }
+
+    /// This worker's lease clock: explicit offset, else the chaos plan's
+    /// derived per-worker skew, else the real clock.
+    pub fn clock(&self) -> LeaseClock {
+        let offset = self.clock_offset_ms.unwrap_or_else(|| {
+            self.chaos
+                .map(|c| c.clock_offset_ms(&self.worker_id, self.lease_ttl_ms))
+                .unwrap_or(0)
+        });
+        LeaseClock::new(offset)
+    }
 }
 
 /// How a fleet worker's invocation ended.
@@ -405,6 +468,7 @@ impl Heartbeat {
         worker: String,
         token: u64,
         ttl_ms: u64,
+        clock: LeaseClock,
         stalled: bool,
     ) -> Self {
         let stop = Arc::new(AtomicBool::new(false));
@@ -418,6 +482,10 @@ impl Heartbeat {
         let slice = interval.min(Duration::from_millis(20));
         let handle = std::thread::spawn(move || {
             let mut next = Instant::now() + interval;
+            // The per-holder logical clock: every renewal advances it, so
+            // an observer confirming a reclaim can tell "alive but
+            // skew-shifted" from "dead" without trusting any wall clock.
+            let mut seq = 0u64;
             loop {
                 std::thread::sleep(slice);
                 if stop2.load(Ordering::Relaxed) {
@@ -427,17 +495,21 @@ impl Heartbeat {
                     continue;
                 }
                 next = Instant::now() + interval;
+                seq += 1;
                 // Renewal failures are survivable (the next beat
                 // retries; at worst the lease lapses and the run is
-                // reclaimed).
+                // reclaimed) — which is also why renewals take the
+                // cheap unsynced append: losing one to a power cut
+                // costs at most a spurious reclaim, never a fence.
                 lease::append(
                     &lease_path,
                     &LeaseRecord {
                         run_id: run_id.clone(),
                         worker: worker.clone(),
                         token,
+                        seq,
                         action: LeaseAction::Renew,
-                        expires_ms: lease::now_ms() + ttl_ms,
+                        expires_ms: clock.now_ms() + ttl_ms,
                     },
                 )
                 .ok();
@@ -496,12 +568,15 @@ pub fn fleet_commit(
         timing.note.as_deref(),
     )
     .ok();
-    lease::append(
+    // Durable: a release that evaporates in a power loss would leave an
+    // eternal-looking lease that someone must confirm-and-reclaim.
+    lease::append_durable(
         &lease_path,
         &LeaseRecord {
             run_id,
             worker: worker_id.to_string(),
             token,
+            seq: 0, // replay maxes seq, so 0 preserves the renewal count
             action: LeaseAction::Release,
             expires_ms: lease::now_ms(),
         },
@@ -523,6 +598,20 @@ pub fn fleet_commit(
 /// compacts: the compacted manifest is byte-identical to a
 /// single-process sweep's, at any worker count and under any
 /// kill/reclaim pattern.
+///
+/// Cross-node hardening (all on by default):
+///
+/// * **skew tolerance** — every liveness decision runs on this worker's
+///   [`LeaseClock`] with `skew_margin_ms` grace, and a reclaim
+///   additionally requires [`lease::confirm_expired`]'s logical proof of
+///   death (no renewal-`seq` advance across K reloads), so a live run is
+///   never reclaimed under arbitrary clock skew;
+/// * **ledger rotation** — at all-released points the lease ledger is
+///   GC'd to one line per run ([`lease::rotate`]), bounding its size for
+///   week-long sweeps while preserving fencing-token monotonicity;
+/// * **tail stealing** — a worker finding everything leased serves probe
+///   shards for running ZO runs ([`steal`]), and a holder shards its
+///   probes to advertised thieves, bit-identically with local fallback.
 pub fn run_sweep_fleet(
     specs: Vec<RunSpec>,
     opts: &SweepOptions,
@@ -563,11 +652,14 @@ pub fn run_sweep_fleet(
     let lease_path = lease::leases_path(&opts.manifest_path);
     let ckpt_root = opts.ckpt_root();
     let params_dir = opts.params_dir();
+    let steal_root = opts.manifest_dir().join("steal");
     let ttl = fleet.lease_ttl_ms;
+    let clock = fleet.clock();
     let poll = Duration::from_millis((ttl / 4).clamp(5, 200));
     let mut executed = 0usize;
     let mut reclaimed = 0usize;
     let mut fenced = 0usize;
+    let mut stolen = 0u64;
     let mut crashed: Option<String> = None;
 
     loop {
@@ -579,37 +671,112 @@ pub fn run_sweep_fleet(
             // Every row is durable. Live leases can only belong to
             // workers about to discover that (or to harmless zombies);
             // wait them out so nothing appends after compaction.
-            if table.any_active(lease::now_ms()) {
+            if table.any_active(clock.now_ms(), fleet.skew_margin_ms) {
                 std::thread::sleep(poll);
                 continue;
             }
             for s in &deduped {
                 std::fs::remove_dir_all(s.ckpt_dir(&ckpt_root)).ok();
+                steal::finish_run_dir(&steal_root.join(&s.run_id));
+            }
+            // Final ledger GC: every lease is released, so the ledger
+            // compacts to one line per run — the week-long-sweep bound.
+            if fleet.rotate_after_lines > 0
+                && lease::rotate(&lease_path, fleet.rotate_after_lines)?
+            {
+                SweepManifest::append_event(
+                    &opts.manifest_path,
+                    "-",
+                    "rotate",
+                    "lease ledger rotated at drain: one release line per run",
+                )?;
             }
             // Idempotent across workers: everyone compacts the same row
             // set to the same bytes, each through its own tmp file.
             manifest.compact()?;
             break;
         }
-        let now = lease::now_ms();
-        let Some(spec) = pending.iter().find(|s| table.claimable(&s.run_id, now)).copied()
-        else {
-            // everything pending is leased to someone live
-            std::thread::sleep(poll);
-            continue;
+        // Prefer runs that were never claimed (or cleanly released): they
+        // need no expiry judgment, let alone a reclaim confirmation.
+        let fresh = pending.iter().find(|s| table.fresh_claimable(&s.run_id)).copied();
+        let spec = match fresh {
+            Some(s) => s,
+            None => {
+                let now = clock.now_ms();
+                let expired_looking = pending
+                    .iter()
+                    .find(|s| table.claimable(&s.run_id, now, fleet.skew_margin_ms))
+                    .copied();
+                let Some(s) = expired_looking else {
+                    // Everything pending is leased to someone live — the
+                    // grid's tail. Serve probe shards for still-running
+                    // ZO runs instead of pure idle-polling.
+                    if !fleet.no_steal {
+                        let mut mk = |run_id: &str| -> Option<Box<dyn ModelExec>> {
+                            let s = deduped.iter().find(|s| s.run_id == run_id)?;
+                            // Stealing is mock-only for now: XLA padding
+                            // inside `forward` is per-chunk, so sub-batch
+                            // row sums are not yet proven bit-stable.
+                            matches!(s.backend, Backend::Mock).then(|| {
+                                Box::new(QuadraticExec::new(
+                                    s.mock_dim,
+                                    0.5,
+                                    2.0,
+                                    0.1,
+                                    derive_seed(s.grid_seed, 0xACE),
+                                )) as Box<dyn ModelExec>
+                            })
+                        };
+                        let served = steal::try_steal(
+                            &steal_root,
+                            &fleet.worker_id,
+                            &mut mk,
+                            (ttl / 2).max(20),
+                        )?;
+                        if served > 0 {
+                            stolen += served;
+                            continue; // re-check the ledger right away
+                        }
+                    }
+                    std::thread::sleep(poll);
+                    continue;
+                };
+                // The lease *looks* expired on this observer's (skewed,
+                // margin-padded) clock. Demand logical proof of death: no
+                // renewal-seq advance across K reloads spaced TTL/3 — a
+                // live holder heartbeats faster than that, no matter
+                // whose wall clock is wrong.
+                if !lease::confirm_expired(
+                    &lease_path,
+                    &s.run_id,
+                    fleet.confirm_reloads,
+                    ttl,
+                    &clock,
+                    fleet.skew_margin_ms,
+                )? {
+                    // Signs of life (or the ledger moved): not a corpse.
+                    std::thread::sleep(poll);
+                    continue;
+                }
+                s
+            }
         };
         // Claim at the next fencing token. A claim over an unreleased
-        // (expired) lease is a reclaim: the holder is presumed dead.
+        // (expired, confirmed-dead) lease is a reclaim.
         let token = table.max_token(&spec.run_id) + 1;
         let is_reclaim = matches!(table.state(&spec.run_id), Some(s) if !s.released);
-        lease::append(
+        // Claims and reclaims are fencing records: fsync'd, so a power
+        // loss can never un-fence a zombie by eating its successor's
+        // claim line.
+        lease::append_durable(
             &lease_path,
             &LeaseRecord {
                 run_id: spec.run_id.clone(),
                 worker: fleet.worker_id.clone(),
                 token,
+                seq: 0,
                 action: if is_reclaim { LeaseAction::Reclaim } else { LeaseAction::Claim },
-                expires_ms: lease::now_ms() + ttl,
+                expires_ms: clock.now_ms() + ttl,
             },
         )?;
         // Confirm the claim won (equal tokens: first appender wins).
@@ -621,14 +788,15 @@ pub fn run_sweep_fleet(
         // manifest read and the claim landing. Back off without
         // executing — a leased run is never double-executed.
         if SweepManifest::load(&opts.manifest_path)?.contains(&spec.run_id) {
-            lease::append(
+            lease::append_durable(
                 &lease_path,
                 &LeaseRecord {
                     run_id: spec.run_id.clone(),
                     worker: fleet.worker_id.clone(),
                     token,
+                    seq: 0,
                     action: LeaseAction::Release,
-                    expires_ms: lease::now_ms(),
+                    expires_ms: clock.now_ms(),
                 },
             )?;
             continue;
@@ -664,6 +832,7 @@ pub fn run_sweep_fleet(
             fleet.worker_id.clone(),
             token,
             ttl,
+            clock,
             stalled,
         );
         let ctx = RunCtx {
@@ -678,7 +847,31 @@ pub fn run_sweep_fleet(
                 .dump_params
                 .then(|| params_dir.join(format!("{}.bin", spec.run_id))),
         };
+        // Holder-side stealing: publish a per-run side dir so idle
+        // workers can claim probe shards. Mock-only (matching the thief
+        // gate above); a dead thief costs one result timeout per probe,
+        // never a stall.
+        let steal_dir = steal_root.join(&spec.run_id);
+        let steal_guard = (!fleet.no_steal
+            && matches!(spec.backend, Backend::Mock)
+            && spec.steps > 0)
+            .then(|| {
+                steal::install(steal::StealCtx {
+                    dir: steal_dir.clone(),
+                    worker: fleet.worker_id.clone(),
+                    first_wait_ms: fleet.steal_wait_ms,
+                    wait_ms: (ttl / 2).max(50),
+                    stolen: 0,
+                })
+            })
+            .transpose()?;
         let res = execute_run_with(spec, &ctx);
+        // Shards of OUR run computed by thieves — telemetry only; the
+        // summary's `stolen` counts shards this worker served as a
+        // thief, so fleet-wide sums count each shard once.
+        let run_stolen = steal::stolen_count();
+        drop(steal_guard);
+        steal::finish_run_dir(&steal_dir);
         hb.finish();
         match res {
             Err(e) if crash_after.is_some() && e.downcast_ref::<Halted>().is_some() => {
@@ -708,6 +901,33 @@ pub fn run_sweep_fleet(
                 if fleet_commit(&mut fresh, &fleet.worker_id, token, row, &timing)? {
                     executed += 1;
                     std::fs::remove_dir_all(spec.ckpt_dir(&ckpt_root)).ok();
+                    if run_stolen > 0 {
+                        // Telemetry only: the committed row is bit-equal
+                        // to an unstolen run's, so the steal history must
+                        // live where reclaim history does — the times
+                        // side file.
+                        SweepManifest::append_event(
+                            &opts.manifest_path,
+                            &spec.run_id,
+                            "steal",
+                            &format!(
+                                "{run_stolen} probe shard(s) computed by a thief worker"
+                            ),
+                        )?;
+                    }
+                    // Mid-sweep ledger GC: at an all-released moment the
+                    // ledger compacts to one line per run. Disabled while
+                    // any lease is live, so this is cheap to attempt.
+                    if fleet.rotate_after_lines > 0
+                        && lease::rotate(&lease_path, fleet.rotate_after_lines)?
+                    {
+                        SweepManifest::append_event(
+                            &opts.manifest_path,
+                            &spec.run_id,
+                            "rotate",
+                            "lease ledger rotated: compacted to one release line per run",
+                        )?;
+                    }
                     if opts.verbose {
                         match timing.resumed_from_step {
                             Some(s) => println!(
@@ -741,6 +961,7 @@ pub fn run_sweep_fleet(
         halted: 0,
         reclaimed,
         fenced,
+        stolen,
         waves: 0,
         manifest_path: opts.manifest_path.clone(),
     };
