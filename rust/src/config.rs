@@ -196,6 +196,9 @@ impl Config {
             ckpt_keep: self.usize_or("train.ckpt_keep", 3)?,
             ckpt_identity: String::new(),
             halt_after: self.usize_or("train.halt_after", 0)?,
+            // The probe registration is process-level wiring (`--probe-port`
+            // in main.rs), not per-run config.
+            probe: None,
         })
     }
 

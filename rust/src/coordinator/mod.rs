@@ -94,6 +94,13 @@ pub struct TrainConfig {
     /// halt step is snapshotted first, so a later call resumes exactly
     /// there — the deterministic mid-run-kill used by tests and CI.
     pub halt_after: usize,
+    /// Live status probe for this run (`obs` module). When set, the loop
+    /// publishes step telemetry at step boundaries and honors the probe's
+    /// control flags: `checkpoint` forces one extra snapshot, `pause`
+    /// parks the loop between steps, `abort` rides the `halt_after` rail
+    /// (snapshot, then [`Halted`]). None of these can change a
+    /// deterministic byte — see the `obs` module docs.
+    pub probe: Option<Arc<crate::obs::RunProbe>>,
 }
 
 impl Default for TrainConfig {
@@ -111,6 +118,7 @@ impl Default for TrainConfig {
             ckpt_keep: 3,
             ckpt_identity: String::new(),
             halt_after: 0,
+            probe: None,
         }
     }
 }
@@ -459,6 +467,12 @@ pub fn train(
             ckpt_note.push_str("; restarted from scratch");
         }
     }
+    if let Some(p) = &cfg.probe {
+        p.set_running(cfg.steps);
+        if let Some(s) = resumed_from_step {
+            p.set_resumed_from(s);
+        }
+    }
 
     let examples = Arc::new(dataset.train.clone());
     let feeder = BatchFeeder::spawn(
@@ -496,14 +510,18 @@ pub fn train(
         let step_seed = derive_seed(cfg.seed, step as u64);
         let stats = opt.step(params, exec, &item.batches, step_seed)?;
         loss_curve.push(step, stats.loss);
-        logger.log(obj(vec![
+        let step_row = obj(vec![
             ("step", Json::from(step)),
             ("loss", Json::from(stats.loss)),
             ("zo_loss", Json::from(stats.zo_loss)),
             ("g0", Json::from(stats.g0)),
             ("grad_norm", Json::from(stats.grad_norm)),
             ("elapsed", Json::from(t0.elapsed().as_secs_f64())),
-        ]));
+        ]);
+        if let Some(p) = &cfg.probe {
+            p.record_step(step, stats.loss, stats.zo_loss, step_row.clone());
+        }
+        logger.log(step_row);
 
         let is_eval = (step + 1) % eval_every == 0 || step + 1 == cfg.steps;
         let mut improved = false;
@@ -530,15 +548,32 @@ pub fn train(
                     best_step
                 );
             }
-            logger.log(obj(vec![
+            let eval_row = obj(vec![
                 ("step", Json::from(step + 1)),
                 ("val_acc", Json::from(ev.accuracy)),
-            ]));
+            ]);
+            if let Some(p) = &cfg.probe {
+                p.record_eval(step + 1, ev.accuracy, best_val, eval_row.clone());
+            }
+            logger.log(eval_row);
         }
 
         steps_this_session += 1;
-        let halting =
-            cfg.halt_after > 0 && steps_this_session >= cfg.halt_after && step + 1 < cfg.steps;
+        let mut probe_ckpt = false;
+        let mut probe_abort = false;
+        if let Some(p) = &cfg.probe {
+            // `pause` parks the loop at this step boundary — pure
+            // wall-clock, which lives outside the byte-identity contract.
+            while p.paused() && !p.abort_requested() {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            probe_ckpt = p.take_checkpoint_request() && ckpt.is_some();
+            // An abort landing on the final step is a no-op: the run
+            // completes normally and its row commits.
+            probe_abort = p.take_abort_request() && step + 1 < cfg.steps;
+        }
+        let halting = probe_abort
+            || (cfg.halt_after > 0 && steps_this_session >= cfg.halt_after && step + 1 < cfg.steps);
         if let Some((ck, _)) = &ckpt {
             let step_no = step + 1;
             // Cadence: `ckpt_every` steps when set, else every eval. A
@@ -549,7 +584,9 @@ pub fn train(
             } else {
                 is_eval
             };
-            if on_cadence || improved || halting {
+            // A probe `checkpoint` verb forces one extra snapshot here —
+            // snapshots record the trajectory, they never steer it.
+            if on_cadence || improved || halting || probe_ckpt {
                 let state = TrainState {
                     step: step_no,
                     eval_every,
@@ -568,11 +605,17 @@ pub fn train(
             }
         }
         if halting {
+            if let Some(p) = &cfg.probe {
+                p.set_halted(step + 1);
+            }
             logger.flush();
             return Err(Halted { at_step: step + 1 }.into());
         }
     }
     logger.flush();
+    if let Some(p) = &cfg.probe {
+        p.set_done();
+    }
 
     // Test accuracy at the best-validation checkpoint (paper protocol).
     let eval_params = best_params.as_ref().unwrap_or(params);

@@ -16,8 +16,10 @@
 //!   packs concurrent runs onto device budgets behind a resumable
 //!   manifest, the crash-safe checkpoint subsystem (`ckpt/`: versioned
 //!   CRC-checked tensor snapshots giving every run byte-identical
-//!   step-level resume), and the experiment harness regenerating every
-//!   table/figure of the paper as pure aggregations over that manifest.
+//!   step-level resume), the live observability plane (`obs/`: an
+//!   opt-in embedded HTTP probe server over running sweeps), and the
+//!   experiment harness regenerating every table/figure of the paper
+//!   as pure aggregations over that manifest.
 //!
 //! Python never runs on the training path: the `addax` binary is
 //! self-contained once `make artifacts` has produced `artifacts/`.
@@ -30,6 +32,7 @@ pub mod ioutil;
 pub mod jsonlite;
 pub mod metrics;
 pub mod memory;
+pub mod obs;
 pub mod optim;
 pub mod params;
 pub mod repro;

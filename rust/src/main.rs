@@ -2,10 +2,12 @@
 //!
 //! ```text
 //! addax train  [--config FILE] [--set k=v ...]     fine-tune one run
+//!              [--probe-port P [--probe-linger S]]
 //! addax sweep  [--spec FILE | --smoke] [--budget-gb G] [--gpus N]
 //!              [--workers W] [--resume] [--manifest PATH] [--dry-run]
 //!              [--no-ckpt] [--ckpt-every N] [--ckpt-keep K]
 //!              [--halt-after N] [--dump-params]
+//!              [--probe-port P [--probe-linger S]]
 //!              [--worker-id ID [--lease-ttl SECS] [--chaos-seed S]]
 //! addax ckpt   inspect|verify FILE...              snapshot header / full CRC pass
 //! addax ckpt   diff A B                            compare two snapshots
@@ -24,6 +26,7 @@ use addax::coordinator::train;
 use addax::data;
 use addax::jsonlite::Json;
 use addax::memory::{self, footprint, geometry, Device, Dtype, Method, Workload};
+use addax::obs::{ProbeServer, StatusBoard};
 use addax::repro::{self, Harness};
 use addax::runtime::manifest::{default_artifacts_dir, Manifest};
 use addax::runtime::XlaExec;
@@ -55,10 +58,12 @@ fn print_help() {
     println!(
         "addax — rust coordinator for the Addax reproduction\n\n\
          USAGE:\n  addax train  [--config FILE] [--set section.key=value ...]\n  \
+         \x20            [--probe-port P [--probe-linger S]]\n  \
          addax sweep  [--spec FILE | --smoke] [--budget-gb G] [--gpus N] [--workers W]\n  \
          \x20            [--resume] [--manifest PATH] [--dry-run] [--set section.key=value ...]\n  \
          \x20            [--no-ckpt] [--ckpt-every N] [--ckpt-keep K] [--halt-after N]\n  \
-         \x20            [--dump-params] [--worker-id ID [--lease-ttl SECS] [--chaos-seed S]\n  \
+         \x20            [--dump-params] [--probe-port P [--probe-linger S]]\n  \
+         \x20            [--worker-id ID [--lease-ttl SECS] [--chaos-seed S]\n  \
          \x20            [--skew-margin-ms MS] [--clock-offset-ms MS] [--rotate-after N]\n  \
          \x20            [--no-steal] [--steal-wait-ms MS]]\n  \
          addax ckpt   inspect FILE... | verify FILE... | diff A B\n  \
@@ -102,7 +107,15 @@ fn print_help() {
          per-worker clock skew (±TTL; --clock-offset-ms MS pins it) — same\n  \
          seed, same faults, every machine. The compacted manifest stays\n  \
          byte-identical to a single-process sweep's under any kill/reclaim\n  \
-         pattern.\n\nCKPT:\n  \
+         pattern.\n\nPROBE:\n  \
+         --probe-port P (or sweep.probe_port; 0 = ephemeral) starts a loopback\n  \
+         HTTP status server over this process's runs: GET /runs, \n  \
+         GET /runs/<id>/metrics?fields=...&last=N, GET /mem (analytic footprint\n  \
+         vs measured RSS + leak detector), POST /runs/<id>/checkpoint|pause|\n  \
+         resume|abort. Control verbs ride the existing halt/checkpoint rails at\n  \
+         step boundaries, so a probed run stays byte-identical to an unprobed\n  \
+         one. --probe-linger S holds the server open after the sweep for a\n  \
+         final scrape (CI). See OPERATIONS.md for the endpoint reference.\n\nCKPT:\n  \
          inspect prints a snapshot's header (identity hash, dtype, step, eval\n  \
          cadence, tensors); verify additionally checks every chunk CRC; diff\n  \
          compares two snapshots (header fields + per-tensor element diffs).\n\n\
@@ -121,6 +134,36 @@ fn flag<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
 
 fn has(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
+}
+
+/// `--probe-port P` (0 = ephemeral), else the config's `sweep.probe_port`.
+fn probe_port(args: &[String], from_cfg: Option<u16>) -> Result<Option<u16>> {
+    match flag(args, "--probe-port") {
+        Some(s) => {
+            Ok(Some(s.parse().context("--probe-port wants a port number (0 = ephemeral)")?))
+        }
+        None => Ok(from_cfg),
+    }
+}
+
+/// `--probe-linger SECS`: how long to hold the probe server open after
+/// the work finishes, so a scraper (CI) can take a final reading.
+fn probe_linger_secs(args: &[String]) -> Result<f64> {
+    match flag(args, "--probe-linger") {
+        Some(s) => s.parse().context("--probe-linger wants seconds"),
+        None => Ok(0.0),
+    }
+}
+
+/// Hold the probe server open for `secs`; it Drop-stops when the caller
+/// returns. No-op when the plane is off.
+fn probe_linger(server: &Option<ProbeServer>, secs: f64) {
+    if let Some(srv) = server {
+        if secs > 0.0 {
+            println!("probe: lingering {secs}s on http://{}", srv.addr());
+            std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+        }
+    }
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
@@ -191,6 +234,23 @@ fn cmd_train(args: &[String]) -> Result<()> {
             dtype.label(),
         );
     }
+    // Observability plane (opt-in): a loopback HTTP status server over
+    // this one run. Pure telemetry — probes never change trained bytes.
+    let cfg_port = match cfg.f32_or("sweep.probe_port", -1.0)? {
+        p if p < 0.0 => None,
+        p => Some(p as u16),
+    };
+    let linger_secs = probe_linger_secs(args)?;
+    let mut probe_server = None;
+    if let Some(port) = probe_port(args, cfg_port)? {
+        let board = StatusBoard::new();
+        let probe = board.register(&format!("train-{model_key}-{}", task.name), tc.steps);
+        probe.set_footprint_bytes(params.storage_bytes() as f64);
+        tc.probe = Some(probe);
+        let srv = ProbeServer::start(board, port)?;
+        println!("probe: listening on http://{}", srv.addr());
+        probe_server = Some(srv);
+    }
     println!(
         "train: model={model_key} task={} optimizer={} steps={} lt={} dtype={}",
         task.name,
@@ -221,6 +281,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         std::fs::write(out, r.to_json().dump())?;
         println!("wrote {out}");
     }
+    probe_linger(&probe_server, linger_secs);
     Ok(())
 }
 
@@ -250,6 +311,20 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     }
     let sweep = SweepSpec::from_config(&cfg)?;
     let specs = sweep.expand()?;
+
+    // Observability plane (opt-in): a loopback HTTP status server over
+    // this process's runs. Pure telemetry — a probed sweep's compacted
+    // manifest is byte-identical to an unprobed one (see rust/src/obs/).
+    let linger_secs = probe_linger_secs(args)?;
+    let mut probe_server = None;
+    let mut board = None;
+    if let Some(port) = probe_port(args, sweep.probe_port)? {
+        let b = StatusBoard::new();
+        let srv = ProbeServer::start(b.clone(), port)?;
+        println!("probe: listening on http://{}", srv.addr());
+        probe_server = Some(srv);
+        board = Some(b);
+    }
 
     let opts = SweepOptions {
         budget_gb: match flag(args, "--budget-gb") {
@@ -283,6 +358,7 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
             None => 0,
         },
         dump_params: has(args, "--dump-params"),
+        probe: board,
     };
     println!(
         "sweep {:?}: {} runs over {} optimizer(s) x {} task(s) x {} seed(s), \
@@ -344,6 +420,7 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
             println!("chaos-crash: worker {worker_id} killed in {run_id} (exit 96)");
             std::process::exit(96);
         }
+        probe_linger(&probe_server, linger_secs);
         return Ok(());
     }
     for f in [
@@ -370,6 +447,7 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
             summary.halted
         );
     }
+    probe_linger(&probe_server, linger_secs);
     Ok(())
 }
 

@@ -1,4 +1,5 @@
-//! Metrics: accuracy / macro-F1, curves, timers, and JSONL run logs.
+//! Metrics: accuracy / macro-F1, curves, timers, JSONL run logs, and the
+//! bounded [`MetricsRing`] that feeds the probe server's metrics endpoint.
 
 use std::io::Write;
 use std::path::Path;
@@ -146,6 +147,66 @@ impl JsonlLogger {
     }
 }
 
+/// A bounded ring of recent telemetry rows, feeding the probe server's
+/// `GET /runs/<id>/metrics` endpoint (`obs` module).
+///
+/// The training loop pushes the same [`Json`] row it writes to the
+/// JSONL log; old rows fall off the front at capacity. `query` is the
+/// whole read API: the last `last` rows, optionally projected down to
+/// a field subset (absent fields are simply omitted from that row, so
+/// eval-only columns like `val_acc` don't force nulls into step rows).
+#[derive(Clone, Debug)]
+pub struct MetricsRing {
+    cap: usize,
+    rows: std::collections::VecDeque<Json>,
+}
+
+impl MetricsRing {
+    pub fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), rows: std::collections::VecDeque::new() }
+    }
+
+    pub fn push(&mut self, row: Json) {
+        if self.rows.len() == self.cap {
+            self.rows.pop_front();
+        }
+        self.rows.push_back(row);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// The last `last` rows in insertion order, projected to `fields`
+    /// when given (non-object rows pass through a projection untouched).
+    pub fn query(&self, fields: Option<&[String]>, last: usize) -> Vec<Json> {
+        let start = self.rows.len().saturating_sub(last);
+        self.rows
+            .iter()
+            .skip(start)
+            .map(|row| match (fields, row) {
+                (Some(keys), Json::Obj(m)) => Json::Obj(
+                    m.iter()
+                        .filter(|(k, _)| keys.iter().any(|f| f == *k))
+                        .map(|(k, v)| (k.clone(), v.clone()))
+                        .collect(),
+                ),
+                _ => row.clone(),
+            })
+            .collect()
+    }
+}
+
+impl Default for MetricsRing {
+    fn default() -> Self {
+        Self::new(256)
+    }
+}
+
 /// Write a result JSON file under `results/`.
 pub fn write_result(name: &str, value: &Json) -> Result<std::path::PathBuf> {
     let dir = std::path::PathBuf::from("results");
@@ -274,6 +335,28 @@ mod tests {
         drop(c);
         assert_eq!(std::fs::read_to_string(&path).unwrap(), "3\n");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn metrics_ring_caps_and_projects() {
+        use crate::jsonlite::obj;
+        let mut r = MetricsRing::new(4);
+        for i in 0..10usize {
+            r.push(obj(vec![("step", Json::from(i)), ("loss", Json::from(i as f64))]));
+        }
+        assert_eq!(r.len(), 4, "ring is bounded");
+        let all = r.query(None, 100);
+        assert_eq!(all.len(), 4);
+        assert_eq!(all[0].get("step").unwrap().as_usize().unwrap(), 6, "oldest surviving row");
+
+        let tail = r.query(Some(&["loss".to_string()]), 2);
+        assert_eq!(tail.len(), 2);
+        assert_eq!(tail[1].get("loss").unwrap().as_f64().unwrap(), 9.0);
+        assert!(tail[1].opt("step").is_none(), "projection drops other fields");
+
+        // Projecting a field a row lacks omits it rather than nulling.
+        let none = r.query(Some(&["val_acc".to_string()]), 1);
+        assert!(none[0].as_obj().unwrap().is_empty());
     }
 
     #[test]

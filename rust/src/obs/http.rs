@@ -1,0 +1,517 @@
+//! The embedded probe server: a deliberately tiny HTTP/1.1 subset over
+//! std's `TcpListener` — no new dependencies, no async runtime.
+//!
+//! Split for testability: [`parse_request_line`] / [`parse_query`] and
+//! [`route`] are pure functions unit-tested without sockets; only
+//! [`ProbeServer`] owns threads. The server handles one connection at a
+//! time (a probe plane serves an operator's `curl`, not traffic), reads
+//! with a 2 s timeout so a half-open client cannot wedge it, and always
+//! answers `Connection: close`.
+//!
+//! Endpoints:
+//!
+//! | verb | path | meaning |
+//! |------|------|---------|
+//! | GET  | `/runs` | every registered run's live status |
+//! | GET  | `/runs/<id>` | one run's status |
+//! | GET  | `/runs/<id>/metrics?fields=a,b&last=N` | recent telemetry rows, projected |
+//! | GET  | `/mem?slope=S` | analytic footprint vs. RSS + leak verdict |
+//! | GET  | `/healthz` | liveness |
+//! | POST | `/runs/<id>/checkpoint\|pause\|resume\|abort` | arm a control flag |
+//!
+//! Control verbs return `202 Accepted`: they arm a flag the training
+//! loop consumes at its next step boundary — nothing happens inline
+//! with the HTTP request, which is exactly why a probed run stays
+//! byte-identical to an unprobed one (see the [module docs](super)).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::mem::{self, MemSamples, DEFAULT_LEAK_SLOPE};
+use super::StatusBoard;
+use crate::jsonlite::{obj, Json};
+
+/// Default row count for `/runs/<id>/metrics` when `last` is absent.
+pub const DEFAULT_LAST: usize = 50;
+
+/// RSS sampling cadence of the background sampler thread.
+const SAMPLE_EVERY: Duration = Duration::from_millis(250);
+
+/// Decode `%XX` escapes and `+`-as-space. Invalid escapes pass through
+/// verbatim — a probe server should answer 404, not panic, on junk.
+fn percent_decode(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b'%' if i + 3 <= b.len() => {
+                // Work on raw bytes: slicing the &str here could land
+                // mid-way through a multibyte char and panic.
+                let hex = std::str::from_utf8(&b[i + 1..i + 3])
+                    .ok()
+                    .and_then(|h| u8::from_str_radix(h, 16).ok());
+                match hex {
+                    Some(v) => {
+                        out.push(v);
+                        i += 3;
+                    }
+                    None => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Parse `k=v&k2=v2` into decoded pairs. Bare keys get empty values.
+pub fn parse_query(q: &str) -> Vec<(String, String)> {
+    q.split('&')
+        .filter(|kv| !kv.is_empty())
+        .map(|kv| match kv.split_once('=') {
+            Some((k, v)) => (percent_decode(k), percent_decode(v)),
+            None => (percent_decode(kv), String::new()),
+        })
+        .collect()
+}
+
+/// Parse an HTTP/1.x request line into `(METHOD, decoded path, query)`.
+/// `None` on anything that is not a plausible request line.
+pub fn parse_request_line(line: &str) -> Option<(String, String, Vec<(String, String)>)> {
+    let mut it = line.split_whitespace();
+    let method = it.next()?.to_ascii_uppercase();
+    let target = it.next()?;
+    let version = it.next()?;
+    if !version.starts_with("HTTP/") || !target.starts_with('/') {
+        return None;
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, parse_query(q)),
+        None => (target, Vec::new()),
+    };
+    Some((method, percent_decode(path), query))
+}
+
+fn err_json(msg: &str) -> Json {
+    obj(vec![("error", Json::from(msg))])
+}
+
+fn not_found() -> (u16, Json) {
+    (404, err_json("not found"))
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    v.map(Json::from).unwrap_or(Json::Null)
+}
+
+/// The `/mem` payload: analytic model vs. measured reality, plus the
+/// least-squares leak verdict over the sampler window.
+fn mem_report(board: &StatusBoard, samples: &MemSamples, threshold: f64) -> Json {
+    let fit = samples.fit();
+    obj(vec![
+        ("rss_bytes", opt_num(mem::rss_bytes().map(|b| b as f64))),
+        ("analytic_bytes", Json::from(board.analytic_bytes())),
+        ("samples", Json::from(samples.len())),
+        ("elapsed_secs", opt_num(samples.last().map(|(t, _)| t))),
+        ("slope_bytes_per_sec", opt_num(fit.map(|(s, _)| s))),
+        ("r2", opt_num(fit.map(|(_, r2)| r2))),
+        ("threshold_bytes_per_sec", Json::from(threshold)),
+        ("leak_suspected", Json::from(samples.leak_suspected(threshold))),
+    ])
+}
+
+/// Pure router: `(method, path, query)` → `(status, JSON body)`.
+/// Everything observable about the probe API is decided here.
+pub fn route(
+    board: &StatusBoard,
+    samples: &MemSamples,
+    method: &str,
+    path: &str,
+    query: &[(String, String)],
+) -> (u16, Json) {
+    let parts: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    let q = |k: &str| query.iter().find(|(key, _)| key == k).map(|(_, v)| v.as_str());
+    match (method, parts.as_slice()) {
+        ("GET", []) | ("GET", ["healthz"]) => (200, obj(vec![("ok", Json::from(true))])),
+        ("GET", ["runs"]) => (
+            200,
+            obj(vec![("n", Json::from(board.len())), ("runs", board.runs_json())]),
+        ),
+        ("GET", ["runs", id]) => match board.get(id) {
+            Some(p) => (200, p.to_json()),
+            None => not_found(),
+        },
+        ("GET", ["runs", id, "metrics"]) => match board.get(id) {
+            Some(p) => {
+                let fields: Option<Vec<String>> = q("fields").map(|f| {
+                    f.split(',').filter(|s| !s.is_empty()).map(str::to_string).collect()
+                });
+                let last = match q("last").map(str::parse::<usize>) {
+                    Some(Ok(n)) => n,
+                    Some(Err(_)) => return (400, err_json("last must be a non-negative integer")),
+                    None => DEFAULT_LAST,
+                };
+                (
+                    200,
+                    obj(vec![
+                        ("run_id", Json::from(*id)),
+                        ("rows", p.metrics_json(fields.as_deref(), last)),
+                    ]),
+                )
+            }
+            None => not_found(),
+        },
+        ("GET", ["mem"]) => {
+            let threshold = match q("slope").map(str::parse::<f64>) {
+                Some(Ok(v)) => v,
+                Some(Err(_)) => return (400, err_json("slope must be a number (bytes/sec)")),
+                None => DEFAULT_LEAK_SLOPE,
+            };
+            (200, mem_report(board, samples, threshold))
+        }
+        ("POST", ["runs", id, verb]) => match board.get(id) {
+            Some(p) => {
+                match *verb {
+                    "checkpoint" => p.request_checkpoint(),
+                    "pause" => p.request_pause(),
+                    "resume" => p.request_resume(),
+                    "abort" => p.request_abort(),
+                    _ => return not_found(),
+                }
+                (
+                    202,
+                    obj(vec![
+                        ("ok", Json::from(true)),
+                        ("run_id", Json::from(*id)),
+                        ("verb", Json::from(*verb)),
+                    ]),
+                )
+            }
+            None => not_found(),
+        },
+        ("GET", _) | ("POST", _) => not_found(),
+        _ => (405, err_json("method not allowed")),
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "OK",
+    }
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, body: &Json) -> std::io::Result<()> {
+    let text = body.dump();
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        reason(status),
+        text.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(text.as_bytes())?;
+    stream.flush()
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    board: &StatusBoard,
+    samples: &Mutex<MemSamples>,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 1024];
+    // Read until end-of-headers; any body (control POSTs carry none
+    // worth reading) is ignored.
+    while !buf.windows(4).any(|w| w == b"\r\n\r\n") && buf.len() < 16 * 1024 {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    let text = String::from_utf8_lossy(&buf);
+    let (status, body) = match text.lines().next().and_then(parse_request_line) {
+        Some((method, path, query)) => {
+            let snap = samples.lock().unwrap_or_else(|p| p.into_inner()).clone();
+            route(board, &snap, &method, &path, &query)
+        }
+        None => (400, err_json("malformed request line")),
+    };
+    write_response(&mut stream, status, &body)
+}
+
+/// The running probe server: an accept-loop thread plus a background
+/// RSS sampler feeding the `/mem` window. Binds loopback only — this
+/// is an operator's local window, not a network service. Dropping it
+/// stops both threads (a self-connection unblocks the accept loop).
+pub struct ProbeServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    sampler: Option<JoinHandle<()>>,
+}
+
+impl ProbeServer {
+    /// Bind `127.0.0.1:port` (`0` = kernel-assigned ephemeral port;
+    /// read it back with [`ProbeServer::port`]) and start serving.
+    pub fn start(board: StatusBoard, port: u16) -> Result<ProbeServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("probe: cannot bind 127.0.0.1:{port}"))?;
+        let addr = listener.local_addr().context("probe: local_addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let samples = Arc::new(Mutex::new(MemSamples::default()));
+
+        let sampler = {
+            let stop = Arc::clone(&stop);
+            let samples = Arc::clone(&samples);
+            std::thread::spawn(move || {
+                let t0 = Instant::now();
+                while !stop.load(Ordering::Relaxed) {
+                    if let Some(rss) = mem::rss_bytes() {
+                        samples
+                            .lock()
+                            .unwrap_or_else(|p| p.into_inner())
+                            .push(t0.elapsed().as_secs_f64(), rss as f64);
+                    }
+                    // Sleep in short slices so Drop returns promptly.
+                    let mut slept = Duration::ZERO;
+                    while slept < SAMPLE_EVERY && !stop.load(Ordering::Relaxed) {
+                        let slice = Duration::from_millis(50);
+                        std::thread::sleep(slice);
+                        slept += slice;
+                    }
+                }
+            })
+        };
+
+        let accept = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if let Ok(stream) = stream {
+                        // Per-connection errors (client hung up mid-read)
+                        // must not kill the server.
+                        let _ = handle_conn(stream, &board, &samples);
+                    }
+                }
+            })
+        };
+
+        Ok(ProbeServer { addr, stop, accept: Some(accept), sampler: Some(sampler) })
+    }
+
+    pub fn port(&self) -> u16 {
+        self.addr.port()
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for ProbeServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Unblock the accept loop; it checks `stop` before serving.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.sampler.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(board: &StatusBoard, path: &str) -> (u16, Json) {
+        let (m, p, q) = parse_request_line(&format!("GET {path} HTTP/1.1")).unwrap();
+        route(board, &MemSamples::default(), &m, &p, &q)
+    }
+
+    fn post(board: &StatusBoard, path: &str) -> (u16, Json) {
+        let (m, p, q) = parse_request_line(&format!("POST {path} HTTP/1.1")).unwrap();
+        route(board, &MemSamples::default(), &m, &p, &q)
+    }
+
+    #[test]
+    fn request_line_parsing() {
+        let (m, p, q) = parse_request_line("GET /runs HTTP/1.1").unwrap();
+        assert_eq!((m.as_str(), p.as_str()), ("GET", "/runs"));
+        assert!(q.is_empty());
+
+        let (m, p, q) =
+            parse_request_line("post /runs/a%20b/metrics?fields=loss,step&last=5 HTTP/1.0")
+                .unwrap();
+        assert_eq!(m, "POST", "method is upcased");
+        assert_eq!(p, "/runs/a b/metrics", "path is percent-decoded");
+        assert_eq!(
+            q,
+            vec![
+                ("fields".to_string(), "loss,step".to_string()),
+                ("last".to_string(), "5".to_string())
+            ]
+        );
+
+        assert!(parse_request_line("").is_none());
+        assert!(parse_request_line("GET").is_none());
+        assert!(parse_request_line("GET /x FTP/9").is_none(), "not-HTTP version");
+        assert!(parse_request_line("GET runs HTTP/1.1").is_none(), "relative target");
+    }
+
+    #[test]
+    fn query_parsing_handles_bare_keys_and_escapes() {
+        let q = parse_query("a=1&b&c=x%2Cy&d=p+q&");
+        assert_eq!(
+            q,
+            vec![
+                ("a".into(), "1".into()),
+                ("b".into(), String::new()),
+                ("c".into(), "x,y".into()),
+                ("d".into(), "p q".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn router_status_codes() {
+        let board = StatusBoard::new();
+        board.register("run1", 10);
+
+        assert_eq!(get(&board, "/healthz").0, 200);
+        assert_eq!(get(&board, "/runs").0, 200);
+        assert_eq!(get(&board, "/runs/run1").0, 200);
+        assert_eq!(get(&board, "/runs/ghost").0, 404);
+        assert_eq!(get(&board, "/nope").0, 404);
+        assert_eq!(get(&board, "/runs/run1/metrics?last=zebra").0, 400);
+        assert_eq!(get(&board, "/mem?slope=fast").0, 400);
+        assert_eq!(post(&board, "/runs/run1/dance").0, 404);
+        assert_eq!(post(&board, "/runs/ghost/abort").0, 404);
+
+        let (m, p, q) = parse_request_line("DELETE /runs HTTP/1.1").unwrap();
+        assert_eq!(route(&board, &MemSamples::default(), &m, &p, &q).0, 405);
+    }
+
+    #[test]
+    fn control_verbs_arm_flags() {
+        let board = StatusBoard::new();
+        let probe = board.register("r", 10);
+
+        assert_eq!(post(&board, "/runs/r/checkpoint").0, 202);
+        assert!(probe.take_checkpoint_request());
+        assert_eq!(post(&board, "/runs/r/pause").0, 202);
+        assert!(probe.paused());
+        assert_eq!(post(&board, "/runs/r/resume").0, 202);
+        assert!(!probe.paused());
+        assert_eq!(post(&board, "/runs/r/abort").0, 202);
+        assert!(probe.abort_requested());
+    }
+
+    #[test]
+    fn metrics_projection_and_last() {
+        let board = StatusBoard::new();
+        let probe = board.register("r", 10);
+        for i in 0..20usize {
+            probe.record_step(
+                i,
+                i as f64,
+                0.0,
+                obj(vec![
+                    ("step", Json::from(i)),
+                    ("loss", Json::from(i as f64)),
+                    ("grad_norm", Json::from(1.0)),
+                ]),
+            );
+        }
+        let (code, body) = get(&board, "/runs/r/metrics?fields=step,loss&last=3");
+        assert_eq!(code, 200);
+        let rows = body.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].get("step").unwrap().as_usize().unwrap(), 17);
+        assert!(rows[0].opt("grad_norm").is_none(), "projection drops unrequested fields");
+        assert_eq!(rows[2].get("loss").unwrap().as_f64().unwrap(), 19.0);
+    }
+
+    #[test]
+    fn mem_endpoint_reports_threshold_override() {
+        let board = StatusBoard::new();
+        board.register("r", 10).set_footprint_bytes(123.0);
+        let (code, body) = get(&board, "/mem?slope=42.5");
+        assert_eq!(code, 200);
+        assert_eq!(body.get("threshold_bytes_per_sec").unwrap().as_f64().unwrap(), 42.5);
+        assert_eq!(body.get("analytic_bytes").unwrap().as_f64().unwrap(), 123.0);
+        assert_eq!(body.get("leak_suspected").unwrap().as_bool().unwrap(), false);
+    }
+
+    #[test]
+    fn live_server_round_trip() {
+        let board = StatusBoard::new();
+        let probe = board.register("live-run", 40);
+        probe.record_step(
+            2,
+            0.25,
+            0.5,
+            obj(vec![("step", Json::from(2usize)), ("loss", Json::from(0.25))]),
+        );
+        let server = ProbeServer::start(board.clone(), 0).unwrap();
+        assert_ne!(server.port(), 0, "ephemeral port resolved");
+
+        let fetch = |req: &str| -> (String, Json) {
+            let mut s = TcpStream::connect(server.addr()).unwrap();
+            s.write_all(req.as_bytes()).unwrap();
+            let mut resp = String::new();
+            s.read_to_string(&mut resp).unwrap();
+            let (head, body) = resp.split_once("\r\n\r\n").expect("header/body split");
+            (head.lines().next().unwrap().to_string(), Json::parse(body).unwrap())
+        };
+
+        let (status, body) = fetch("GET /runs HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert!(status.contains("200"), "{status}");
+        assert_eq!(body.get("n").unwrap().as_usize().unwrap(), 1);
+        let run = &body.get("runs").unwrap().as_arr().unwrap()[0];
+        assert_eq!(run.get("run_id").unwrap().as_str().unwrap(), "live-run");
+        assert_eq!(run.get("step").unwrap().as_usize().unwrap(), 2);
+
+        let (status, _) = fetch("POST /runs/live-run/abort HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert!(status.contains("202"), "{status}");
+        assert!(probe.abort_requested(), "verb armed through the real socket path");
+
+        let (status, body) = fetch("GET /mem HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert!(status.contains("200"), "{status}");
+        assert!(body.opt("rss_bytes").is_some());
+
+        let (status, _) = fetch("BOGUS-LINE\r\n\r\n");
+        assert!(status.contains("400"), "{status}");
+
+        drop(server); // must join cleanly, not hang
+    }
+}

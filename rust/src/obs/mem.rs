@@ -1,0 +1,207 @@
+//! Memory-side observability: actual RSS vs. the analytic model, plus a
+//! linear-growth leak detector.
+//!
+//! The paper's central claim is a *memory* claim — Addax fits where SGD
+//! OOMs — and `memory::footprint` is the analytic model the scheduler
+//! prices runs with. This file supplies the other half of the
+//! comparison: what the process is *actually* resident at, sampled from
+//! `/proc/self/statm` (Linux; [`rss_bytes`] degrades to `None` on other
+//! platforms, and the `/mem` endpoint reports `null` rather than lying).
+//!
+//! The leak detector is deliberately simple and fully deterministic
+//! given its samples: an ordinary least-squares line through the
+//! `(elapsed secs, rss bytes)` window. A leak is *suspected* — never
+//! proven — when the fitted slope exceeds a threshold in bytes/sec AND
+//! the fit actually explains the data (`r² ≥ 0.5`), so a noisy flat
+//! series with one reallocation spike does not alarm. Thresholds and
+//! semantics are documented in `EXPERIMENTS.md` §Observability.
+
+use std::collections::VecDeque;
+
+/// `AT_PAGESZ` from the ELF auxiliary vector (`/proc/self/auxv` entry
+/// type 6): the page size `/proc/self/statm` counts in. Falls back to
+/// 4096 when auxv is unreadable (non-Linux, locked-down procfs).
+fn page_size() -> u64 {
+    let Ok(raw) = std::fs::read("/proc/self/auxv") else {
+        return 4096;
+    };
+    let word = std::mem::size_of::<usize>();
+    for pair in raw.chunks_exact(2 * word) {
+        let mut k = [0u8; 8];
+        let mut v = [0u8; 8];
+        k[..word].copy_from_slice(&pair[..word]);
+        v[..word].copy_from_slice(&pair[word..]);
+        if u64::from_le_bytes(k) == 6 {
+            let val = u64::from_le_bytes(v);
+            if val > 0 {
+                return val;
+            }
+        }
+    }
+    4096
+}
+
+/// Resident set size of this process in bytes, from the second field of
+/// `/proc/self/statm` (resident pages × page size). `None` where procfs
+/// is absent — callers must surface "unknown", not zero.
+pub fn rss_bytes() -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let pages: u64 = text.split_whitespace().nth(1)?.parse().ok()?;
+    Some(pages * page_size())
+}
+
+/// Default leak-detector threshold: 1 MiB/min of *sustained* linear
+/// growth. Training allocates in steps (params, snapshots, eval
+/// buffers) and settles; a steady upward line across the whole sample
+/// window is the leak shape this flags.
+pub const DEFAULT_LEAK_SLOPE: f64 = (1 << 20) as f64 / 60.0;
+
+/// Minimum samples before the detector will venture an opinion — below
+/// this a "slope" is an artifact of two points and a ruler.
+pub const MIN_LEAK_SAMPLES: usize = 8;
+
+/// A bounded window of `(elapsed_secs, rss_bytes)` samples with the
+/// least-squares machinery for the `/mem` endpoint.
+///
+/// Deterministic in its inputs: tests feed synthetic series and assert
+/// exact verdicts; the live sampler thread feeds [`rss_bytes`] readings.
+#[derive(Clone, Debug)]
+pub struct MemSamples {
+    cap: usize,
+    pts: VecDeque<(f64, f64)>,
+}
+
+impl MemSamples {
+    /// Window of at most `cap` samples (oldest evicted first).
+    pub fn new(cap: usize) -> Self {
+        Self { cap: cap.max(2), pts: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, elapsed_secs: f64, rss_bytes: f64) {
+        if self.pts.len() == self.cap {
+            self.pts.pop_front();
+        }
+        self.pts.push_back((elapsed_secs, rss_bytes));
+    }
+
+    pub fn len(&self) -> usize {
+        self.pts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pts.is_empty()
+    }
+
+    /// Latest sample, if any.
+    pub fn last(&self) -> Option<(f64, f64)> {
+        self.pts.back().copied()
+    }
+
+    /// Ordinary least-squares `(slope bytes/sec, r²)` over the window;
+    /// `None` below [`MIN_LEAK_SAMPLES`] or on a degenerate time axis.
+    pub fn fit(&self) -> Option<(f64, f64)> {
+        let n = self.pts.len();
+        if n < MIN_LEAK_SAMPLES {
+            return None;
+        }
+        let nf = n as f64;
+        let (mut sx, mut sy) = (0.0, 0.0);
+        for &(x, y) in &self.pts {
+            sx += x;
+            sy += y;
+        }
+        let (mx, my) = (sx / nf, sy / nf);
+        let (mut sxx, mut sxy, mut syy) = (0.0, 0.0, 0.0);
+        for &(x, y) in &self.pts {
+            sxx += (x - mx) * (x - mx);
+            sxy += (x - mx) * (y - my);
+            syy += (y - my) * (y - my);
+        }
+        if sxx <= 0.0 {
+            return None; // all samples at one instant
+        }
+        let slope = sxy / sxx;
+        // r² = explained/total variance; a perfectly flat series has
+        // syy == 0 and *no* leak shape, so report a zero fit quality.
+        let r2 = if syy <= 0.0 { 0.0 } else { (sxy * sxy) / (sxx * syy) };
+        Some((slope, r2))
+    }
+
+    /// The verdict: sustained growth above `slope_threshold` bytes/sec
+    /// with a fit that explains at least half the variance. `false`
+    /// whenever the window is too small to judge.
+    pub fn leak_suspected(&self, slope_threshold: f64) -> bool {
+        match self.fit() {
+            Some((slope, r2)) => slope > slope_threshold && r2 >= 0.5,
+            None => false,
+        }
+    }
+}
+
+impl Default for MemSamples {
+    fn default() -> Self {
+        Self::new(512)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(f: impl Fn(usize) -> f64) -> MemSamples {
+        let mut m = MemSamples::new(64);
+        for i in 0..32 {
+            m.push(i as f64, f(i));
+        }
+        m
+    }
+
+    #[test]
+    fn rss_is_readable_on_linux() {
+        // CI runs on Linux; a non-Linux dev box may legitimately get None.
+        if std::path::Path::new("/proc/self/statm").exists() {
+            let rss = rss_bytes().expect("statm present but unreadable");
+            assert!(rss > 1 << 20, "a live Rust process is > 1 MiB resident, got {rss}");
+        }
+    }
+
+    #[test]
+    fn linear_growth_is_flagged() {
+        // 1 MiB/sec of perfectly linear growth: slope ≈ 2^20, r² = 1.
+        let m = filled(|i| 1e8 + (i as f64) * (1 << 20) as f64);
+        let (slope, r2) = m.fit().unwrap();
+        assert!((slope - (1 << 20) as f64).abs() < 1.0, "slope {slope}");
+        assert!(r2 > 0.999);
+        assert!(m.leak_suspected(DEFAULT_LEAK_SLOPE));
+    }
+
+    #[test]
+    fn flat_and_noisy_series_do_not_alarm() {
+        let flat = filled(|_| 2e8);
+        assert!(!flat.leak_suspected(DEFAULT_LEAK_SLOPE), "flat series is not a leak");
+        // A transient spike (one eval buffer, freed next sample) is not
+        // *sustained* linear growth — the fit explains almost none of it.
+        let spike = filled(|i| if i == 15 { 4e8 } else { 2e8 });
+        assert!(!spike.leak_suspected(DEFAULT_LEAK_SLOPE), "single spike is not a leak");
+    }
+
+    #[test]
+    fn too_few_samples_abstain() {
+        let mut m = MemSamples::new(64);
+        for i in 0..(MIN_LEAK_SAMPLES - 1) {
+            m.push(i as f64, (i as f64) * 1e9); // wildly leaky, but unjudgeable
+        }
+        assert!(m.fit().is_none());
+        assert!(!m.leak_suspected(0.0));
+    }
+
+    #[test]
+    fn window_is_bounded_and_degenerate_time_axis_is_safe() {
+        let mut m = MemSamples::new(4);
+        for i in 0..100 {
+            m.push(0.0, i as f64); // same instant every time
+        }
+        assert_eq!(m.len(), 4);
+        assert!(m.fit().is_none(), "zero time variance cannot fit a slope");
+    }
+}

@@ -1,0 +1,434 @@
+//! Live observability plane: an opt-in, in-process status registry plus
+//! the embedded HTTP probe server that exposes it.
+//!
+//! Today the only window into a running sweep is the JSONL side files
+//! *after* it finishes. This module adds a live one — without touching
+//! a single deterministic byte:
+//!
+//! * [`StatusBoard`] — a shared registry of per-run [`RunProbe`]s. The
+//!   sweep worker registers runs, the coordinator's training loop
+//!   updates them at step boundaries, and the probe server reads them.
+//! * [`RunProbe`] — one run's live status (step, loss/val/`zo_loss`
+//!   tails, lease token/seq, `resumed_from_step`, stolen-shard count)
+//!   plus a bounded [`MetricsRing`] of recent telemetry rows, plus the
+//!   three control flags (`checkpoint` / `pause` / `abort`) the HTTP
+//!   control verbs set.
+//! * [`http::ProbeServer`] — a tiny std-`TcpListener` HTTP/1.1 server
+//!   (`--probe-port`; no new dependencies) serving `GET /runs`,
+//!   `GET /runs/<id>/metrics`, `GET /mem` and
+//!   `POST /runs/<id>/checkpoint|pause|resume|abort`.
+//! * [`mem`] — actual RSS from `/proc/self/statm` vs. the analytic
+//!   `memory::footprint` pricing, with a least-squares leak detector.
+//!
+//! ## Invariant: probes cannot move a deterministic byte
+//!
+//! Everything the probe plane *writes* is a control flag consumed at a
+//! step boundary, and every consumption routes through machinery that
+//! already preserves byte-identity:
+//!
+//! * `checkpoint` requests one extra snapshot — snapshots record the
+//!   trajectory, they never steer it;
+//! * `pause` parks the training loop between steps — pure wall-clock,
+//!   which lives in the times side file, outside the manifest contract;
+//! * `abort` rides the exact `halt_after` rail: snapshot first, then a
+//!   typed [`Halted`] error, and a later resume finishes the run
+//!   byte-identically (`tests/probe_server.rs` proves the compacted
+//!   manifest `cmp`-matches a probe-free control).
+//!
+//! Everything the probe plane *reads* is a copy taken at a step
+//! boundary under a mutex the training loop holds only long enough to
+//! clone small scalars. No probe read or HTTP request appears anywhere
+//! in a gradient, a sample draw, or a manifest row.
+//!
+//! [`Halted`]: crate::coordinator::Halted
+//! [`MetricsRing`]: crate::metrics::MetricsRing
+
+pub mod http;
+pub mod mem;
+
+pub use http::ProbeServer;
+pub use mem::{rss_bytes, MemSamples};
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::jsonlite::{obj, Json};
+use crate::metrics::MetricsRing;
+
+/// Lifecycle phase of a probed run, as shown in `GET /runs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunPhase {
+    /// Registered but not yet claimed/executing in this process.
+    Pending,
+    Running,
+    /// Completed: its manifest row is durable (or committed by someone).
+    Done,
+    /// Preempted via `halt_after`, chaos, or a probe `abort` — it has
+    /// checkpoints, not a row; a resume sweep finishes it.
+    Halted,
+}
+
+impl RunPhase {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RunPhase::Pending => "pending",
+            RunPhase::Running => "running",
+            RunPhase::Done => "done",
+            RunPhase::Halted => "halted",
+        }
+    }
+}
+
+/// Mutable status scalars, updated at step boundaries under one mutex.
+#[derive(Debug)]
+struct RunState {
+    phase: RunPhase,
+    step: usize,
+    steps_total: usize,
+    loss: Option<f64>,
+    zo_loss: Option<f64>,
+    val_acc: Option<f64>,
+    best_val: Option<f64>,
+    resumed_from_step: Option<usize>,
+    /// Probe shards of this run computed by thief workers (fleet).
+    stolen: u64,
+    /// Analytic `memory::footprint` pricing for this run, in bytes.
+    footprint_bytes: Option<f64>,
+    /// Fleet lease identity: `(worker, fencing token)`.
+    lease: Option<(String, u64)>,
+}
+
+/// One run's live status + control flags. Shared as an `Arc` between
+/// the sweep worker (writes lease/steal fields), the coordinator's
+/// training loop (writes step telemetry, consumes control flags) and
+/// the probe server (reads everything, sets control flags).
+#[derive(Debug)]
+pub struct RunProbe {
+    pub run_id: String,
+    state: Mutex<RunState>,
+    ring: Mutex<MetricsRing>,
+    /// Renewal sequence of the current lease heartbeat (fleet).
+    lease_seq: AtomicU64,
+    ckpt_req: AtomicBool,
+    pause_req: AtomicBool,
+    abort_req: AtomicBool,
+}
+
+/// Recent-row window per run: large enough to cover several eval
+/// cadences of the smoke grids, small enough to be memory-noise.
+const RING_CAP: usize = 256;
+
+impl RunProbe {
+    fn new(run_id: &str, steps_total: usize) -> Self {
+        Self {
+            run_id: run_id.to_string(),
+            state: Mutex::new(RunState {
+                phase: RunPhase::Pending,
+                step: 0,
+                steps_total,
+                loss: None,
+                zo_loss: None,
+                val_acc: None,
+                best_val: None,
+                resumed_from_step: None,
+                stolen: 0,
+                footprint_bytes: None,
+                lease: None,
+            }),
+            ring: Mutex::new(MetricsRing::new(RING_CAP)),
+            lease_seq: AtomicU64::new(0),
+            ckpt_req: AtomicBool::new(false),
+            pause_req: AtomicBool::new(false),
+            abort_req: AtomicBool::new(false),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, RunState> {
+        // A poisoned mutex means a panic mid-update; status telemetry
+        // must keep serving rather than cascade the panic into the
+        // probe server thread.
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    // ---- writers (sweep worker / coordinator side) ---------------------
+
+    pub fn set_footprint_bytes(&self, bytes: f64) {
+        self.lock().footprint_bytes = Some(bytes);
+    }
+
+    pub fn set_lease(&self, worker: &str, token: u64) {
+        self.lock().lease = Some((worker.to_string(), token));
+        self.lease_seq.store(0, Ordering::Relaxed);
+    }
+
+    /// Heartbeat renewals bump this — `/runs` shows a live holder's
+    /// logical clock advancing, which is exactly what a reclaim
+    /// confirmation looks for.
+    pub fn set_lease_seq(&self, seq: u64) {
+        self.lease_seq.store(seq, Ordering::Relaxed);
+    }
+
+    pub fn set_running(&self, steps_total: usize) {
+        let mut s = self.lock();
+        s.phase = RunPhase::Running;
+        s.steps_total = steps_total;
+    }
+
+    pub fn set_resumed_from(&self, step: usize) {
+        let mut s = self.lock();
+        s.resumed_from_step = Some(step);
+        s.step = step;
+    }
+
+    pub fn set_stolen(&self, shards: u64) {
+        self.lock().stolen = shards;
+    }
+
+    pub fn set_done(&self) {
+        self.lock().phase = RunPhase::Done;
+    }
+
+    pub fn set_halted(&self, at_step: usize) {
+        let mut s = self.lock();
+        s.phase = RunPhase::Halted;
+        s.step = at_step;
+    }
+
+    /// Step-boundary telemetry from the training loop: update the
+    /// scalars and push the same row the JSONL logger writes into the
+    /// ring (one lock each, scalars only — the loop never blocks on a
+    /// slow HTTP reader).
+    pub fn record_step(&self, step: usize, loss: f64, zo_loss: f64, row: Json) {
+        {
+            let mut s = self.lock();
+            s.phase = RunPhase::Running;
+            s.step = step;
+            s.loss = Some(loss);
+            s.zo_loss = Some(zo_loss);
+        }
+        self.ring.lock().unwrap_or_else(|p| p.into_inner()).push(row);
+    }
+
+    pub fn record_eval(&self, step: usize, val_acc: f64, best_val: f64, row: Json) {
+        {
+            let mut s = self.lock();
+            s.step = step;
+            s.val_acc = Some(val_acc);
+            s.best_val = Some(best_val);
+        }
+        self.ring.lock().unwrap_or_else(|p| p.into_inner()).push(row);
+    }
+
+    // ---- control plane (HTTP side sets, training loop consumes) --------
+
+    pub fn request_checkpoint(&self) {
+        self.ckpt_req.store(true, Ordering::Relaxed);
+    }
+
+    pub fn request_pause(&self) {
+        self.pause_req.store(true, Ordering::Relaxed);
+    }
+
+    pub fn request_resume(&self) {
+        self.pause_req.store(false, Ordering::Relaxed);
+    }
+
+    pub fn request_abort(&self) {
+        self.abort_req.store(true, Ordering::Relaxed);
+    }
+
+    /// Consume a pending checkpoint request (one snapshot per request).
+    pub fn take_checkpoint_request(&self) -> bool {
+        self.ckpt_req.swap(false, Ordering::Relaxed)
+    }
+
+    pub fn paused(&self) -> bool {
+        self.pause_req.load(Ordering::Relaxed)
+    }
+
+    pub fn abort_requested(&self) -> bool {
+        self.abort_req.load(Ordering::Relaxed)
+    }
+
+    /// Consume a pending abort request.
+    pub fn take_abort_request(&self) -> bool {
+        self.abort_req.swap(false, Ordering::Relaxed)
+    }
+
+    // ---- readers (probe server side) -----------------------------------
+
+    /// The `GET /runs` entry for this run. Numbers that can be absent
+    /// (no step yet, no eval yet, no lease) are `null`, never zero —
+    /// an operator must be able to tell "not measured" from "0.0".
+    pub fn to_json(&self) -> Json {
+        let s = self.lock();
+        let opt_num = |v: Option<f64>| v.map(Json::from).unwrap_or(Json::Null);
+        let lease = match &s.lease {
+            Some((worker, token)) => obj(vec![
+                ("seq", Json::from(self.lease_seq.load(Ordering::Relaxed) as usize)),
+                ("token", Json::from(*token as usize)),
+                ("worker", Json::from(worker.clone())),
+            ]),
+            None => Json::Null,
+        };
+        let tail = |key: &str| {
+            let rows = self
+                .ring
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .query(Some(&[key.to_string()]), 5);
+            Json::Arr(
+                rows.into_iter().filter_map(|r| r.opt(key).cloned()).collect(),
+            )
+        };
+        obj(vec![
+            ("run_id", Json::from(self.run_id.clone())),
+            ("phase", Json::from(self.lock_free_phase_label(&s))),
+            ("step", Json::from(s.step)),
+            ("steps_total", Json::from(s.steps_total)),
+            ("loss", opt_num(s.loss)),
+            ("loss_tail", tail("loss")),
+            ("zo_loss", opt_num(s.zo_loss)),
+            ("val_acc", opt_num(s.val_acc)),
+            ("val_tail", tail("val_acc")),
+            ("best_val", opt_num(s.best_val)),
+            (
+                "resumed_from_step",
+                s.resumed_from_step.map(Json::from).unwrap_or(Json::Null),
+            ),
+            ("stolen", Json::from(s.stolen as usize)),
+            ("footprint_bytes", opt_num(s.footprint_bytes)),
+            ("lease", lease),
+        ])
+    }
+
+    fn lock_free_phase_label(&self, s: &RunState) -> &'static str {
+        if s.phase == RunPhase::Running && self.paused() {
+            "paused"
+        } else {
+            s.phase.label()
+        }
+    }
+
+    /// `GET /runs/<id>/metrics` — the last `last` ring rows, projected
+    /// to `fields` when given.
+    pub fn metrics_json(&self, fields: Option<&[String]>, last: usize) -> Json {
+        Json::Arr(self.ring.lock().unwrap_or_else(|p| p.into_inner()).query(fields, last))
+    }
+
+    /// Analytic footprint in bytes, if the scheduler priced this run.
+    pub fn footprint_bytes(&self) -> Option<f64> {
+        self.lock().footprint_bytes
+    }
+}
+
+/// The shared run registry: cheap to clone (an `Arc`), safe to share
+/// between the sweep worker threads and the probe server thread.
+#[derive(Clone, Debug, Default)]
+pub struct StatusBoard {
+    runs: Arc<Mutex<BTreeMap<String, Arc<RunProbe>>>>,
+}
+
+impl StatusBoard {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Arc<RunProbe>>> {
+        self.runs.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Get-or-insert the probe for `run_id`. Re-registering (a fleet
+    /// reclaim, a resume sweep) returns the *same* probe, so control
+    /// flags set while a run was between sessions are honored at its
+    /// next step boundary.
+    pub fn register(&self, run_id: &str, steps_total: usize) -> Arc<RunProbe> {
+        Arc::clone(
+            self.lock()
+                .entry(run_id.to_string())
+                .or_insert_with(|| Arc::new(RunProbe::new(run_id, steps_total))),
+        )
+    }
+
+    pub fn get(&self, run_id: &str) -> Option<Arc<RunProbe>> {
+        self.lock().get(run_id).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    /// The `GET /runs` payload: every registered run, in run-id order.
+    pub fn runs_json(&self) -> Json {
+        let probes: Vec<Arc<RunProbe>> = self.lock().values().cloned().collect();
+        Json::Arr(probes.iter().map(|p| p.to_json()).collect())
+    }
+
+    /// Sum of the analytic footprints of registered runs (for `/mem`).
+    pub fn analytic_bytes(&self) -> f64 {
+        let probes: Vec<Arc<RunProbe>> = self.lock().values().cloned().collect();
+        probes.iter().filter_map(|p| p.footprint_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_is_get_or_insert_and_flags_survive() {
+        let board = StatusBoard::new();
+        let a = board.register("r1", 40);
+        a.request_abort();
+        let b = board.register("r1", 40);
+        assert!(Arc::ptr_eq(&a, &b), "re-registration must return the same probe");
+        assert!(b.take_abort_request(), "flags set between sessions survive");
+        assert!(!b.take_abort_request(), "take consumes");
+        assert_eq!(board.len(), 1);
+    }
+
+    #[test]
+    fn status_json_distinguishes_null_from_zero() {
+        let board = StatusBoard::new();
+        let p = board.register("r1", 10);
+        let v = p.to_json();
+        assert_eq!(v.get("loss").unwrap(), &Json::Null);
+        assert_eq!(v.get("lease").unwrap(), &Json::Null);
+        assert_eq!(v.get("phase").unwrap().as_str().unwrap(), "pending");
+
+        p.set_running(10);
+        p.record_step(
+            3,
+            0.5,
+            0.0,
+            obj(vec![("step", Json::from(3usize)), ("loss", Json::from(0.5))]),
+        );
+        p.set_lease("w0", 2);
+        p.set_lease_seq(7);
+        let v = p.to_json();
+        assert_eq!(v.get("step").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(v.get("loss").unwrap().as_f64().unwrap(), 0.5);
+        let lease = v.get("lease").unwrap();
+        assert_eq!(lease.get("worker").unwrap().as_str().unwrap(), "w0");
+        assert_eq!(lease.get("token").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(lease.get("seq").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(v.get("loss_tail").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn pause_flag_shows_as_paused_phase() {
+        let p = StatusBoard::new().register("r", 5);
+        p.set_running(5);
+        assert_eq!(p.to_json().get("phase").unwrap().as_str().unwrap(), "running");
+        p.request_pause();
+        assert!(p.paused());
+        assert_eq!(p.to_json().get("phase").unwrap().as_str().unwrap(), "paused");
+        p.request_resume();
+        assert!(!p.paused());
+    }
+}

@@ -418,6 +418,107 @@ impl SweepManifest {
             .with_context(|| format!("appending to {}", path.display()))
     }
 
+    /// GC the times side file: keep every event row (the sweep's
+    /// lifecycle history) plus the *last* timing row per run (matching
+    /// [`load_times`]'s last-wins read); superseded timings and torn
+    /// lines are dropped. No-op below `min_lines` (clamped to ≥ 1) or
+    /// when already compact; returns `true` only when a rotation
+    /// actually replaced the file.
+    ///
+    /// Same discipline — and same admitted race — as `lease::rotate`:
+    /// unique tmp + `sync_data` + a pre-rename length re-check + atomic
+    /// rename + directory fsync. An append landing between the re-check
+    /// and the rename is lost, which is why callers only rotate at
+    /// quiesced points (sweep drain, post-compaction, right after a
+    /// successful lease-ledger rotation — which itself proves every
+    /// lease was just released). [`load_times`] results are invariant
+    /// under rotation.
+    ///
+    /// [`load_times`]: SweepManifest::load_times
+    pub fn rotate_times(manifest: &Path, min_lines: usize) -> Result<bool> {
+        let path = Self::times_path(manifest);
+        let Ok(meta) = std::fs::metadata(&path) else {
+            return Ok(false); // no side file yet — nothing to GC
+        };
+        let len_before = meta.len();
+        let lines = match ioutil::read_lossy_lines(&path) {
+            Ok(l) => l,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(false),
+            Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+        };
+        let n_lines = lines.iter().filter(|l| !l.trim().is_empty()).count();
+        if n_lines < min_lines.max(1) {
+            return Ok(false);
+        }
+        let is_timing = |v: &Json| {
+            v.opt("run_id").is_some()
+                && v.opt("total_secs").is_some()
+                && v.opt("time_to_best_secs").is_some()
+        };
+        let run_id_of =
+            |v: &Json| v.opt("run_id").and_then(|j| j.as_str().ok().map(str::to_string));
+        let parsed: Vec<Option<Json>> = lines.iter().map(|l| Json::parse(l).ok()).collect();
+        let mut last_timing: BTreeMap<String, usize> = BTreeMap::new();
+        for (i, v) in parsed.iter().enumerate() {
+            if let Some(v) = v {
+                if is_timing(v) {
+                    if let Some(id) = run_id_of(v) {
+                        last_timing.insert(id, i);
+                    }
+                }
+            }
+        }
+        let mut out = String::new();
+        let mut kept = 0usize;
+        for (i, line) in lines.iter().enumerate() {
+            let Some(v) = &parsed[i] else { continue }; // torn/garbage line
+            let keep = if is_timing(v) {
+                run_id_of(v).is_some_and(|id| last_timing.get(&id) == Some(&i))
+            } else {
+                // Events — and any parseable row of an unknown future
+                // shape — survive: rotation must never destroy data it
+                // does not understand.
+                true
+            };
+            if keep {
+                out.push_str(line);
+                out.push('\n');
+                kept += 1;
+            }
+        }
+        if kept >= n_lines {
+            return Ok(false); // already compact
+        }
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let tmp = path.with_extension(format!(
+            "jsonl.rot.{}.{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(out.as_bytes())
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            f.sync_data().with_context(|| format!("syncing {}", tmp.display()))?;
+        }
+        // Length re-check narrows the lost-append window: if anyone
+        // appended since the read, back off — a later quiesced point
+        // will retry.
+        let len_now = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        if len_now != len_before {
+            std::fs::remove_file(&tmp).ok();
+            return Ok(false);
+        }
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming {} into place", tmp.display()))?;
+        if let Some(dir) = path.parent() {
+            ioutil::fsync_dir(dir).with_context(|| format!("fsyncing {}", dir.display()))?;
+        }
+        Ok(true)
+    }
+
     /// Load timings: run id → (total, time-to-best); empty when absent.
     /// Torn lines (even ones tearing a multi-byte character — a worker
     /// killed mid-telemetry-append) and event rows are skipped; they
@@ -611,6 +712,52 @@ mod tests {
         assert!(text.contains("\"event\":\"reclaim\""), "{text}");
         // events live in the side file, never in the manifest
         assert!(SweepManifest::load(&path).unwrap().is_empty());
+        std::fs::remove_file(&times).ok();
+    }
+
+    #[test]
+    fn rotate_times_keeps_events_and_last_timing_per_run() {
+        let dir = tmpdir("rot_times");
+        let path = dir.join("m.jsonl");
+        let times = SweepManifest::times_path(&path);
+        std::fs::remove_file(&times).ok();
+        // Below threshold → untouched, even with GC-able content.
+        SweepManifest::append_time(&path, "a", 1.0, 0.5, None, None).unwrap();
+        SweepManifest::append_time(&path, "a", 2.0, 1.5, Some(7), None).unwrap();
+        assert!(!SweepManifest::rotate_times(&path, 100).unwrap());
+        assert_eq!(std::fs::read_to_string(&times).unwrap().lines().count(), 2);
+        // Events interleaved with superseded timings plus a torn tail.
+        SweepManifest::append_event(&path, "a", "reclaim", "w1 reclaimed lease (token 2)")
+            .unwrap();
+        SweepManifest::append_time(&path, "b", 3.0, 2.5, None, None).unwrap();
+        SweepManifest::append_time(&path, "a", 4.0, 3.5, None, None).unwrap();
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&times).unwrap();
+            write!(f, "{{\"run_id\":\"torn").unwrap();
+        }
+        let before = SweepManifest::load_times(&path);
+        assert!(SweepManifest::rotate_times(&path, 1).unwrap());
+        assert_eq!(
+            SweepManifest::load_times(&path),
+            before,
+            "load_times must be invariant under rotation"
+        );
+        let text = std::fs::read_to_string(&times).unwrap();
+        assert_eq!(text.lines().count(), 3, "{text}"); // event + last a + b
+        assert!(text.contains("\"event\":\"reclaim\""), "{text}");
+        assert!(text.contains("\"total_secs\":4"), "{text}");
+        assert!(!text.contains("\"total_secs\":1}"), "superseded row must be GC'd: {text}");
+        assert!(!text.contains("\"total_secs\":2}"), "superseded row must be GC'd: {text}");
+        assert!(!text.contains("torn"), "{text}");
+        // Already compact → no-op rotation (and no tmp debris).
+        assert!(!SweepManifest::rotate_times(&path, 1).unwrap());
+        let debris: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().contains(".rot."))
+            .collect();
+        assert!(debris.is_empty(), "{debris:?}");
         std::fs::remove_file(&times).ok();
     }
 

@@ -301,6 +301,11 @@ pub struct SweepSpec {
     /// logical quiet-holder confirmation. Like the TTL, not part of run
     /// identity.
     pub skew_margin_ms: u64,
+    /// Probe-server port (`[sweep] probe_port`; `--probe-port`
+    /// overrides). `None` (the default) keeps the observability plane
+    /// off; `Some(0)` binds an ephemeral port. Pure telemetry — like
+    /// the TTL, never part of run identity.
+    pub probe_port: Option<u16>,
 }
 
 impl SweepSpec {
@@ -330,6 +335,14 @@ impl SweepSpec {
             lt_auto: cfg.bool_or("sweep.lt_auto", true)?,
             lease_ttl_secs: cfg.f32_or("sweep.lease_ttl_secs", 30.0)? as f64,
             skew_margin_ms: cfg.f32_or("sweep.skew_margin_ms", 250.0)? as u64,
+            // Negative sentinel = absent: the config layer has no
+            // Option-valued accessor, and 0 is a meaningful port
+            // ("pick an ephemeral one").
+            probe_port: match cfg.f32_or("sweep.probe_port", -1.0)? {
+                p if p < 0.0 => None,
+                p if p <= u16::MAX as f32 => Some(p as u16),
+                p => bail!("sweep.probe_port {p} out of range (0-65535)"),
+            },
         };
         // Fail early on anything the executor would reject mid-sweep.
         geometry::by_name(&spec.geometry)
@@ -467,6 +480,18 @@ mod tests {
         // train seeds are spread (derive_seed over distinct ids)
         let seeds: std::collections::BTreeSet<_> = a.iter().map(|s| s.train_seed).collect();
         assert_eq!(seeds.len(), a.len());
+    }
+
+    #[test]
+    fn probe_port_knob_defaults_off_and_validates_range() {
+        assert_eq!(smoke().probe_port, None, "observability is opt-in");
+        let on = |line: &str| {
+            Config::parse(&format!("[sweep]\nbackend = \"mock\"\n{line}"))
+                .and_then(|c| SweepSpec::from_config(&c))
+        };
+        assert_eq!(on("probe_port = 0").unwrap().probe_port, Some(0), "0 = ephemeral");
+        assert_eq!(on("probe_port = 8791").unwrap().probe_port, Some(8791));
+        assert!(on("probe_port = 70000").is_err(), "beyond u16 must fail early");
     }
 
     #[test]

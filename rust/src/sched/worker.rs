@@ -25,6 +25,13 @@
 //! rows carry no wall-clock — so the compacted manifest is byte-identical
 //! for the same spec at any `--workers`, across kills/resumes (run- or
 //! step-level), and across machines (per backend).
+//!
+//! Observability: with a status board attached (`SweepOptions::probe`,
+//! CLI `--probe-port`), every pending run is registered and updated at
+//! step boundaries, and probe control verbs (checkpoint/pause/abort)
+//! route through the same `Halted`/checkpoint rails as `halt_after` —
+//! so a probed sweep compacts to the byte-identical manifest of an
+//! unprobed one. See the `crate::obs` module docs for the argument.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -48,6 +55,11 @@ use super::manifest::{ManifestRow, SweepManifest};
 use super::pack::pack;
 use super::spec::{Backend, RunSpec};
 use super::steal;
+
+/// Rotate `manifest.times.jsonl` at quiesced points once it holds at
+/// least this many lines (single-process sweeps; fleet mode reuses its
+/// `--rotate-after` knob so both ledgers share one policy).
+const TIMES_ROTATE_AFTER: usize = 512;
 
 /// Scheduler knobs (the `sweep` subcommand's flags).
 #[derive(Clone, Debug)]
@@ -82,6 +94,12 @@ pub struct SweepOptions {
     /// `save_bin` format) to `<manifest dir>/params/<run_id>.bin` — what
     /// CI byte-compares between killed+resumed and uninterrupted sweeps.
     pub dump_params: bool,
+    /// Live status registry (`--probe-port`): when set, every pending run
+    /// is registered and updated at step boundaries, and probe control
+    /// verbs (checkpoint/pause/abort) are honored through the existing
+    /// `Halted`/`Checkpointer` rails. The HTTP server itself lives in
+    /// `main.rs`; tests drive the board directly. `None` = zero overhead.
+    pub probe: Option<crate::obs::StatusBoard>,
 }
 
 impl Default for SweepOptions {
@@ -98,6 +116,7 @@ impl Default for SweepOptions {
             ckpt_keep: 2,
             halt_after: 0,
             dump_params: false,
+            probe: None,
         }
     }
 }
@@ -232,6 +251,18 @@ pub fn run_sweep_collect(
     }
     let skipped = total - pending.len();
 
+    if let Some(board) = &opts.probe {
+        // Pre-register every pending run so `GET /runs` shows the whole
+        // grid (phase `pending`) before its wave starts, priced with the
+        // same analytic footprint the packer uses.
+        for s in &pending {
+            let p = board.register(&s.run_id, s.steps);
+            if let Ok(bytes) = super::pack::price(s) {
+                p.set_footprint_bytes(bytes);
+            }
+        }
+    }
+
     let budget_bytes = opts.budget_gb * 1e9 * opts.gpus as f64;
     let waves = pack(pending, budget_bytes)?;
     let n_waves = waves.len();
@@ -291,6 +322,10 @@ pub fn run_sweep_collect(
                         dump_path: opts
                             .dump_params
                             .then(|| params_dir_ref.join(format!("{}.bin", spec.run_id))),
+                        probe: opts
+                            .probe
+                            .as_ref()
+                            .map(|b| b.register(&spec.run_id, spec.steps)),
                     };
                     let res = execute_run_with(spec, &ctx);
                     if tx.send((spec.run_id.clone(), res)).is_err() {
@@ -322,6 +357,11 @@ pub fn run_sweep_collect(
                             std::fs::remove_dir_all(ckpt_root.join(&run_id)).ok();
                         }
                         executed += 1;
+                        if let Some(p) = opts.probe.as_ref().and_then(|b| b.get(&run_id)) {
+                            // Zero-shot (eval-only) runs never enter the
+                            // training loop, so mark completion here.
+                            p.set_done();
+                        }
                         if opts.verbose {
                             match timing.resumed_from_step {
                                 Some(s) => println!(
@@ -358,6 +398,10 @@ pub fn run_sweep_collect(
     }
 
     manifest.compact()?;
+    // The times side file gets the same growth bound the lease ledger
+    // has: once the sweep is quiesced, keep event rows plus the last
+    // timing row per run.
+    SweepManifest::rotate_times(&opts.manifest_path, TIMES_ROTATE_AFTER)?;
     let summary = SweepSummary {
         total,
         executed,
@@ -470,6 +514,7 @@ impl Heartbeat {
         ttl_ms: u64,
         clock: LeaseClock,
         stalled: bool,
+        probe: Option<Arc<crate::obs::RunProbe>>,
     ) -> Self {
         let stop = Arc::new(AtomicBool::new(false));
         if stalled {
@@ -496,6 +541,11 @@ impl Heartbeat {
                 }
                 next = Instant::now() + interval;
                 seq += 1;
+                if let Some(p) = &probe {
+                    // `/runs` shows the holder's logical clock advancing —
+                    // the liveness signal a reclaim confirmation reads.
+                    p.set_lease_seq(seq);
+                }
                 // Renewal failures are survivable (the next beat
                 // retries; at worst the lease lapses and the run is
                 // reclaimed) — which is also why renewals take the
@@ -649,6 +699,15 @@ pub fn run_sweep_fleet(
     // fleet workers pull one run at a time rather than executing waves.
     pack(deduped.clone(), opts.budget_gb * 1e9 * opts.gpus as f64)?;
 
+    if let Some(board) = &opts.probe {
+        for s in &deduped {
+            let p = board.register(&s.run_id, s.steps);
+            if let Ok(bytes) = super::pack::price(s) {
+                p.set_footprint_bytes(bytes);
+            }
+        }
+    }
+
     let lease_path = lease::leases_path(&opts.manifest_path);
     let ckpt_root = opts.ckpt_root();
     let params_dir = opts.params_dir();
@@ -659,14 +718,21 @@ pub fn run_sweep_fleet(
     let mut executed = 0usize;
     let mut reclaimed = 0usize;
     let mut fenced = 0usize;
+    let mut halted = 0usize;
     let mut stolen = 0u64;
     let mut crashed: Option<String> = None;
+    // Runs this worker stopped on a probe `abort`: released, snapshots
+    // kept, and out of *this* worker's claim set — another worker (or a
+    // later resume sweep) finishes them byte-identically.
+    let mut aborted: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
 
     loop {
         let table = LeaseTable::load(&lease_path)?;
         let manifest = SweepManifest::load(&opts.manifest_path)?;
-        let pending: Vec<&RunSpec> =
-            deduped.iter().filter(|s| !manifest.contains(&s.run_id)).collect();
+        let pending: Vec<&RunSpec> = deduped
+            .iter()
+            .filter(|s| !manifest.contains(&s.run_id) && !aborted.contains(&s.run_id))
+            .collect();
         if pending.is_empty() {
             // Every row is durable. Live leases can only belong to
             // workers about to discover that (or to harmless zombies);
@@ -676,6 +742,11 @@ pub fn run_sweep_fleet(
                 continue;
             }
             for s in &deduped {
+                if aborted.contains(&s.run_id) {
+                    // An aborted run's snapshots ARE its resume state —
+                    // deleting them would turn the abort into a restart.
+                    continue;
+                }
                 std::fs::remove_dir_all(s.ckpt_dir(&ckpt_root)).ok();
                 steal::finish_run_dir(&steal_root.join(&s.run_id));
             }
@@ -690,6 +761,11 @@ pub fn run_sweep_fleet(
                     "rotate",
                     "lease ledger rotated at drain: one release line per run",
                 )?;
+            }
+            // Same bound for the times side file: events + the last
+            // timing row per run survive, superseded rows are GC'd.
+            if fleet.rotate_after_lines > 0 {
+                SweepManifest::rotate_times(&opts.manifest_path, fleet.rotate_after_lines)?;
             }
             // Idempotent across workers: everyone compacts the same row
             // set to the same bytes, each through its own tmp file.
@@ -820,6 +896,11 @@ pub fn run_sweep_fleet(
                 println!("[fleet {}] reclaimed {} (token {token})", fleet.worker_id, spec.run_id);
             }
         }
+        let probe = opts.probe.as_ref().map(|b| {
+            let p = b.register(&spec.run_id, spec.steps);
+            p.set_lease(&fleet.worker_id, token);
+            p
+        });
         let faults =
             fleet.chaos.map(|c| c.for_run(&spec.run_id, spec.steps)).unwrap_or_default();
         // Chaos arms only on the run's first execution (token 1): a
@@ -834,6 +915,7 @@ pub fn run_sweep_fleet(
             ttl,
             clock,
             stalled,
+            probe.clone(),
         );
         let ctx = RunCtx {
             ckpt_dir: Some(spec.ckpt_dir(&ckpt_root)),
@@ -846,6 +928,7 @@ pub fn run_sweep_fleet(
             dump_path: opts
                 .dump_params
                 .then(|| params_dir.join(format!("{}.bin", spec.run_id))),
+            probe: probe.clone(),
         };
         // Holder-side stealing: publish a per-run side dir so idle
         // workers can claim probe shards. Mock-only (matching the thief
@@ -873,6 +956,9 @@ pub fn run_sweep_fleet(
         drop(steal_guard);
         steal::finish_run_dir(&steal_dir);
         hb.finish();
+        if let Some(p) = &probe {
+            p.set_stolen(run_stolen);
+        }
         match res {
             Err(e) if crash_after.is_some() && e.downcast_ref::<Halted>().is_some() => {
                 let at = e.downcast_ref::<Halted>().map(|h| h.at_step).unwrap_or(0);
@@ -884,6 +970,43 @@ pub fn run_sweep_fleet(
                 }
                 crashed = Some(spec.run_id.clone());
                 break;
+            }
+            Err(e) if e.downcast_ref::<Halted>().is_some() => {
+                // A probe `abort` (the only other Halted source in fleet
+                // mode — `--halt-after` is rejected above): the run
+                // snapshotted and stopped at a step boundary. Release the
+                // lease cleanly and drop the run from this worker's claim
+                // set; its snapshots stay, so another worker or a later
+                // resume sweep finishes it on the byte-identical row.
+                let at = e.downcast_ref::<Halted>().map(|h| h.at_step).unwrap_or(0);
+                lease::append_durable(
+                    &lease_path,
+                    &LeaseRecord {
+                        run_id: spec.run_id.clone(),
+                        worker: fleet.worker_id.clone(),
+                        token,
+                        seq: 0,
+                        action: LeaseAction::Release,
+                        expires_ms: clock.now_ms(),
+                    },
+                )?;
+                aborted.insert(spec.run_id.clone());
+                halted += 1;
+                SweepManifest::append_event(
+                    &opts.manifest_path,
+                    &spec.run_id,
+                    "abort",
+                    &format!(
+                        "probe abort honored at step {at}; lease released, snapshots \
+                         kept for resume"
+                    ),
+                )?;
+                if opts.verbose {
+                    println!(
+                        "[fleet {}] probe abort in {} at step {at}",
+                        fleet.worker_id, spec.run_id
+                    );
+                }
             }
             Err(e) => {
                 return Err(e.context(format!(
@@ -927,6 +1050,14 @@ pub fn run_sweep_fleet(
                             "rotate",
                             "lease ledger rotated: compacted to one release line per run",
                         )?;
+                        // The ledger rotating means every lease was
+                        // released a moment ago — the same quiesced
+                        // window the times rotation wants (it re-checks
+                        // length before renaming, like `lease::rotate`).
+                        SweepManifest::rotate_times(
+                            &opts.manifest_path,
+                            fleet.rotate_after_lines,
+                        )?;
                     }
                     if opts.verbose {
                         match timing.resumed_from_step {
@@ -958,7 +1089,8 @@ pub fn run_sweep_fleet(
         // A crashed worker's view is partial by design; completed-by-
         // others accounting is only meaningful on a clean exit.
         skipped: if crashed.is_some() { 0 } else { total - executed },
-        halted: 0,
+        // Probe-aborted runs: checkpointed and released, not completed.
+        halted,
         reclaimed,
         fenced,
         stolen,
@@ -991,6 +1123,9 @@ pub struct RunCtx {
     pub halt_after: usize,
     /// Where to dump the final parameters after a completed run.
     pub dump_path: Option<PathBuf>,
+    /// This run's live status probe (telemetry + control flags), when a
+    /// status board is attached.
+    pub probe: Option<Arc<crate::obs::RunProbe>>,
 }
 
 /// [`execute_run_with`] under the default context (no checkpointing, no
@@ -1066,7 +1201,13 @@ fn run_with_exec(
         // clamp, since that field is part of run identity and must
         // actually steer the outcome.
         let t0 = Instant::now();
+        if let Some(p) = &ctx.probe {
+            p.set_running(0);
+        }
         let ev = evaluate(exec, params, &ds.test, spec.eval_examples)?;
+        if let Some(p) = &ctx.probe {
+            p.set_done();
+        }
         if let Some(path) = &ctx.dump_path {
             dump_params(params, path)?;
         }
@@ -1111,6 +1252,7 @@ fn run_with_exec(
         // a directory mix-up can never graft one run's state onto another.
         ckpt_identity: spec.run_id.clone(),
         halt_after: ctx.halt_after,
+        probe: ctx.probe.clone(),
     };
     let mut opt = spec.optimizer.build()?;
     // `Halted` must propagate un-wrapped in meaning (anyhow downcasts

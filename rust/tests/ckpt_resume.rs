@@ -39,6 +39,7 @@ fn ctx(dir: &Path, spec: &RunSpec, halt_after: usize, dump: Option<PathBuf>) -> 
         ckpt_keep: 2,
         halt_after,
         dump_path: dump,
+        ..RunCtx::default()
     }
 }
 

@@ -1,0 +1,298 @@
+//! The observability plane, end to end. The defining contract under
+//! test: **probes cannot move a deterministic byte**. Control verbs
+//! (checkpoint / pause / abort) ride the existing snapshot and `Halted`
+//! rails at step boundaries, so a probed run — even one paused mid-way,
+//! checkpointed off-cadence, or aborted and finished later by another
+//! worker — produces a manifest row (and parameter dump, and compacted
+//! sweep manifest) byte-identical to an unprobed control's. The HTTP
+//! server itself is exercised live over a real sweep.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+
+use addax::config::Config;
+use addax::jsonlite::Json;
+use addax::obs::{ProbeServer, StatusBoard};
+use addax::optim::OptSpec;
+use addax::sched::{
+    execute_run, execute_run_with, run_sweep, run_sweep_fleet, Backend, FleetOptions, RunCtx,
+    RunSpec, SweepManifest, SweepOptions, SweepSpec,
+};
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("addax_probe_test_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn spec(opt: &str, steps: usize) -> RunSpec {
+    let mut s = RunSpec::new(Backend::Mock, "sst2", OptSpec::named(opt), steps, 3);
+    s.eval_every = 4;
+    s.eval_examples = 30;
+    s.mock_dim = 40;
+    s.n_train = 120;
+    s.n_val = 40;
+    s.n_test = 40;
+    s.sealed()
+}
+
+fn phase(probe: &addax::obs::RunProbe) -> String {
+    probe.to_json().get("phase").unwrap().as_str().unwrap().to_string()
+}
+
+fn step_of(probe: &addax::obs::RunProbe) -> f64 {
+    probe.to_json().get("step").unwrap().as_f64().unwrap()
+}
+
+#[test]
+fn pre_armed_checkpoint_verb_snapshots_off_cadence_without_moving_bytes() {
+    let s = spec("addax", 12);
+    let ctrl = fresh_dir("ckpt_ctrl");
+    let dump_c = ctrl.join("c.bin");
+    let (row_c, _) = execute_run_with(
+        &s,
+        &RunCtx {
+            ckpt_dir: Some(s.ckpt_dir(&ctrl)),
+            ckpt_keep: 8,
+            dump_path: Some(dump_c.clone()),
+            ..RunCtx::default()
+        },
+    )
+    .unwrap();
+
+    // The operator hit POST /runs/<id>/checkpoint before step 1: the
+    // request is consumed at the first step boundary.
+    let probed = fresh_dir("ckpt_probe");
+    let board = StatusBoard::new();
+    let probe = board.register(&s.run_id, s.steps);
+    probe.request_checkpoint();
+    let dump_p = probed.join("p.bin");
+    let (row_p, _) = execute_run_with(
+        &s,
+        &RunCtx {
+            ckpt_dir: Some(s.ckpt_dir(&probed)),
+            ckpt_keep: 8,
+            dump_path: Some(dump_p.clone()),
+            probe: Some(probe.clone()),
+            ..RunCtx::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(row_p.to_line(), row_c.to_line(), "a served checkpoint must not move a byte");
+    assert_eq!(std::fs::read(dump_p).unwrap(), std::fs::read(dump_c).unwrap());
+    // The verb produced an off-cadence snapshot the control lacks.
+    assert!(s.ckpt_dir(&probed).join("step-00000001.ck").exists());
+    assert!(!s.ckpt_dir(&ctrl).join("step-00000001.ck").exists());
+    assert_eq!(phase(&probe), "done");
+    assert_eq!(step_of(&probe) as usize, s.steps);
+    std::fs::remove_dir_all(&ctrl).ok();
+    std::fs::remove_dir_all(&probed).ok();
+}
+
+#[test]
+fn pause_stalls_the_step_clock_and_resume_matches_control() {
+    let s = spec("addax", 12);
+    let (row_c, _) = execute_run(&s).unwrap();
+
+    let board = StatusBoard::new();
+    let probe = board.register(&s.run_id, s.steps);
+    probe.request_pause(); // armed before the run starts
+    let (p2, s2) = (probe.clone(), s.clone());
+    let h = std::thread::spawn(move || {
+        execute_run_with(&s2, &RunCtx { probe: Some(p2), ..RunCtx::default() }).unwrap()
+    });
+    // The run parks at the first step boundary and reports it.
+    let mut spins = 0;
+    while phase(&probe) != "paused" {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        spins += 1;
+        assert!(spins < 2000, "run never reached the pause gate (phase {})", phase(&probe));
+    }
+    let parked_at = step_of(&probe);
+    std::thread::sleep(std::time::Duration::from_millis(80));
+    assert_eq!(step_of(&probe), parked_at, "a paused run must not advance");
+    probe.request_resume();
+    let (row_p, _) = h.join().unwrap();
+    assert_eq!(phase(&probe), "done");
+    assert_eq!(row_p.to_line(), row_c.to_line(), "pause/resume must not move a byte");
+}
+
+/// Minimal HTTP/1.1 client for the live-server tests.
+fn fetch(addr: &str, method: &str, target: &str) -> (u16, Json) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(
+        stream,
+        "{method} {target} HTTP/1.1\r\nHost: probe\r\nConnection: close\r\n\r\n"
+    )
+    .unwrap();
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf).unwrap();
+    let status: u16 = buf.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("");
+    (status, Json::parse(body).unwrap_or_else(|e| panic!("bad JSON body {body:?}: {e}")))
+}
+
+/// A tiny all-training grid (no zero-shot) so every run has metrics.
+const LIVE_SPEC: &str = r#"
+[sweep]
+name = "probe-live"
+backend = "mock"
+steps = 8
+zo_mult = 2
+eval_examples = 24
+mock_dim = 32
+train = 120
+val = 48
+test = 48
+
+[grid]
+optimizers = "addax"
+tasks = "sst2"
+seeds = "0, 1"
+"#;
+
+fn live_grid() -> Vec<RunSpec> {
+    let cfg = Config::parse(LIVE_SPEC).unwrap();
+    SweepSpec::from_config(&cfg).unwrap().expand().unwrap()
+}
+
+fn opts(dir: &std::path::Path) -> SweepOptions {
+    SweepOptions {
+        budget_gb: 100.0,
+        gpus: 1,
+        workers: 1,
+        resume: true,
+        manifest_path: dir.join("manifest.jsonl"),
+        verbose: false,
+        ckpt: true,
+        ..SweepOptions::default()
+    }
+}
+
+#[test]
+fn live_server_over_a_probed_sweep_serves_runs_metrics_and_mem() {
+    let ctrl = fresh_dir("live_ctrl");
+    run_sweep(live_grid(), &opts(&ctrl)).unwrap();
+    let control_bytes = std::fs::read_to_string(opts(&ctrl).manifest_path).unwrap();
+
+    let dir = fresh_dir("live");
+    let board = StatusBoard::new();
+    let server = ProbeServer::start(board.clone(), 0).unwrap();
+    let addr = server.addr().to_string();
+    let mut o = opts(&dir);
+    o.probe = Some(board);
+    let summary = run_sweep(live_grid(), &o).unwrap();
+    assert_eq!(summary.executed, live_grid().len());
+
+    // /runs: every run registered, every run done, valid JSON throughout.
+    let (status, runs) = fetch(&addr, "GET", "/runs");
+    assert_eq!(status, 200);
+    assert_eq!(runs.get("n").unwrap().as_usize().unwrap(), live_grid().len());
+    let arr = runs.get("runs").unwrap().as_arr().unwrap().to_vec();
+    for r in &arr {
+        assert_eq!(r.get("phase").unwrap().as_str().unwrap(), "done", "{}", r.dump());
+        assert!(r.get("loss_tail").unwrap().as_arr().unwrap().len() <= 5);
+    }
+
+    // /runs/<id>/metrics: field projection + bounded tail.
+    let id = arr[0].get("run_id").unwrap().as_str().unwrap().to_string();
+    let (status, m) = fetch(&addr, "GET", &format!("/runs/{id}/metrics?fields=step,loss&last=3"));
+    assert_eq!(status, 200);
+    let rows = m.get("rows").unwrap().as_arr().unwrap();
+    assert!(!rows.is_empty() && rows.len() <= 3, "{}", m.dump());
+    for row in rows {
+        let keys: Vec<&String> = row.as_obj().unwrap().keys().collect();
+        assert!(keys.iter().all(|k| *k == "step" || *k == "loss"), "{}", row.dump());
+    }
+
+    // /mem: a real RSS reading against the analytic plane.
+    let (status, mem) = fetch(&addr, "GET", "/mem");
+    assert_eq!(status, 200);
+    assert!(mem.get("rss_bytes").unwrap().as_f64().unwrap() > 0.0, "{}", mem.dump());
+    assert!(mem.opt("threshold_bytes_per_sec").is_some());
+
+    // Unknown run and bad query fail cleanly, server stays up.
+    assert_eq!(fetch(&addr, "GET", "/runs/nope").0, 404);
+    assert_eq!(fetch(&addr, "GET", &format!("/runs/{id}/metrics?last=soon")).0, 400);
+
+    // The acceptance bar: probed bytes == unprobed bytes.
+    let probed_bytes = std::fs::read_to_string(&o.manifest_path).unwrap();
+    assert_eq!(probed_bytes, control_bytes, "a probed sweep must compact to the control bytes");
+    drop(server);
+    std::fs::remove_dir_all(&ctrl).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The fleet grid: FO + ZO + zero-shot across two seeds (same shape as
+/// the sweep_fleet tests).
+const FLEET_SPEC: &str = r#"
+[sweep]
+name = "probe-fleet"
+backend = "mock"
+steps = 12
+zo_mult = 2
+eval_examples = 24
+mock_dim = 32
+train = 120
+val = 48
+test = 48
+lease_ttl_secs = 0.5
+
+[grid]
+optimizers = "addax, mezo, zero-shot"
+tasks = "sst2"
+seeds = "0, 1"
+"#;
+
+fn fleet_grid() -> Vec<RunSpec> {
+    let cfg = Config::parse(FLEET_SPEC).unwrap();
+    SweepSpec::from_config(&cfg).unwrap().expand().unwrap()
+}
+
+#[test]
+fn probe_abort_releases_the_lease_and_a_second_worker_finishes_byte_identically() {
+    let ctrl = fresh_dir("abort_ctrl");
+    run_sweep(fleet_grid(), &opts(&ctrl)).unwrap();
+    let control_bytes = std::fs::read_to_string(opts(&ctrl).manifest_path).unwrap();
+
+    // Worker 0 carries the board; the abort is armed before it starts
+    // (registration is get-or-insert, so the worker reuses this probe).
+    let dir = fresh_dir("abort");
+    let mut o = opts(&dir);
+    let board = StatusBoard::new();
+    o.probe = Some(board.clone());
+    let victim = fleet_grid().into_iter().find(|s| s.steps > 0).unwrap();
+    board.register(&victim.run_id, victim.steps).request_abort();
+    let exit = run_sweep_fleet(fleet_grid(), &o, &FleetOptions::new("w0", 500)).unwrap();
+    assert!(exit.crashed.is_none());
+    assert_eq!(exit.summary.halted, 1, "{}", exit.summary.line());
+    assert_eq!(exit.summary.executed, fleet_grid().len() - 1);
+    let times = std::fs::read_to_string(SweepManifest::times_path(&o.manifest_path)).unwrap();
+    assert!(times.contains("\"event\":\"abort\""), "abort must be logged: {times}");
+    let probe = board.get(&victim.run_id).unwrap();
+    assert_eq!(phase(&probe), "halted");
+    // Released, not committed: the manifest lacks the victim, but its
+    // snapshots survive — they ARE the resume state.
+    let manifest = SweepManifest::load(&o.manifest_path).unwrap();
+    assert!(!manifest.contains(&victim.run_id));
+    assert!(victim.ckpt_dir(&o.ckpt_root()).exists(), "abort must keep the snapshots");
+
+    // Worker 1 (no probe plane at all) picks the run up and finishes it
+    // from the snapshot.
+    let o2 = SweepOptions { probe: None, ..o.clone() };
+    let exit2 = run_sweep_fleet(fleet_grid(), &o2, &FleetOptions::new("w1", 500)).unwrap();
+    assert_eq!(exit2.summary.executed, 1, "{}", exit2.summary.line());
+    assert_eq!(exit2.summary.halted, 0);
+    let times = std::fs::read_to_string(SweepManifest::times_path(&o.manifest_path)).unwrap();
+    assert!(times.contains("\"resumed_from_step\""), "the pickup must resume: {times}");
+
+    // The kill is byte-invisible: compacted manifest == control, and the
+    // abort never leaked out of the telemetry side file.
+    let bytes = std::fs::read_to_string(&o.manifest_path).unwrap();
+    assert_eq!(bytes, control_bytes, "an aborted+resumed fleet must match the control bytes");
+    assert!(!bytes.contains("abort"));
+    std::fs::remove_dir_all(&ctrl).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
