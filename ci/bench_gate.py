@@ -13,6 +13,12 @@ fails when an observed `ms_per_iter` exceeds `ceiling * tolerance` —
 catching order-of-magnitude regressions (an accidental O(d) copy, a
 de-fused sweep, a serial fallback) without flaking on runner variance.
 
+Only `ms_per_iter` is ever gated. Informational roofline fields emitted
+by the bench (`gb_per_s`, `bytes`, `pct_peak`, top-level
+`peak_gb_per_s`) are carried through `--update` for human context but
+never compared — GB/s varies with the runner's memory system, not with
+the code under test.
+
 `--update` rewrites the baseline's ceilings from the observed run
 (observed * headroom) — run locally when the bench set changes, then
 commit the result.
@@ -23,6 +29,10 @@ import json
 import sys
 
 HEADROOM = 8.0  # observed -> ceiling multiplier used by --update
+
+# Observed-run fields copied into the baseline verbatim on --update,
+# for roofline context only; the gate never reads them.
+INFO_FIELDS = ("gb_per_s", "bytes", "pct_peak")
 
 
 def load(path):
@@ -41,26 +51,34 @@ def main():
                     help="rewrite the baseline ceilings from the observed run")
     args = ap.parse_args()
 
-    observed, _ = load(args.observed)
+    observed, obs_doc = load(args.observed)
     if not observed:
         print(f"error: no results in {args.observed}", file=sys.stderr)
         return 2
 
     if args.update:
+        def row(name, r):
+            out = {"name": name, "ms_per_iter": round(r["ms_per_iter"] * HEADROOM, 4)}
+            for k in INFO_FIELDS:
+                if isinstance(r.get(k), (int, float)):
+                    out[k] = round(r[k], 4)
+            return out
+
         doc = {
             "bench": "hotpath",
             "note": (
                 "Per-bench ms/iter CEILINGS for the --smoke run "
-                f"(observed x {HEADROOM:g} headroom). Regenerate with "
+                f"(observed x {HEADROOM:g} headroom). gb_per_s / bytes / "
+                "pct_peak are the observed run's roofline context, never "
+                "gated. Regenerate with "
                 "`cargo bench --bench hotpath -- --smoke && "
                 "python3 ci/bench_gate.py rust/BENCH_baseline.json "
                 "rust/BENCH_hotpath.json --update`."
             ),
-            "results": [
-                {"name": name, "ms_per_iter": round(r["ms_per_iter"] * HEADROOM, 4)}
-                for name, r in observed.items()
-            ],
+            "results": [row(name, r) for name, r in observed.items()],
         }
+        if isinstance(obs_doc.get("peak_gb_per_s"), (int, float)):
+            doc["peak_gb_per_s"] = round(obs_doc["peak_gb_per_s"], 4)
         with open(args.baseline, "w") as f:
             json.dump(doc, f, indent=2)
             f.write("\n")

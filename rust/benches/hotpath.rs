@@ -1,8 +1,15 @@
 //! Hot-path micro-benchmarks (hand-rolled harness; the offline crate set
 //! has no criterion). Measures the L3 components that sit on every
 //! training step, the §2.2 ablation (seed-replay vs materialized-z), the
-//! worker-pool scaling of the counter-addressed noise sweeps, and the
-//! fused vs unfused ZO step (4 → 3 O(d) sweeps).
+//! worker-pool scaling of the counter-addressed noise sweeps, the
+//! lane-batched vs scalar noise generator, and the fused ZO step family
+//! (4 → 3 → 2 O(d) sweeps under sweep fusion v2).
+//!
+//! Every row is a roofline row: the first measurement is a large memcpy
+//! whose throughput defines the machine's practical bandwidth peak, and
+//! each subsequent row reports GB/s plus %-of-peak next to ms/iter — so
+//! "is this sweep bandwidth-bound yet?" is readable straight off the
+//! output (and lands in the JSON for cross-PR tracking).
 //!
 //! Run: `cargo bench --bench hotpath` (add `-- --smoke` for the 1-shot CI
 //! regression check). Machine-readable results land in
@@ -13,48 +20,81 @@ use std::time::Instant;
 use addax::jsonlite::{obj, Json};
 use addax::params::ParamStore;
 use addax::tensor::{Dtype, HostTensor};
-use addax::zorng::NoiseStream;
+use addax::zorng::{block_seed, fill_block_batched, fill_block_scalar, NoiseStream, NOISE_BLOCK};
 
 /// One recorded measurement.
 struct BenchResult {
     name: String,
     ms_per_iter: f64,
     gb_per_s: f64,
+    bytes_per_iter: f64,
+    pct_peak: f64,
 }
 
-/// Time `f` over `iters` iterations after a short warmup; report best-of-3
-/// batches to suppress scheduler noise, and record into `results`.
-fn bench<F: FnMut()>(
-    results: &mut Vec<BenchResult>,
-    name: &str,
-    bytes_per_iter: f64,
-    iters: usize,
-    mut f: F,
-) -> f64 {
-    for _ in 0..iters.min(3) {
-        f();
+/// Bench harness: best-of-3 batches after a short warmup to suppress
+/// scheduler noise, carrying the measured memcpy roofline so every row
+/// prints GB/s and %-of-peak alongside ms/iter.
+struct Harness {
+    results: Vec<BenchResult>,
+    peak_gbs: f64,
+}
+
+impl Harness {
+    fn bench<F: FnMut()>(
+        &mut self,
+        name: &str,
+        bytes_per_iter: f64,
+        iters: usize,
+        mut f: F,
+    ) -> f64 {
+        for _ in 0..iters.min(3) {
+            f();
+        }
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed().as_secs_f64() / iters as f64;
+            best = best.min(dt);
+        }
+        let gbs = bytes_per_iter / best / 1e9;
+        let pct = if self.peak_gbs > 0.0 { 100.0 * gbs / self.peak_gbs } else { 0.0 };
+        println!(
+            "{name:<44} {:>10.3} ms/iter  {:>8.2} GB/s  {:>5.1}% of peak",
+            best * 1e3,
+            gbs,
+            pct
+        );
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            ms_per_iter: best * 1e3,
+            gb_per_s: gbs,
+            bytes_per_iter,
+            pct_peak: pct,
+        });
+        best
     }
+}
+
+/// Measured memcpy throughput over `bytes`-sized buffers: the practical
+/// bandwidth roofline for this machine. A copy moves 2·N bytes (read +
+/// write), which is the traffic model the sweep rows use too.
+fn measured_memcpy_peak(bytes: usize, reps: usize) -> (f64, f64) {
+    let src = vec![1u8; bytes];
+    let mut dst = vec![0u8; bytes];
+    dst.copy_from_slice(&src); // warmup + page-in
     let mut best = f64::INFINITY;
     for _ in 0..3 {
         let t0 = Instant::now();
-        for _ in 0..iters {
-            f();
+        for _ in 0..reps {
+            dst.copy_from_slice(&src);
+            std::hint::black_box(&mut dst);
         }
-        let dt = t0.elapsed().as_secs_f64() / iters as f64;
-        best = best.min(dt);
+        best = best.min(t0.elapsed().as_secs_f64() / reps as f64);
     }
-    let gbs = bytes_per_iter / best / 1e9;
-    println!(
-        "{name:<44} {:>10.3} ms/iter  {:>8.2} GB/s",
-        best * 1e3,
-        gbs
-    );
-    results.push(BenchResult {
-        name: name.to_string(),
-        ms_per_iter: best * 1e3,
-        gb_per_s: gbs,
-    });
-    best
+    (best, 2.0 * bytes as f64 / best / 1e9)
 }
 
 fn big_store_in(d: usize, dtype: Dtype) -> ParamStore {
@@ -76,16 +116,51 @@ fn main() {
     // 8M params ≈ base-scale (f32: 32 MB); smoke shrinks to 1M for CI.
     let d = if smoke { 1 << 20 } else { 8 * (1 << 20) };
     let iters = if smoke { 1 } else { 10 };
-    let mut store = big_store(d);
     let bytes = (d * 4) as f64;
-    let mut results: Vec<BenchResult> = Vec::new();
-    let r = &mut results;
 
-    // 1. Gaussian generation alone.
+    // 0. The roofline: measured memcpy peak over store-sized buffers.
+    let (mc_best, peak_gbs) = measured_memcpy_peak(d * 4, if smoke { 8 } else { 32 });
+    let mut h = Harness { results: Vec::new(), peak_gbs };
+    println!(
+        "{:<44} {:>10.3} ms/iter  {:>8.2} GB/s  (= 100% peak)",
+        "mem: memcpy roofline (read+write)",
+        mc_best * 1e3,
+        peak_gbs
+    );
+    h.results.push(BenchResult {
+        name: "mem: memcpy roofline (read+write)".to_string(),
+        ms_per_iter: mc_best * 1e3,
+        gb_per_s: peak_gbs,
+        bytes_per_iter: 2.0 * bytes,
+        pct_peak: 100.0,
+    });
+
+    let mut store = big_store(d);
+
+    // 1. Gaussian generation alone (one long sequential stream).
     let mut buf = vec![0.0f32; 1 << 16];
     let mut stream = NoiseStream::new(7);
-    bench(r, "rng: fill_normal 64k f32", (buf.len() * 4) as f64, if smoke { 1 } else { 200 }, || {
+    h.bench("rng: fill_normal 64k f32", (buf.len() * 4) as f64, if smoke { 1 } else { 200 }, || {
         stream.fill_normal(&mut buf);
+    });
+
+    // 1b. The lane-batched block generator vs the retained scalar oracle,
+    // a full d-element pass in NOISE_BLOCK chunks. The two are
+    // bit-identical by construction (property-tested in zorng); this pair
+    // shows what the u64x4 lane batching buys on raw generation.
+    let blocks = d / NOISE_BLOCK;
+    let mut blockbuf = vec![0.0f32; NOISE_BLOCK];
+    h.bench("rng: fill_block scalar oracle", bytes, if smoke { 1 } else { 20 }, || {
+        for b in 0..blocks {
+            fill_block_scalar(block_seed(9, 0, b), &mut blockbuf);
+        }
+        std::hint::black_box(&mut blockbuf);
+    });
+    h.bench("rng: fill_block lane-batched", bytes, if smoke { 1 } else { 20 }, || {
+        for b in 0..blocks {
+            fill_block_batched(block_seed(9, 0, b), &mut blockbuf);
+        }
+        std::hint::black_box(&mut blockbuf);
     });
 
     // 2. Seed-replay perturbation, worker-pool scaling sweep (the
@@ -94,8 +169,7 @@ fn main() {
     let mut serial_ms = 0.0;
     let mut f32_ms_at = [0.0f64; 2]; // [serial, 8 workers] for the bf16 ratio
     for workers in [1usize, 2, 4, 8] {
-        let t = bench(
-            r,
+        let t = h.bench(
             &format!("perturb: seed-replay, {workers} worker(s)"),
             bytes,
             iters,
@@ -123,8 +197,7 @@ fn main() {
     let mut store16 = big_store_in(d, Dtype::Bf16);
     let bytes16 = (d * 2) as f64;
     for (slot, workers) in [1usize, 8].into_iter().enumerate() {
-        let t = bench(
-            r,
+        let t = h.bench(
             &format!("perturb: seed-replay bf16, {workers} worker(s)"),
             bytes16,
             iters,
@@ -148,30 +221,31 @@ fn main() {
             })
             .collect()
     };
-    bench(r, "perturb: materialized z (O(d) mem)", bytes, iters, || {
+    h.bench("perturb: materialized z (O(d) mem)", bytes, iters, || {
         for (i, zt) in z.iter().enumerate() {
             store.get_mut(i).tensor.axpy(1e-3, zt);
         }
     });
 
-    // 4. Fused vs unfused ZO step: the probe pair is common to both; the
-    // tail is restore+update as two sweeps (old) or one (fused). Scales
-    // cancel exactly, so the store returns to θ every iteration.
+    // 4. The ZO step family: the probe pair is common to all; the tail is
+    // restore+update as two sweeps (old), one fused sweep (PR 2), or —
+    // sweep fusion v2 — folded into the single combined update below.
+    // Scales cancel exactly, so the store returns to θ every iteration.
     let eps = 1e-3f32;
-    bench(r, "zo-step: unfused (4 O(d) sweeps)", 4.0 * bytes, iters, || {
+    h.bench("zo-step: unfused (4 O(d) sweeps)", 4.0 * bytes, iters, || {
         store.perturb(43, eps);
         store.perturb(43, -2.0 * eps);
         store.perturb(43, eps); // restore
         store.zo_update(43, 0.0, 1.0, 0.0); // update sweep (lr 0: θ preserved)
     });
-    bench(r, "zo-step: fused (3 O(d) sweeps)", 3.0 * bytes, iters, || {
+    h.bench("zo-step: fused (3 O(d) sweeps)", 3.0 * bytes, iters, || {
         store.perturb(43, eps);
         store.perturb(43, -2.0 * eps);
         store.restore_and_zo_update(43, eps, 0.0, 1.0, 0.0);
     });
     // bf16 edition of the fused step (half the parameter traffic; the
     // probe/restore no longer cancel exactly, so reset the store after).
-    bench(r, "zo-step: fused bf16 (3 O(d) sweeps)", 3.0 * bytes16, iters, || {
+    h.bench("zo-step: fused bf16 (3 O(d) sweeps)", 3.0 * bytes16, iters, || {
         store16.perturb(43, eps);
         store16.perturb(43, -2.0 * eps);
         store16.restore_and_zo_update(43, eps, 0.0, 1.0, 0.0);
@@ -181,10 +255,10 @@ fn main() {
     // 5. FO in-place update (axpy over all tensors) — the RNG-free,
     // purely bandwidth-bound sweep, in both precisions.
     let grads: Vec<Vec<f32>> = (0..8).map(|_| vec![0.01f32; d / 8]).collect();
-    let t32 = bench(r, "fo_update_all: axpy over all params", bytes, iters, || {
+    let t32 = h.bench("fo_update_all: axpy over all params", bytes, iters, || {
         store.fo_update_all(1e-3, 1.0, &grads);
     });
-    let t16 = bench(r, "fo_update_all: axpy bf16", bytes16, iters, || {
+    let t16 = h.bench("fo_update_all: axpy bf16", bytes16, iters, || {
         store16.fo_update_all(1e-3, 1.0, &grads);
     });
     println!(
@@ -193,7 +267,19 @@ fn main() {
         t32 / t16
     );
 
-    // 5b. Checkpoint write/read: the full ADDAXCK1 snapshot path (encode
+    // 5b. Sweep fusion v2's combined update: ZO and FO half-steps in one
+    // O(d) pass, vs the legacy noise sweep + separate axpy pass. Zero
+    // learning rates keep θ fixed across iterations; the z replay cost is
+    // identical in both rows, so the gap is pure memory traffic.
+    h.bench("update: combined zo+fo (1 sweep)", bytes, iters, || {
+        store.zo_fo_update(44, 0.0, 0.5, 0.0, &grads);
+    });
+    h.bench("update: legacy zo sweep + fo axpy (2 passes)", 2.0 * bytes, iters, || {
+        store.zo_update(44, 0.0, 1.0, 0.0);
+        store.fo_update_all(0.0, 1.0, &grads);
+    });
+
+    // 5c. Checkpoint write/read: the full ADDAXCK1 snapshot path (encode
     // at native dtype + CRC32 + atomic tmp/fsync/rename, then the
     // CRC-verified decode). Sized by the parameter payload; the write
     // row includes the fsync, so it tracks disk sync latency as well as
@@ -212,14 +298,14 @@ fn main() {
             zo_rng: [5, 6, 7, 8],
             ..TrainState::default()
         };
-        bench(r, "ckpt: write snapshot", bytes, iters, || {
+        h.bench("ckpt: write snapshot", bytes, iters, || {
             ckpt::write_snapshot(&ck_path, "bench", "mezo", &store, &state).unwrap();
         });
-        bench(r, "ckpt: read+verify snapshot", bytes, iters, || {
+        h.bench("ckpt: read+verify snapshot", bytes, iters, || {
             std::hint::black_box(ckpt::read_snapshot(&ck_path).unwrap());
         });
         let ck_path16 = ck_dir.join("bench16.ck");
-        bench(r, "ckpt: write snapshot bf16", bytes16, iters, || {
+        h.bench("ckpt: write snapshot bf16", bytes16, iters, || {
             ckpt::write_snapshot(&ck_path16, "bench", "mezo", &store16, &state).unwrap();
         });
         std::fs::remove_dir_all(&ck_dir).ok();
@@ -228,10 +314,10 @@ fn main() {
     // 6. Tensor primitives.
     let mut t = HostTensor::zeros(&[1 << 20]);
     let other = vec![1.0f32; 1 << 20];
-    bench(r, "tensor: axpy 1M f32", (4 << 20) as f64, if smoke { 1 } else { 200 }, || {
+    h.bench("tensor: axpy 1M f32", (4 << 20) as f64, if smoke { 1 } else { 200 }, || {
         t.axpy(1e-6, &other);
     });
-    bench(r, "tensor: norm_sq 1M f32", (4 << 20) as f64, if smoke { 1 } else { 200 }, || {
+    h.bench("tensor: norm_sq 1M f32", (4 << 20) as f64, if smoke { 1 } else { 200 }, || {
         std::hint::black_box(t.norm_sq());
     });
 
@@ -239,7 +325,7 @@ fn main() {
     let manifest = std::fs::read_to_string("artifacts/manifest.json").ok();
     if let Some(text) = manifest {
         let n = text.len() as f64;
-        bench(r, "jsonlite: parse manifest.json", n, if smoke { 1 } else { 50 }, || {
+        h.bench("jsonlite: parse manifest.json", n, if smoke { 1 } else { 50 }, || {
             std::hint::black_box(addax::jsonlite::Json::parse(&text).unwrap());
         });
     }
@@ -248,18 +334,23 @@ fn main() {
     let task = addax::data::opt_task("multirc").unwrap();
     let ex = addax::data::generate(task, 512, 4096, Some(128), 3);
     let idx: Vec<usize> = (0..16).collect();
-    bench(r, "data: build 16-row training batch", 0.0, if smoke { 1 } else { 500 }, || {
+    h.bench("data: build 16-row training batch", 0.0, if smoke { 1 } else { 500 }, || {
         std::hint::black_box(addax::data::training_batch(&ex, &idx));
     });
 
-    // Emit machine-readable results for cross-PR perf tracking.
-    let entries: Vec<Json> = results
+    // Emit machine-readable results for cross-PR perf tracking. Only
+    // ms_per_iter is gated (ci/bench_gate.py); gb_per_s / bytes /
+    // pct_peak are informational roofline context.
+    let entries: Vec<Json> = h
+        .results
         .iter()
         .map(|b| {
             obj(vec![
                 ("name", Json::from(b.name.clone())),
                 ("ms_per_iter", Json::from(b.ms_per_iter)),
                 ("gb_per_s", Json::from(b.gb_per_s)),
+                ("bytes", Json::from(b.bytes_per_iter)),
+                ("pct_peak", Json::from(b.pct_peak)),
             ])
         })
         .collect();
@@ -267,12 +358,14 @@ fn main() {
         ("bench", Json::from("hotpath")),
         ("d", Json::from(d)),
         ("smoke", Json::from(smoke)),
+        ("peak_gb_per_s", Json::from(peak_gbs)),
         ("results", Json::Arr(entries)),
     ]);
     std::fs::write("BENCH_hotpath.json", doc.dump()).expect("writing BENCH_hotpath.json");
-    println!("\nwrote BENCH_hotpath.json ({} entries)", results.len());
-    println!("(The perturb/update loops should sit near memory bandwidth;");
-    println!(" the fused ZO step removes one of the four O(d) sweeps, and");
-    println!(" bf16 storage halves the bytes each remaining sweep moves —");
-    println!(" the win shows once the worker pool saturates bandwidth.)");
+    println!("\nwrote BENCH_hotpath.json ({} entries)", h.results.len());
+    println!("(Rows are judged against the measured memcpy roofline above:");
+    println!(" the perturb/update sweeps should close on it as workers grow,");
+    println!(" lane-batched generation cuts the RNG-bound serial gap, and");
+    println!(" sweep fusion v2 removes whole O(d) passes — 2-sweep ZO steps");
+    println!(" on a fused substrate; bf16 halves the bytes each pass moves.)");
 }

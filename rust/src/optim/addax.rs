@@ -1,14 +1,18 @@
 //! Addax (Algorithm 1): the paper's optimizer.
 //!
-//! Per step (fused sweep order — same math as Alg. 1, fewer O(d) passes):
+//! Per step (sweep fusion v2 — same math as Alg. 1, fewest O(d) passes):
 //!   1. First-order gradients on `B¹` (short partition `D¹`) at θ
 //!      (Alg. 1 lines 9-12; applied last, updates commute additively).
 //!   2. SPSA probe on the zeroth-order batch `B⁰` (long partition `D⁰`)
-//!      → directional derivative `g⁰` (Alg. 2, seed s), leaving `θ − εz`.
-//!   3. Fused restore + ZO update: one sweep takes `θ − εz` to
-//!      `θ − ηα·g⁰·z` with `z` replayed from s (Alg. 1 lines 13-17) —
-//!      3 noise sweeps per step instead of 4.
-//!   4. FO update applied in place tensor-by-tensor with weight `(1−α)`.
+//!      → directional derivative `g⁰` (Alg. 2, seed s). On a substrate
+//!      with a fused probe path the params never leave θ; otherwise the
+//!      materialized probes leave `θ − εz` (the [`ProbeEnd`] contract).
+//!   3. One combined update sweep: ZO half-step `−ηα·g⁰·z` and FO
+//!      half-step `−η(1−α)·g` applied together (Alg. 1 lines 13-17),
+//!      folding in the SPSA restore when the probe ended at `θ − εz`.
+//!      A fused-substrate step thus costs 2 noise sweeps (probe replay +
+//!      combined update); the legacy path costs 3 — both down from the
+//!      original 4-sweep schedule.
 //!
 //! Addax-WA ("without assignment") is the same optimizer; the coordinator
 //! simply samples both batches from the whole dataset (`L_T ≥ L_max`).
@@ -19,7 +23,9 @@ use crate::memory::Method;
 use crate::params::ParamStore;
 use crate::runtime::ModelExec;
 
-use super::{fmt_f32, grad_global_norm, spsa_probe, BatchNeeds, Optimizer, StepBatches, StepStats};
+use super::{
+    fmt_f32, grad_global_norm, spsa_probe, BatchNeeds, Optimizer, ProbeEnd, StepBatches, StepStats,
+};
 
 /// Hyper-parameters follow Table 7: `(K¹, K⁰) = (4, 6)`, `η = 1e-4`,
 /// `ε = 1e-3`, `α` tuned per task from a small grid.
@@ -83,17 +89,26 @@ impl Optimizer for Addax {
         let g = exec.grads(params, fo_batch)?;
         let grad_norm = grad_global_norm(&g.grads);
 
-        // (2) zeroth-order probe — two forward passes, O(1) extra memory;
-        // leaves params at θ − εz.
-        let (g0, zo_loss) = spsa_probe(params, exec, zo_batch, self.eps, step_seed)?;
+        // (2) zeroth-order probe — two forward passes, O(1) extra memory.
+        let (g0, zo_loss, end) = spsa_probe(params, exec, zo_batch, self.eps, step_seed)?;
 
-        // (3) fused restore + ZO half-step via seed replay: one sweep from
-        // θ − εz to θ − ηα·g⁰·z.
-        params.restore_and_zo_update(step_seed, self.eps, self.lr, self.alpha, g0 as f32);
-
-        // (4) first-order half-step, applied in place per tensor.
-        for (idx, grad) in g.grads.iter().enumerate() {
-            params.fo_update_tensor(idx, self.lr, 1.0 - self.alpha, grad);
+        // (3) one combined sweep applies the ZO half-step −ηα·g⁰·z and
+        // the FO half-step −η(1−α)·g together, folding in the SPSA
+        // restore when the probe left θ − εz.
+        match end {
+            ProbeEnd::AtTheta => {
+                params.zo_fo_update(step_seed, self.lr, self.alpha, g0 as f32, &g.grads);
+            }
+            ProbeEnd::AtThetaMinusEps => {
+                params.restore_zo_fo_update(
+                    step_seed,
+                    self.eps,
+                    self.lr,
+                    self.alpha,
+                    g0 as f32,
+                    &g.grads,
+                );
+            }
         }
 
         Ok(StepStats {
@@ -160,9 +175,11 @@ mod tests {
     }
 
     #[test]
-    fn step_uses_three_noise_sweeps() {
-        // The fused restore+update collapses the old 4-sweep ZO pattern
-        // (+ε, −2ε, +ε, update) into 3 O(d) passes.
+    fn step_uses_two_noise_sweeps_on_a_fused_substrate() {
+        // Sweep fusion v2: the substrate's fused probe replays z once
+        // without perturbing the store, and the combined ZO+FO update is
+        // one more pass — 2 O(d) sweeps per step, down from 3 (legacy
+        // fused restore+update) and the original 4 (+ε, −2ε, +ε, update).
         use crate::optim::testutil::{quad, random_batch, store};
         use crate::optim::StepBatches;
         use crate::zorng::Xoshiro256;
@@ -177,7 +194,7 @@ mod tests {
             zo: Some(random_batch(2, &mut rng)),
         };
         opt.step(&mut p, &mut exec, &batches, 11).unwrap();
-        assert_eq!(p.noise_sweeps() - before, 3);
+        assert_eq!(p.noise_sweeps() - before, 2);
     }
 
     #[test]

@@ -76,20 +76,19 @@ impl Optimizer for HybridZoFo {
         let l_minus = exec.mean_loss(params, batch)?;
         let g0 = (l_plus - l_minus) / (2.0 * self.eps as f64);
 
-        // Fused restore + ZO update on the shallow tensors via replay.
-        params.restore_and_zo_update_subset(
+        // One combined sweep (sweep fusion v2): SPSA restore + ZO update
+        // on the shallow tensors and the FO update on the deep tensors,
+        // in a single O(d) pass instead of a noise sweep plus per-tensor
+        // axpy passes.
+        params.hybrid_zo_fo_update(
             step_seed,
             self.eps,
             self.lr_zo,
-            1.0,
             g0 as f32,
+            self.lr_fo,
+            &g.grads,
             shallow,
         );
-
-        // FO half on the deep tensors only.
-        for (offset, grad) in g.grads[split..].iter().enumerate() {
-            params.fo_update_tensor(split + offset, self.lr_fo, 1.0, grad);
-        }
 
         Ok(StepStats {
             loss: g.loss as f64,
@@ -144,6 +143,23 @@ mod tests {
         // tensor 0 changed, tensor 1 identical
         assert!(p.get(0).tensor != before.get(0).tensor);
         assert_eq!(p.get(1).tensor, before.get(1).tensor);
+    }
+
+    #[test]
+    fn step_is_three_noise_sweeps() {
+        // Two materialized subset probes + the combined
+        // restore+ZO+FO sweep; the deep tensors' FO updates ride inside
+        // that third pass instead of extra per-tensor passes.
+        let mut opt = HybridZoFo::new(0.1, 0.02, 1e-3, 2, 0.5);
+        let mut exec = quad(16, 0.0);
+        let mut p = store(16);
+        p.perturb(6, 1.0);
+        let mut rng = Xoshiro256::new(12);
+        let b = random_batch(2, &mut rng);
+        let before = p.noise_sweeps();
+        opt.step(&mut p, &mut exec, &super::StepBatches { fo: Some(b), zo: None }, 5)
+            .unwrap();
+        assert_eq!(p.noise_sweeps() - before, 3);
     }
 
     #[test]

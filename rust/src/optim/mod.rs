@@ -306,23 +306,44 @@ impl OptSpec {
     }
 }
 
+/// Where an SPSA probe left the parameter store — the contract the caller
+/// needs to pick its restore/update sweep (sweep fusion v2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProbeEnd {
+    /// The fused perturb+probe-eval path never touched the store: the
+    /// params still sit at `θ`, bit for bit. The caller updates with
+    /// [`ParamStore::zo_fo_update`] / `perturb(seed, −lr·coeff·g⁰)` —
+    /// no restore sweep exists to fuse away.
+    AtTheta,
+    /// The materialized path's last perturb was `−2ε`: the params sit at
+    /// `θ − εz`. The caller owns the restore — `perturb(seed, eps)` or
+    /// one of the fused restore+update sweeps.
+    AtThetaMinusEps,
+}
+
 /// SPSA zeroth-order probe (Algorithm 2, first two sweeps) via seed replay.
 ///
-/// Perturbs `params` in place (+ε, then −2ε), evaluating the loss twice,
-/// and returns `g⁰ = (L(θ+εz) − L(θ−εz)) / 2ε` together with the mean of
-/// the two probe losses. **On return the params sit at `θ − εz`** — the
-/// caller owns the restore, either `params.perturb(seed, eps)` (plain
-/// restore, what [`spsa_g0`] does) or the fused
-/// [`ParamStore::restore_and_zo_update`], which folds the restore and the
-/// ZO update `θ ← θ − ηαg⁰z` into one O(d) sweep — 3 total sweeps per ZO
-/// step instead of 4.
+/// Returns `g⁰ = (L(θ+εz) − L(θ−εz)) / 2ε`, the mean of the two probe
+/// losses, and a [`ProbeEnd`] telling the caller where the params ended:
+///
+/// - When the substrate has a fused perturb+probe-eval path
+///   (`ModelExec::probe_rows_fused`), both probes evaluate in one
+///   streaming pass that replays `z` internally — the store is never
+///   perturbed ([`ProbeEnd::AtTheta`]) and the whole ZO step needs only
+///   **one** more O(d) sweep (the update), down from 3 total.
+/// - Otherwise the legacy schedule runs — perturb `+ε`, evaluate, perturb
+///   `−2ε`, evaluate — leaving `θ − εz` ([`ProbeEnd::AtThetaMinusEps`]);
+///   the caller's fused restore+update keeps that step at 3 sweeps.
+///
+/// Both paths produce bit-identical `g⁰` and losses (the fused substrate
+/// is contractually bit-equal to the materialized schedule).
 pub fn spsa_probe(
     params: &mut ParamStore,
     exec: &mut dyn ModelExec,
     batch: &TokenBatch,
     eps: f32,
     seed: u64,
-) -> Result<(f64, f64)> {
+) -> Result<(f64, f64, ProbeEnd)> {
     // Fleet tail work-stealing seam: when a `steal::StealCtx` is
     // installed on this thread AND a thief has advertised, the probe is
     // sharded across workers — bit-identically, so this branch is
@@ -332,18 +353,29 @@ pub fn spsa_probe(
     if let Some(out) = crate::sched::steal::sharded_probe(params, exec, batch, eps, seed)? {
         return Ok(out);
     }
+    if let Some((plus, minus)) = exec.probe_rows_fused(params, batch, eps, seed)? {
+        // One full pass of noise generation happened inside the executor;
+        // keep the O(d)-traffic metric honest.
+        params.tally_noise_sweep();
+        let l_plus = plus.mean_loss();
+        let l_minus = minus.mean_loss();
+        let g0 = (l_plus - l_minus) / (2.0 * eps as f64);
+        return Ok((g0, 0.5 * (l_plus + l_minus), ProbeEnd::AtTheta));
+    }
     params.perturb(seed, eps);
     let l_plus = exec.mean_loss(params, batch)?;
     params.perturb(seed, -2.0 * eps);
     let l_minus = exec.mean_loss(params, batch)?;
     let g0 = (l_plus - l_minus) / (2.0 * eps as f64);
-    Ok((g0, 0.5 * (l_plus + l_minus)))
+    Ok((g0, 0.5 * (l_plus + l_minus), ProbeEnd::AtThetaMinusEps))
 }
 
-/// [`spsa_probe`] plus the plain restore sweep: `params` come back exactly
-/// (bit-wise) because the same `z` values are added and subtracted. Used
-/// where the estimate is wanted without an update (tests, diagnostics);
-/// the optimizers use the probe + fused-update path instead.
+/// [`spsa_probe`] that always hands the params back at `θ`: exact
+/// (bit-wise) under the fused path (the store was never touched), and
+/// exact under the materialized path too because the same `z` values are
+/// added and subtracted. Used where the estimate is wanted without an
+/// update (tests, diagnostics); the optimizers use the probe +
+/// fused-update path instead.
 pub fn spsa_g0(
     params: &mut ParamStore,
     exec: &mut dyn ModelExec,
@@ -351,9 +383,11 @@ pub fn spsa_g0(
     eps: f32,
     seed: u64,
 ) -> Result<(f64, f64)> {
-    let out = spsa_probe(params, exec, batch, eps, seed)?;
-    params.perturb(seed, eps);
-    Ok(out)
+    let (g0, loss, end) = spsa_probe(params, exec, batch, eps, seed)?;
+    if end == ProbeEnd::AtThetaMinusEps {
+        params.perturb(seed, eps);
+    }
+    Ok((g0, loss))
 }
 
 /// `z · g` with `z` replayed from `seed` under the counter-addressed block
@@ -457,8 +491,49 @@ mod tests {
         assert!((g0 - dir).abs() < 0.05 * dir.abs().max(1.0), "{g0} vs {dir}");
     }
 
+    /// Shim hiding a substrate's fused probe path, forcing `spsa_probe`
+    /// down the legacy materialized perturb → eval → perturb → eval
+    /// schedule (the trait-default `probe_rows_fused` returns `None`).
+    struct NoFused<'a>(&'a mut dyn ModelExec);
+
+    impl ModelExec for NoFused<'_> {
+        fn forward(
+            &mut self,
+            params: &ParamStore,
+            batch: &TokenBatch,
+        ) -> Result<crate::runtime::FwdOut> {
+            self.0.forward(params, batch)
+        }
+        fn grads(
+            &mut self,
+            params: &ParamStore,
+            batch: &TokenBatch,
+        ) -> Result<crate::runtime::GradOut> {
+            self.0.grads(params, batch)
+        }
+        fn stats(&self) -> crate::runtime::ExecStats {
+            self.0.stats()
+        }
+    }
+
     #[test]
-    fn probe_leaves_params_at_theta_minus_eps_z() {
+    fn fused_probe_leaves_params_at_theta() {
+        let mut params = testutil::store(16);
+        params.perturb(4, 1.0);
+        let before = params.clone();
+        let mut exec = testutil::quad(16, 0.0);
+        let mut rng = crate::zorng::Xoshiro256::new(6);
+        let batch = testutil::random_batch(2, &mut rng);
+        let (g0, loss, end) = spsa_probe(&mut params, &mut exec, &batch, 1e-3, 55).unwrap();
+        assert!(g0.is_finite() && loss.is_finite());
+        assert_eq!(end, ProbeEnd::AtTheta);
+        assert_eq!(params.dist_sq(&before), 0.0, "fused probe must not touch the store");
+        // setup perturb (1) + the fused probe's internal z replay (1)
+        assert_eq!(params.noise_sweeps(), 2);
+    }
+
+    #[test]
+    fn legacy_probe_leaves_params_at_theta_minus_eps_z() {
         let mut params = testutil::store(16);
         params.perturb(4, 1.0);
         let before = params.clone();
@@ -466,7 +541,9 @@ mod tests {
         let mut rng = crate::zorng::Xoshiro256::new(6);
         let batch = testutil::random_batch(2, &mut rng);
         let (seed, eps) = (55u64, 1e-3f32);
-        spsa_probe(&mut params, &mut exec, &batch, eps, seed).unwrap();
+        let (_, _, end) =
+            spsa_probe(&mut params, &mut NoFused(&mut exec), &batch, eps, seed).unwrap();
+        assert_eq!(end, ProbeEnd::AtThetaMinusEps);
         // manual θ − εz from the same replay (float tolerance: the probe
         // reaches it as (θ+εz)−2εz, the manual path in one add)
         let mut manual = before.clone();
@@ -476,6 +553,24 @@ mod tests {
         // the caller-owned restore brings them back
         params.perturb(seed, eps);
         assert!(params.dist_sq(&before) < 1e-10);
+    }
+
+    #[test]
+    fn fused_and_legacy_probes_agree_bitwise() {
+        let mut params = testutil::store(64);
+        params.perturb(9, 1.0);
+        let mut exec = testutil::quad(64, 0.5);
+        let mut rng = crate::zorng::Xoshiro256::new(8);
+        let batch = testutil::random_batch(3, &mut rng);
+        let (seed, eps) = (123u64, 1e-3f32);
+        let (g0_f, l_f, end_f) = spsa_probe(&mut params, &mut exec, &batch, eps, seed).unwrap();
+        assert_eq!(end_f, ProbeEnd::AtTheta);
+        let (g0_l, l_l, end_l) =
+            spsa_probe(&mut params, &mut NoFused(&mut exec), &batch, eps, seed).unwrap();
+        assert_eq!(end_l, ProbeEnd::AtThetaMinusEps);
+        params.perturb(seed, eps); // caller-owned restore for the legacy path
+        assert_eq!(g0_f.to_bits(), g0_l.to_bits(), "{g0_f} vs {g0_l}");
+        assert_eq!(l_f.to_bits(), l_l.to_bits(), "{l_f} vs {l_l}");
     }
 
     #[test]

@@ -15,7 +15,8 @@
 use anyhow::Result;
 
 use crate::params::ParamStore;
-use crate::zorng::NoiseStream;
+use crate::tensor::{Bf16, Dtype};
+use crate::zorng::{block_seed, fill_block, NoiseStream, NOISE_BLOCK};
 
 use super::{ExecStats, FwdOut, GradOut, ModelExec, TokenBatch};
 
@@ -172,6 +173,72 @@ impl ModelExec for QuadraticExec {
         })
     }
 
+    /// Sweep fusion v2 on the mock: both SPSA probes in one streaming
+    /// pass over the parameters, without perturbing the store.
+    ///
+    /// Bit-parity contract with the materialized schedule
+    /// (`perturb(+ε) → forward → perturb(−2ε) → forward`), per element:
+    /// `v₊ = round(v + ε·z)`, `v₋ = round(v₊ + (−2ε)·z)` with `round`
+    /// the store dtype's write rounding, `z` replayed per (tensor,
+    /// block) exactly as the store sweeps replay it, and each row's
+    /// f64 loss accumulated in the same element order with the same ξ
+    /// draws as [`QuadraticExec::row_loss`] — so the returned rows are
+    /// bit-identical to the two materialized forwards (the steal
+    /// subsystem's byte-identity proofs depend on this).
+    fn probe_rows_fused(
+        &mut self,
+        params: &ParamStore,
+        batch: &TokenBatch,
+        eps: f32,
+        seed: u64,
+    ) -> Result<Option<(FwdOut, FwdOut)>> {
+        self.stats.forward_calls += 2;
+        let round: fn(f32) -> f32 = match params.dtype() {
+            Dtype::F32 => |x| x,
+            Dtype::Bf16 => |x| Bf16::from_f32(x).to_f32(),
+        };
+        let m2eps = -2.0 * eps;
+        let mut streams: Vec<NoiseStream> = (0..batch.batch)
+            .map(|r| NoiseStream::new(self.example_seed(batch, r)))
+            .collect();
+        let mut acc_p = vec![0.0f64; batch.batch];
+        let mut acc_m = vec![0.0f64; batch.batch];
+        let mut z = [0.0f32; NOISE_BLOCK];
+        let mut i = 0usize;
+        for (param_idx, t) in params.tensors().enumerate() {
+            let vals = t.as_f32();
+            for (block_idx, chunk) in vals.chunks(NOISE_BLOCK).enumerate() {
+                let zb = &mut z[..chunk.len()];
+                fill_block(block_seed(seed, param_idx, block_idx), zb);
+                for (&v, &zi) in chunk.iter().zip(zb.iter()) {
+                    let v_p = round(v + eps * zi);
+                    let v_m = round(v_p + m2eps * zi);
+                    let d_p = (v_p - self.target[i]) as f64;
+                    let d_m = (v_m - self.target[i]) as f64;
+                    let quad_p = 0.5 * self.curvature[i] as f64 * d_p * d_p;
+                    let quad_m = 0.5 * self.curvature[i] as f64 * d_m * d_m;
+                    for (r, stream) in streams.iter_mut().enumerate() {
+                        let xi = stream.next_normal() as f64;
+                        acc_p[r] += quad_p;
+                        acc_p[r] += self.sigma as f64 * xi * v_p as f64;
+                        acc_m[r] += quad_m;
+                        acc_m[r] += self.sigma as f64 * xi * v_m as f64;
+                    }
+                    i += 1;
+                }
+            }
+        }
+        let plus = FwdOut {
+            sums: acc_p.iter().map(|&x| x as f32).collect(),
+            counts: vec![1.0; batch.batch],
+        };
+        let minus = FwdOut {
+            sums: acc_m.iter().map(|&x| x as f32).collect(),
+            counts: vec![1.0; batch.batch],
+        };
+        Ok(Some((plus, minus)))
+    }
+
     fn stats(&self) -> ExecStats {
         self.stats
     }
@@ -258,6 +325,44 @@ mod tests {
             (g0 - dir).abs() < 0.05 * dir.abs().max(1.0),
             "spsa {g0} vs directional {dir}"
         );
+    }
+
+    #[test]
+    fn fused_probe_is_bit_identical_to_materialized_probes() {
+        // The fusion-v2 contract: probe_rows_fused's per-row sums equal
+        // the materialized perturb→forward→perturb→forward schedule bit
+        // for bit, in both dtypes, spanning a block boundary (tail block
+        // shorter than NOISE_BLOCK).
+        let d = NOISE_BLOCK + 293;
+        let (seed, eps) = (77u64, 1e-2f32);
+        for dtype in [Dtype::F32, Dtype::Bf16] {
+            let mut exec = QuadraticExec::new(d, 0.5, 2.0, 0.3, 13);
+            let mut p = ParamStore::zeros(&[("w".to_string(), vec![d])]).to_dtype(dtype);
+            p.perturb(11, 1.0);
+            let b = batch(3);
+            let mut ctrl = p.clone();
+            ctrl.perturb(seed, eps);
+            let plus = exec.forward(&ctrl, &b).unwrap();
+            ctrl.perturb(seed, -2.0 * eps);
+            let minus = exec.forward(&ctrl, &b).unwrap();
+            let before = exec.stats().forward_calls;
+            let (fp, fm) = exec.probe_rows_fused(&p, &b, eps, seed).unwrap().unwrap();
+            assert_eq!(exec.stats().forward_calls, before + 2, "fused probe = 2 evals");
+            for r in 0..b.batch {
+                assert_eq!(
+                    fp.sums[r].to_bits(),
+                    plus.sums[r].to_bits(),
+                    "dtype={dtype:?} plus row {r}"
+                );
+                assert_eq!(
+                    fm.sums[r].to_bits(),
+                    minus.sums[r].to_bits(),
+                    "dtype={dtype:?} minus row {r}"
+                );
+            }
+            assert_eq!(fp.counts, plus.counts);
+            assert_eq!(fm.counts, minus.counts);
+        }
     }
 
     #[test]

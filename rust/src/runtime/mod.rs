@@ -136,6 +136,28 @@ pub trait ModelExec {
     fn mean_loss(&mut self, params: &ParamStore, batch: &TokenBatch) -> Result<f64> {
         Ok(self.forward(params, batch)?.mean_loss())
     }
+    /// Sweep fusion v2: evaluate both SPSA probes `L(θ + εz)` and
+    /// `L(θ − εz)` per example **without the caller perturbing the
+    /// parameter store** — the substrate replays the counter-addressed
+    /// `z` itself while streaming over the parameters.
+    ///
+    /// Returns `Ok(None)` when the substrate has no fused path (the
+    /// default; the caller falls back to the materialized
+    /// perturb → forward → perturb → forward schedule). A substrate that
+    /// returns `Some((plus, minus))` must produce per-row sums/counts
+    /// **bit-identical** to the materialized schedule at the store's
+    /// dtype (round-to-storage after each perturb, same accumulation
+    /// order) — the steal subsystem's stolen-probe byte-identity proof
+    /// rests on the two paths being interchangeable.
+    fn probe_rows_fused(
+        &mut self,
+        _params: &ParamStore,
+        _batch: &TokenBatch,
+        _eps: f32,
+        _seed: u64,
+    ) -> Result<Option<(FwdOut, FwdOut)>> {
+        Ok(None)
+    }
     fn stats(&self) -> ExecStats;
 }
 

@@ -19,12 +19,16 @@
 //!   `result.<seed:016x>.json`, it recomputes the probe's *upper row
 //!   shard* and publishes the per-row loss halves;
 //! * the holder, seeing a foreign marker at probe time, publishes the
-//!   task, computes the *lower* row shard locally, and waits up to a
-//!   timeout for the result — **falling back to computing the upper
-//!   shard itself** (from a `θ+εz` snapshot taken before the second
-//!   perturbation) when the thief is slow or dead. A dead thief can
-//!   therefore never stall a run; the holder also clears stale markers
-//!   on fallback so it stops offering shards to a corpse.
+//!   task, computes the *lower* row shard locally — in one fused pass
+//!   when the substrate offers `probe_rows_fused` (the store is never
+//!   perturbed), via the materialized perturb schedule otherwise — and
+//!   waits up to a timeout for the result, **falling back to computing
+//!   the upper shard itself** (fused again, or from a `θ+εz` snapshot
+//!   taken before the second perturbation) when the thief is slow or
+//!   dead. A dead thief can therefore never stall a run; the holder also
+//!   clears stale markers on fallback so it stops offering shards to a
+//!   corpse. The thief always materializes — the fused path's
+//!   bit-identity contract makes the two interchangeable shard by shard.
 //!
 //! ## Why stolen and unstolen runs are bit-identical
 //!
@@ -51,6 +55,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::jsonlite::{obj, Json};
+use crate::optim::ProbeEnd;
 use crate::params::ParamStore;
 use crate::runtime::{FwdOut, ModelExec, TokenBatch};
 use crate::tensor::Dtype;
@@ -179,17 +184,20 @@ fn parse_i32_arr(v: &Json, key: &str) -> Result<Vec<i32>> {
 /// Holder side: try to shard this SPSA probe to a thief. Returns
 /// `Ok(None)` when stealing is inactive (no context installed, batch too
 /// small to split, or no thief advertised) — the caller then runs the
-/// normal local probe. Returns `Ok(Some((g0, probe_loss)))` with params
-/// left at `θ − εz`, exactly like `spsa_probe`, when it ran the probe —
-/// whether the shard came back from the thief or the timeout fallback
-/// recomputed it locally.
+/// normal local probe. Returns `Ok(Some((g0, probe_loss, end)))` when it
+/// ran the probe — whether the shard came back from the thief or the
+/// timeout fallback recomputed it locally. Exactly like `spsa_probe`,
+/// the params end at `θ` when the substrate has a fused probe path
+/// ([`ProbeEnd::AtTheta`]) and at `θ − εz` otherwise
+/// ([`ProbeEnd::AtThetaMinusEps`]); either way every returned bit
+/// matches the corresponding unstolen probe.
 pub fn sharded_probe(
     params: &mut ParamStore,
     exec: &mut dyn ModelExec,
     batch: &TokenBatch,
     eps: f32,
     seed: u64,
-) -> Result<Option<(f64, f64)>> {
+) -> Result<Option<(f64, f64, ProbeEnd)>> {
     // Fast path: nothing installed on this thread (the common case for
     // every non-fleet probe in the codebase).
     let active = CTX.with(|c| c.borrow().is_some());
@@ -254,15 +262,28 @@ pub fn sharded_probe(
     ]);
     write_atomic(&dir.join(format!("task.{tag}.json")), task.dump().as_bytes())?;
 
-    // Local lower shard: + half, snapshot, − half (2 sweeps, same as an
-    // unstolen probe — the snapshot is a byte copy, not a perturbation,
-    // so `noise_sweeps` accounting is unchanged).
+    // Local lower shard. A fused substrate streams both probe halves in
+    // one pass without ever perturbing the store (the published θ *is*
+    // the live params, so the thief still replays from the right bytes);
+    // otherwise the legacy schedule runs — + half, snapshot, − half
+    // (2 sweeps, same as an unstolen probe; the snapshot is a byte copy,
+    // not a perturbation, so `noise_sweeps` accounting is unchanged).
     let lower = row_slice(batch, 0, mid);
-    params.perturb(seed, eps);
-    let plus_lower = exec.forward(params, &lower)?;
-    let plus_snapshot = params.clone();
-    params.perturb(seed, -2.0 * eps);
-    let minus_lower = exec.forward(params, &lower)?;
+    let (plus_lower, minus_lower, plus_snapshot, end) =
+        match exec.probe_rows_fused(params, &lower, eps, seed)? {
+            Some((plus, minus)) => {
+                params.tally_noise_sweep();
+                (plus, minus, None, ProbeEnd::AtTheta)
+            }
+            None => {
+                params.perturb(seed, eps);
+                let plus = exec.forward(params, &lower)?;
+                let snapshot = params.clone();
+                params.perturb(seed, -2.0 * eps);
+                let minus = exec.forward(params, &lower)?;
+                (plus, minus, Some(snapshot), ProbeEnd::AtThetaMinusEps)
+            }
+        };
 
     // Wait for the thief's upper shard; fall back locally on timeout.
     let result_path = dir.join(format!("result.{tag}.json"));
@@ -304,11 +325,26 @@ pub fn sharded_probe(
             u
         }
         None => {
-            // The thief is slow or dead: recompute the upper shard from
-            // the snapshots we already hold and stop advertising to it.
+            // The thief is slow or dead: recompute the upper shard
+            // locally and stop advertising to it. The fused substrate
+            // replays its own z (one more counted generation pass); the
+            // legacy path reuses the `θ+εz` snapshot taken above plus
+            // the live `θ−εz` store.
             let upper_rows = row_slice(batch, mid, batch.batch);
-            let plus_upper = exec.forward(&plus_snapshot, &upper_rows)?;
-            let minus_upper = exec.forward(params, &upper_rows)?;
+            let (plus_upper, minus_upper) = match &plus_snapshot {
+                None => {
+                    let (p, m) = exec
+                        .probe_rows_fused(params, &upper_rows, eps, seed)?
+                        .context("substrate withdrew its fused probe path mid-run")?;
+                    params.tally_noise_sweep();
+                    (p, m)
+                }
+                Some(snapshot) => {
+                    let p = exec.forward(snapshot, &upper_rows)?;
+                    let m = exec.forward(params, &upper_rows)?;
+                    (p, m)
+                }
+            };
             if let Some(marker) = thief {
                 std::fs::remove_file(dir.join(marker)).ok();
             }
@@ -331,7 +367,7 @@ pub fn sharded_probe(
         std::fs::remove_file(dir.join(name)).ok();
     }
     let g0 = (l_plus - l_minus) / (2.0 * eps as f64);
-    Ok(Some((g0, 0.5 * (l_plus + l_minus))))
+    Ok(Some((g0, 0.5 * (l_plus + l_minus), end)))
 }
 
 /// Serve one published task file. Returns `false` when the task has no
@@ -531,6 +567,26 @@ mod tests {
         QuadraticExec::new(16, 0.5, 2.0, 0.1, 42)
     }
 
+    /// Wrapper hiding `QuadraticExec`'s fused probe path, so tests can
+    /// still drive the holder's legacy materialized shard schedule.
+    struct Materialized(QuadraticExec);
+
+    impl ModelExec for Materialized {
+        fn forward(&mut self, params: &ParamStore, batch: &TokenBatch) -> Result<FwdOut> {
+            self.0.forward(params, batch)
+        }
+        fn grads(
+            &mut self,
+            params: &ParamStore,
+            batch: &TokenBatch,
+        ) -> Result<crate::runtime::GradOut> {
+            self.0.grads(params, batch)
+        }
+        fn stats(&self) -> crate::runtime::ExecStats {
+            self.0.stats()
+        }
+    }
+
     #[test]
     fn no_context_is_a_no_op() {
         let mut p = store(16, 1);
@@ -544,9 +600,11 @@ mod tests {
         let b = batch(5);
         let (eps, seed) = (1e-3f32, 0xDEAD_BEEF_CAFE_0001u64);
 
-        // control: plain local probe
+        // control: plain local probe (fused on the mock substrate)
         let mut p_ctrl = store(16, 1);
-        let (g0_ctrl, l_ctrl) = spsa_probe(&mut p_ctrl, &mut exec(), &b, eps, seed).unwrap();
+        let (g0_ctrl, l_ctrl, end_ctrl) =
+            spsa_probe(&mut p_ctrl, &mut exec(), &b, eps, seed).unwrap();
+        assert_eq!(end_ctrl, ProbeEnd::AtTheta);
 
         // stolen: a thief thread serves the run dir while the holder probes
         let guard = install(StealCtx {
@@ -564,10 +622,11 @@ mod tests {
         });
         let mut p = store(16, 1);
         let out = sharded_probe(&mut p, &mut exec(), &b, eps, seed).unwrap();
-        let (g0, l) = out.expect("a waiting thief means the probe is sharded");
+        let (g0, l, end) = out.expect("a waiting thief means the probe is sharded");
         assert_eq!(g0.to_bits(), g0_ctrl.to_bits(), "g0 must be bit-identical");
         assert_eq!(l.to_bits(), l_ctrl.to_bits(), "probe loss must be bit-identical");
-        assert_eq!(p.dist_sq(&p_ctrl), 0.0, "params end at the same θ−εz");
+        assert_eq!(end, end_ctrl, "stolen and local probes report the same end point");
+        assert_eq!(p.dist_sq(&p_ctrl), 0.0, "params end at the same point");
         assert_eq!(stolen_count(), 1);
         finish_run_dir(&dir);
         assert!(thief.join().unwrap() >= 1, "the thief actually served the shard");
@@ -576,12 +635,55 @@ mod tests {
     }
 
     #[test]
+    fn legacy_holder_path_matches_the_fused_local_probe_bitwise() {
+        // A holder without a fused substrate runs the materialized shard
+        // schedule; the thief materializes too. The reassembled numbers
+        // must still match the *fused* unstolen probe bit for bit — this
+        // is the cross-path interchangeability the fused contract buys.
+        let dir = tmp_dir("legacy").join("run-d");
+        let b = batch(5);
+        let (eps, seed) = (1e-3f32, 0xBEEF_0000_0000_0007u64);
+        let mut p_ctrl = store(16, 1);
+        let (g0_ctrl, l_ctrl, end_ctrl) =
+            spsa_probe(&mut p_ctrl, &mut exec(), &b, eps, seed).unwrap();
+        assert_eq!(end_ctrl, ProbeEnd::AtTheta);
+
+        let _guard = install(StealCtx {
+            dir: dir.clone(),
+            worker: "holder".into(),
+            first_wait_ms: 5_000,
+            wait_ms: 10_000,
+            stolen: 0,
+        })
+        .unwrap();
+        let thief_dir = dir.clone();
+        let thief = std::thread::spawn(move || {
+            let mut e = exec();
+            serve_run(&thief_dir, "thief", &mut e, 500).unwrap()
+        });
+        let mut p = store(16, 1);
+        let mut holder_exec = Materialized(exec());
+        let (g0, l, end) = sharded_probe(&mut p, &mut holder_exec, &b, eps, seed)
+            .unwrap()
+            .expect("a waiting thief means the probe is sharded");
+        assert_eq!(g0.to_bits(), g0_ctrl.to_bits());
+        assert_eq!(l.to_bits(), l_ctrl.to_bits());
+        assert_eq!(end, ProbeEnd::AtThetaMinusEps, "legacy holder ends at θ − εz");
+        p.perturb(seed, eps); // caller-owned restore
+        // tolerance, not bitwise: the control store never moved, while
+        // this one went +εz, −2εz, +εz
+        assert!(p.dist_sq(&p_ctrl) < 1e-10, "after restore both sit at θ");
+        finish_run_dir(&dir);
+        assert!(thief.join().unwrap() >= 1);
+    }
+
+    #[test]
     fn dead_thief_falls_back_bit_identically_and_is_deadvertised() {
         let dir = tmp_dir("dead").join("run-b");
         let b = batch(4);
         let (eps, seed) = (2e-3f32, 77u64);
         let mut p_ctrl = store(16, 3);
-        let (g0_ctrl, l_ctrl) = spsa_probe(&mut p_ctrl, &mut exec(), &b, eps, seed).unwrap();
+        let (g0_ctrl, l_ctrl, _) = spsa_probe(&mut p_ctrl, &mut exec(), &b, eps, seed).unwrap();
 
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("thief.ghost"), b"").unwrap(); // advertises, never serves
@@ -594,17 +696,47 @@ mod tests {
         })
         .unwrap();
         let mut p = store(16, 3);
-        let (g0, l) = sharded_probe(&mut p, &mut exec(), &b, eps, seed)
+        let (g0, l, end) = sharded_probe(&mut p, &mut exec(), &b, eps, seed)
             .unwrap()
             .expect("marker present: the shard path engages");
         assert_eq!(g0.to_bits(), g0_ctrl.to_bits());
         assert_eq!(l.to_bits(), l_ctrl.to_bits());
+        assert_eq!(end, ProbeEnd::AtTheta, "fused holder never perturbs");
         assert_eq!(p.dist_sq(&p_ctrl), 0.0);
         assert_eq!(stolen_count(), 0, "a timeout fallback is not a steal");
         assert!(
             !dir.join("thief.ghost").exists(),
             "the dead thief's marker is cleared so it stops attracting shards"
         );
+    }
+
+    #[test]
+    fn legacy_dead_thief_fallback_uses_the_snapshot_bit_identically() {
+        let dir = tmp_dir("deadlegacy").join("run-e");
+        let b = batch(4);
+        let (eps, seed) = (2e-3f32, 78u64);
+        let mut p_ctrl = store(16, 3);
+        let (g0_ctrl, l_ctrl, _) = spsa_probe(&mut p_ctrl, &mut exec(), &b, eps, seed).unwrap();
+
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("thief.ghost"), b"").unwrap();
+        let _guard = install(StealCtx {
+            dir: dir.clone(),
+            worker: "holder".into(),
+            first_wait_ms: 0,
+            wait_ms: 30,
+            stolen: 0,
+        })
+        .unwrap();
+        let mut p = store(16, 3);
+        let mut holder_exec = Materialized(exec());
+        let (g0, l, end) = sharded_probe(&mut p, &mut holder_exec, &b, eps, seed)
+            .unwrap()
+            .expect("marker present: the shard path engages");
+        assert_eq!(g0.to_bits(), g0_ctrl.to_bits());
+        assert_eq!(l.to_bits(), l_ctrl.to_bits());
+        assert_eq!(end, ProbeEnd::AtThetaMinusEps);
+        assert!(!dir.join("thief.ghost").exists());
     }
 
     #[test]
