@@ -9,6 +9,8 @@
 //!              [--halt-after N] [--dump-params]
 //!              [--probe-port P [--probe-linger S]]
 //!              [--worker-id ID [--lease-ttl SECS] [--chaos-seed S]]
+//! addax fleet-status [--manifest PATH] [--probe-port P] [--watch]
+//!                                                   read-only fleet aggregator
 //! addax ckpt   inspect|verify FILE...              snapshot header / full CRC pass
 //! addax ckpt   diff A B                            compare two snapshots
 //! addax repro  <id|all> [--fast] [--model KEY]     regenerate a paper table/figure
@@ -26,7 +28,9 @@ use addax::coordinator::train;
 use addax::data;
 use addax::jsonlite::Json;
 use addax::memory::{self, footprint, geometry, Device, Dtype, Method, Workload};
-use addax::obs::{ProbeServer, StatusBoard};
+use addax::obs::fleet::{load_fleet, DEFAULT_FEDERATE_TIMEOUT};
+use addax::obs::http::DEFAULT_MEM_WINDOW_SECS;
+use addax::obs::{FleetServer, ProbeServer, StatusBoard};
 use addax::repro::{self, Harness};
 use addax::runtime::manifest::{default_artifacts_dir, Manifest};
 use addax::runtime::XlaExec;
@@ -39,6 +43,7 @@ fn main() -> Result<()> {
     match args.first().map(String::as_str) {
         Some("train") => cmd_train(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
+        Some("fleet-status") => cmd_fleet_status(&args[1..]),
         Some("ckpt") => cmd_ckpt(&args[1..]),
         Some("repro") => cmd_repro(&args[1..]),
         Some("memory") => cmd_memory(&args[1..]),
@@ -66,6 +71,8 @@ fn print_help() {
          \x20            [--worker-id ID [--lease-ttl SECS] [--chaos-seed S]\n  \
          \x20            [--skew-margin-ms MS] [--clock-offset-ms MS] [--rotate-after N]\n  \
          \x20            [--no-steal] [--steal-wait-ms MS]]\n  \
+         addax fleet-status [--manifest PATH] [--probe-port P] [--watch]\n  \
+         \x20            [--skew-margin-ms MS] [--federate-timeout-ms MS] [--no-federate]\n  \
          addax ckpt   inspect FILE... | verify FILE... | diff A B\n  \
          addax repro  <id|all> [--fast] [--model KEY]\n  \
          addax memory --geometry G --method M [--batch B] [--len L] [--gpus N] [--hbm GB]\n  \
@@ -115,7 +122,21 @@ fn print_help() {
          resume|abort. Control verbs ride the existing halt/checkpoint rails at\n  \
          step boundaries, so a probed run stays byte-identical to an unprobed\n  \
          one. --probe-linger S holds the server open after the sweep for a\n  \
-         final scrape (CI). See OPERATIONS.md for the endpoint reference.\n\nCKPT:\n  \
+         final scrape (CI). GET /metrics serves the Prometheus text exposition;\n  \
+         --mem-window-secs S (or sweep.mem_window_secs) sets the /mem leak-\n  \
+         detector regression window. See OPERATIONS.md for the endpoint\n  \
+         reference.\n\nFLEET-STATUS:\n  \
+         Read-only fleet aggregator: reconstructs the whole fleet's state from\n  \
+         the side files workers already write (manifest + lease ledger + times\n  \
+         telemetry + steal dirs) — per-worker held runs and lease freshness,\n  \
+         per-run state-machine position (done/active/expired/released/pending),\n  \
+         resume/steal/rotation counters. When lease records advertise probe\n  \
+         addresses, it federates live step/loss from each worker's probe\n  \
+         server (--federate-timeout-ms MS per probe, --no-federate opts out);\n  \
+         unreachable probes degrade to ledger-only. Without --probe-port it\n  \
+         prints one JSON snapshot (--watch re-prints every --interval-secs S);\n  \
+         with --probe-port P it serves GET /fleet + GET /metrics + GET /healthz\n  \
+         for scrapers. Never writes: aggregation cannot perturb a fleet.\n\nCKPT:\n  \
          inspect prints a snapshot's header (identity hash, dtype, step, eval\n  \
          cadence, tensors); verify additionally checks every chunk CRC; diff\n  \
          compares two snapshots (header fields + per-tensor element diffs).\n\n\
@@ -153,6 +174,19 @@ fn probe_linger_secs(args: &[String]) -> Result<f64> {
         Some(s) => s.parse().context("--probe-linger wants seconds"),
         None => Ok(0.0),
     }
+}
+
+/// `--mem-window-secs S` (else the config's `sweep.mem_window_secs`):
+/// the `/mem` leak-detector regression window.
+fn mem_window_secs(args: &[String], from_cfg: f64) -> Result<f64> {
+    let w = match flag(args, "--mem-window-secs") {
+        Some(s) => s.parse().context("--mem-window-secs wants seconds (a number)")?,
+        None => from_cfg,
+    };
+    if w <= 0.0 {
+        bail!("--mem-window-secs {w} must be positive");
+    }
+    Ok(w)
 }
 
 /// Hold the probe server open for `secs`; it Drop-stops when the caller
@@ -240,6 +274,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         p if p < 0.0 => None,
         p => Some(p as u16),
     };
+    let cfg_window = cfg.f32_or("sweep.mem_window_secs", DEFAULT_MEM_WINDOW_SECS as f32)? as f64;
     let linger_secs = probe_linger_secs(args)?;
     let mut probe_server = None;
     if let Some(port) = probe_port(args, cfg_port)? {
@@ -247,7 +282,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         let probe = board.register(&format!("train-{model_key}-{}", task.name), tc.steps);
         probe.set_footprint_bytes(params.storage_bytes() as f64);
         tc.probe = Some(probe);
-        let srv = ProbeServer::start(board, port)?;
+        let srv = ProbeServer::start_with_window(board, port, mem_window_secs(args, cfg_window)?)?;
         println!("probe: listening on http://{}", srv.addr());
         probe_server = Some(srv);
     }
@@ -320,7 +355,11 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     let mut board = None;
     if let Some(port) = probe_port(args, sweep.probe_port)? {
         let b = StatusBoard::new();
-        let srv = ProbeServer::start(b.clone(), port)?;
+        let srv = ProbeServer::start_with_window(
+            b.clone(),
+            port,
+            mem_window_secs(args, sweep.mem_window_secs)?,
+        )?;
         println!("probe: listening on http://{}", srv.addr());
         probe_server = Some(srv);
         board = Some(b);
@@ -412,6 +451,11 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
             fleet.steal_wait_ms = s.parse().context("--steal-wait-ms wants milliseconds")?;
         }
         fleet.no_steal = has(args, "--no-steal");
+        if let Some(srv) = &probe_server {
+            // Advertise this worker's probe address in its lease records
+            // so a fleet-status aggregator can federate live run state.
+            fleet.probe_addr = Some(srv.addr().to_string());
+        }
         let exit = run_sweep_fleet(specs, &opts, &fleet)?;
         println!("{}", exit.summary.line());
         if let Some(run_id) = exit.crashed {
@@ -449,6 +493,54 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     }
     probe_linger(&probe_server, linger_secs);
     Ok(())
+}
+
+/// `addax fleet-status` — the read-only fleet aggregator. Reconstructs
+/// fleet-wide state from the manifest and its side files (lease ledger,
+/// times telemetry, steal dirs), optionally federating live run state
+/// from the probe addresses advertised in lease records. One JSON
+/// snapshot to stdout by default; `--watch` re-prints on an interval;
+/// `--probe-port P` serves GET /fleet + /metrics + /healthz instead.
+fn cmd_fleet_status(args: &[String]) -> Result<()> {
+    let manifest = std::path::PathBuf::from(
+        flag(args, "--manifest").unwrap_or("results/sweep/manifest.jsonl"),
+    );
+    let skew_margin_ms: u64 = match flag(args, "--skew-margin-ms") {
+        Some(s) => s.parse().context("--skew-margin-ms wants milliseconds")?,
+        None => 250,
+    };
+    let timeout = match flag(args, "--federate-timeout-ms") {
+        Some(s) => std::time::Duration::from_millis(
+            s.parse().context("--federate-timeout-ms wants milliseconds")?,
+        ),
+        None => DEFAULT_FEDERATE_TIMEOUT,
+    };
+    if let Some(port) = flag(args, "--probe-port") {
+        let port: u16 =
+            port.parse().context("--probe-port wants a port number (0 = ephemeral)")?;
+        let srv = FleetServer::start(manifest, port, skew_margin_ms, timeout)?;
+        println!("probe: listening on http://{}", srv.addr());
+        // Serve until killed: the aggregator holds no state worth a
+        // graceful drain — every request re-reads the ledgers.
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let interval = std::time::Duration::from_secs_f64(match flag(args, "--interval-secs") {
+        Some(s) => s.parse().context("--interval-secs wants seconds")?,
+        None => 2.0,
+    });
+    loop {
+        let mut view = load_fleet(&manifest, addax::sched::lease::now_ms(), skew_margin_ms)?;
+        if !has(args, "--no-federate") {
+            view.federate(timeout);
+        }
+        println!("{}", view.to_json().dump());
+        if !has(args, "--watch") {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
 }
 
 /// `addax ckpt inspect|verify|diff` — snapshot introspection.

@@ -4,7 +4,7 @@
 use std::io::Write;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::jsonlite::Json;
 
@@ -147,6 +147,151 @@ impl JsonlLogger {
     }
 }
 
+/// Comparison operator of one `?where=` clause.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+/// One `field OP value` clause of a `?where=` filter over the metrics
+/// ring (`?where=loss<2.0,step>=100` — clauses are comma-separated and
+/// ANDed). Values are numeric: the ring's queryable fields (step, loss,
+/// zo_loss, val_acc, best_val…) all are, and numeric comparison is what
+/// threshold predicates mean.
+#[derive(Clone, Debug)]
+pub struct Predicate {
+    pub field: String,
+    pub op: CmpOp,
+    pub value: f64,
+}
+
+impl Predicate {
+    /// Parse a comma-separated clause list. Operators: `<= >= != < > =`
+    /// (two-character forms matched first). Empty input is an error —
+    /// callers pass the parameter only when present.
+    pub fn parse_list(s: &str) -> Result<Vec<Predicate>> {
+        let mut out = Vec::new();
+        for clause in s.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                bail!("empty where-clause in {s:?}");
+            }
+            let (op_str, op) = [
+                ("<=", CmpOp::Le),
+                (">=", CmpOp::Ge),
+                ("!=", CmpOp::Ne),
+                ("<", CmpOp::Lt),
+                (">", CmpOp::Gt),
+                ("=", CmpOp::Eq),
+            ]
+            .into_iter()
+            .find(|(sym, _)| clause.contains(sym))
+            .ok_or_else(|| {
+                anyhow::anyhow!("where-clause {clause:?} has no operator (<=,>=,!=,<,>,=)")
+            })?;
+            let (field, value) = clause.split_once(op_str).unwrap();
+            let field = field.trim();
+            if field.is_empty() {
+                bail!("where-clause {clause:?} names no field");
+            }
+            let value: f64 = value
+                .trim()
+                .parse()
+                .with_context(|| format!("where-clause {clause:?}: value is not a number"))?;
+            out.push(Predicate { field: field.to_string(), op, value });
+        }
+        Ok(out)
+    }
+
+    /// Does this row satisfy the clause? Non-object rows, absent fields
+    /// and non-numeric values all fail it (mirroring projection's
+    /// absent-field-is-omitted rule).
+    pub fn matches(&self, row: &Json) -> bool {
+        let Some(v) = row.opt(&self.field).and_then(|v| v.as_f64().ok()) else {
+            return false;
+        };
+        match self.op {
+            CmpOp::Lt => v < self.value,
+            CmpOp::Le => v <= self.value,
+            CmpOp::Gt => v > self.value,
+            CmpOp::Ge => v >= self.value,
+            CmpOp::Eq => v == self.value,
+            CmpOp::Ne => v != self.value,
+        }
+    }
+}
+
+/// Aggregate function of one `?agg=` clause.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggFn {
+    Mean,
+    Min,
+    Max,
+    Sum,
+    Count,
+}
+
+/// One clause of an `?agg=` list: `mean:loss`, `max:step`, `min:f`,
+/// `sum:f`, or a bare `count` (matching-row count, no field).
+#[derive(Clone, Debug)]
+pub struct AggSpec {
+    pub func: AggFn,
+    pub field: Option<String>,
+}
+
+impl AggSpec {
+    /// Parse a comma-separated aggregate list (`mean:loss,max:step,count`).
+    pub fn parse_list(s: &str) -> Result<Vec<AggSpec>> {
+        let mut out = Vec::new();
+        for clause in s.split(',') {
+            let clause = clause.trim();
+            if clause == "count" {
+                out.push(AggSpec { func: AggFn::Count, field: None });
+                continue;
+            }
+            let Some((func, field)) = clause.split_once(':') else {
+                bail!("agg-clause {clause:?} is not `count` or `fn:field`");
+            };
+            let func = match func.trim() {
+                "mean" => AggFn::Mean,
+                "min" => AggFn::Min,
+                "max" => AggFn::Max,
+                "sum" => AggFn::Sum,
+                other => bail!("unknown aggregate {other:?} (mean, min, max, sum, count)"),
+            };
+            let field = field.trim();
+            if field.is_empty() {
+                bail!("agg-clause {clause:?} names no field");
+            }
+            out.push(AggSpec { func, field: Some(field.to_string()) });
+        }
+        if out.is_empty() {
+            bail!("empty agg list");
+        }
+        Ok(out)
+    }
+
+    /// The clause's output key: its canonical spec string.
+    pub fn key(&self) -> String {
+        let name = match self.func {
+            AggFn::Mean => "mean",
+            AggFn::Min => "min",
+            AggFn::Max => "max",
+            AggFn::Sum => "sum",
+            AggFn::Count => "count",
+        };
+        match &self.field {
+            Some(f) => format!("{name}:{f}"),
+            None => name.to_string(),
+        }
+    }
+}
+
 /// A bounded ring of recent telemetry rows, feeding the probe server's
 /// `GET /runs/<id>/metrics` endpoint (`obs` module).
 ///
@@ -184,10 +329,27 @@ impl MetricsRing {
     /// The last `last` rows in insertion order, projected to `fields`
     /// when given (non-object rows pass through a projection untouched).
     pub fn query(&self, fields: Option<&[String]>, last: usize) -> Vec<Json> {
+        self.query_where(fields, last, &[])
+    }
+
+    /// [`MetricsRing::query`] with a `?where=` filter: only rows
+    /// satisfying **every** predicate survive (a row missing a
+    /// predicate's field, or holding a non-numeric value there, is
+    /// filtered out — the same absent-field rule projection uses). The
+    /// `last` window applies *before* the filter: "of the last N rows,
+    /// the matching ones", so the window stays the bounded-allocation
+    /// knob it already was.
+    pub fn query_where(
+        &self,
+        fields: Option<&[String]>,
+        last: usize,
+        preds: &[Predicate],
+    ) -> Vec<Json> {
         let start = self.rows.len().saturating_sub(last);
         self.rows
             .iter()
             .skip(start)
+            .filter(|row| preds.iter().all(|p| p.matches(row)))
             .map(|row| match (fields, row) {
                 (Some(keys), Json::Obj(m)) => Json::Obj(
                     m.iter()
@@ -198,6 +360,44 @@ impl MetricsRing {
                 _ => row.clone(),
             })
             .collect()
+    }
+
+    /// Evaluate `?agg=` clauses over the filtered window: one output key
+    /// per clause (its literal spec string, e.g. `"mean:loss"`), `count`
+    /// counting matching rows and the field aggregates skipping rows
+    /// where the field is absent or non-numeric (projection's rule).
+    /// An aggregate with no contributing rows is `null`, never `NaN`.
+    pub fn aggregate(&self, last: usize, preds: &[Predicate], aggs: &[AggSpec]) -> Json {
+        let rows = self.query_where(None, last, preds);
+        let mut out = std::collections::BTreeMap::new();
+        for spec in aggs {
+            let value = match (&spec.func, &spec.field) {
+                (AggFn::Count, _) => Json::from(rows.len()),
+                (_, Some(field)) => {
+                    let vals: Vec<f64> = rows
+                        .iter()
+                        .filter_map(|r| r.opt(field).and_then(|v| v.as_f64().ok()))
+                        .collect();
+                    if vals.is_empty() {
+                        Json::Null
+                    } else {
+                        Json::from(match spec.func {
+                            AggFn::Mean => vals.iter().sum::<f64>() / vals.len() as f64,
+                            AggFn::Min => vals.iter().copied().fold(f64::INFINITY, f64::min),
+                            AggFn::Max => {
+                                vals.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+                            }
+                            AggFn::Sum => vals.iter().sum::<f64>(),
+                            AggFn::Count => unreachable!("count handled above"),
+                        })
+                    }
+                }
+                // parse_list never builds a field-less non-count clause
+                (_, None) => Json::Null,
+            };
+            out.insert(spec.key(), value);
+        }
+        Json::Obj(out)
     }
 }
 
@@ -357,6 +557,91 @@ mod tests {
         // Projecting a field a row lacks omits it rather than nulling.
         let none = r.query(Some(&["val_acc".to_string()]), 1);
         assert!(none[0].as_obj().unwrap().is_empty());
+    }
+
+    /// The seeded ring every predicate test reads: 6 step rows with
+    /// loss 5,4,3,2,1,0 at steps 0..=50, plus one eval row carrying
+    /// `val_acc` but no `loss`.
+    fn seeded_ring() -> MetricsRing {
+        use crate::jsonlite::obj;
+        let mut r = MetricsRing::new(16);
+        for i in 0..6usize {
+            r.push(obj(vec![
+                ("step", Json::from(i * 10)),
+                ("loss", Json::from(5.0 - i as f64)),
+            ]));
+        }
+        r.push(obj(vec![("step", Json::from(55usize)), ("val_acc", Json::from(0.75))]));
+        r
+    }
+
+    #[test]
+    fn where_predicates_filter_rows() {
+        let r = seeded_ring();
+        // loss<2.0 keeps the loss=1 and loss=0 rows (the eval row has no
+        // loss field and is filtered out, like projection omits it)
+        let preds = Predicate::parse_list("loss<2.0").unwrap();
+        let rows = r.query_where(None, 100, &preds);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("step").unwrap().as_usize().unwrap(), 40);
+        // ANDed clauses: loss<2.0,step>=50 keeps exactly the last step row
+        let preds = Predicate::parse_list("loss<2.0,step>=50").unwrap();
+        let rows = r.query_where(None, 100, &preds);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("loss").unwrap().as_f64().unwrap(), 0.0);
+        // = and != are exact
+        assert_eq!(r.query_where(None, 100, &Predicate::parse_list("loss=3").unwrap()).len(), 1);
+        assert_eq!(r.query_where(None, 100, &Predicate::parse_list("loss!=3").unwrap()).len(), 5);
+        // the `last` window applies before the filter
+        let preds = Predicate::parse_list("loss<=5").unwrap();
+        assert_eq!(r.query_where(None, 2, &preds).len(), 1, "window first, then filter");
+        // projection still composes
+        let filter = Predicate::parse_list("loss<2.0").unwrap();
+        let rows = r.query_where(Some(&["step".to_string()]), 100, &filter);
+        assert!(rows[0].opt("loss").is_none());
+    }
+
+    #[test]
+    fn aggregates_match_hand_computed_values() {
+        let r = seeded_ring();
+        let aggs = AggSpec::parse_list("mean:loss,max:step,min:loss,sum:loss,count").unwrap();
+        // unfiltered: losses 5,4,3,2,1,0 → mean 2.5, sum 15; steps up to
+        // 55; count = 7 rows (the eval row counts, it matched no filter)
+        let out = r.aggregate(100, &[], &aggs);
+        assert_eq!(out.get("mean:loss").unwrap().as_f64().unwrap(), 2.5);
+        assert_eq!(out.get("max:step").unwrap().as_f64().unwrap(), 55.0);
+        assert_eq!(out.get("min:loss").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(out.get("sum:loss").unwrap().as_f64().unwrap(), 15.0);
+        assert_eq!(out.get("count").unwrap().as_usize().unwrap(), 7);
+        // filtered: loss<2.0,step>=100 from the issue's example shape —
+        // here loss<2.0,step>=40 keeps losses 1,0 → mean 0.5, max step 50
+        let preds = Predicate::parse_list("loss<2.0,step>=40").unwrap();
+        let out = r.aggregate(100, &preds, &aggs);
+        assert_eq!(out.get("mean:loss").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(out.get("max:step").unwrap().as_f64().unwrap(), 50.0);
+        assert_eq!(out.get("count").unwrap().as_usize().unwrap(), 2);
+        // an aggregate nothing contributes to is null, never NaN
+        let preds = Predicate::parse_list("loss<-1").unwrap();
+        let out = r.aggregate(100, &preds, &aggs);
+        assert!(matches!(out.get("mean:loss").unwrap(), Json::Null));
+        assert_eq!(out.get("count").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn predicate_and_agg_parsing_rejects_malformed_input() {
+        assert!(Predicate::parse_list("").is_err());
+        assert!(Predicate::parse_list("loss").is_err(), "no operator");
+        assert!(Predicate::parse_list("<2.0").is_err(), "no field");
+        assert!(Predicate::parse_list("loss<abc").is_err(), "non-numeric value");
+        assert!(Predicate::parse_list("loss<2.0,").is_err(), "trailing comma");
+        let p = &Predicate::parse_list("step>=10").unwrap()[0];
+        assert_eq!((p.field.as_str(), p.op, p.value), ("step", CmpOp::Ge, 10.0));
+        assert!(AggSpec::parse_list("").is_err());
+        assert!(AggSpec::parse_list("median:loss").is_err(), "unknown fn");
+        assert!(AggSpec::parse_list("mean:").is_err(), "no field");
+        assert!(AggSpec::parse_list("mean").is_err(), "fn needs :field");
+        assert_eq!(AggSpec::parse_list("count").unwrap()[0].key(), "count");
+        assert_eq!(AggSpec::parse_list("mean:loss").unwrap()[0].key(), "mean:loss");
     }
 
     #[test]

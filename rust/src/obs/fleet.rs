@@ -1,0 +1,883 @@
+//! The fleet aggregator behind `addax fleet-status`: one read-only view
+//! of a whole multi-process sweep, reconstructed from the side files the
+//! workers already write.
+//!
+//! No worker cooperates with the aggregator and no new file is written.
+//! [`load_fleet`] replays:
+//!
+//! * `manifest.jsonl` — completed rows (the *done* set) plus the fenced
+//!   duplicates its load fences off;
+//! * `manifest.leases.jsonl` — the lease table ([`LeaseTable::load`]),
+//!   giving per-run holder/token/seq/expiry and each holder's advertised
+//!   probe address;
+//! * `manifest.times.jsonl` — lifecycle events (`reclaim`, `fenced`,
+//!   `abort`, `rotate`, `steal`) and resumed-run timing rows;
+//! * `steal/<run_id>/` — per-run work-stealing side dirs.
+//!
+//! Every reader is tolerant of torn trailing lines and mid-rotation
+//! snapshots exactly like the workers' own loads — an aggregator
+//! pointed at a live, crashing, rotating fleet must render a view,
+//! never a panic.
+//!
+//! **Probe federation**: lease claim/renew records carry the holder's
+//! probe address ([`LeaseRecord::probe`]). [`FleetView::federate`] fans
+//! out `GET /runs?summary=1` to each distinct advertised address with a
+//! short timeout and merges the live rows (step, loss, staleness) into
+//! the ledger view. Unreachable probes degrade gracefully: the worker
+//! is marked unreachable and its runs keep their ledger-only state.
+//!
+//! [`FleetServer`] wraps the view in the same std-only HTTP subset as
+//! the worker probe: `GET /fleet` (JSON) and `GET /metrics` (Prometheus
+//! text, fleet-wide series — including `addax_fenced_rows_total`, which
+//! only the ledger knows), rebuilt per request.
+//!
+//! [`LeaseRecord::probe`]: crate::sched::lease::LeaseRecord
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::http::{read_request, write_payload, Payload};
+use super::mem;
+use super::prom::PromText;
+use crate::ioutil;
+use crate::jsonlite::{obj, Json};
+use crate::sched::lease::{self, LeaseTable};
+use crate::sched::manifest::SweepManifest;
+
+/// Default timeout for each federated probe fetch: long enough for a
+/// loopback or LAN probe, short enough that a dead worker can't stall
+/// the whole `/fleet` render.
+pub const DEFAULT_FEDERATE_TIMEOUT: Duration = Duration::from_millis(400);
+
+/// One run's reconstructed position in the fleet state machine.
+#[derive(Clone, Debug)]
+pub struct RunView {
+    pub run_id: String,
+    /// `done` (manifest row exists), `active` (live lease), `expired`
+    /// (unreleased lease past expiry + skew margin), `released`
+    /// (retired lease, no row — claimable), or `pending` (seen only in
+    /// telemetry, never leased).
+    pub state: &'static str,
+    /// Last recorded lease holder, if any lease record ever touched it.
+    pub worker: Option<String>,
+    /// Fencing token (0 = never leased).
+    pub token: u64,
+    pub seq: u64,
+    /// Lease expiry minus `now` (negative = overdue); only for
+    /// unreleased leases.
+    pub expires_in_ms: Option<i64>,
+    /// The holder's advertised probe address.
+    pub probe: Option<String>,
+    /// Lease reclaims recorded in the times side file.
+    pub resumes: u64,
+    /// A timing row shows this run restarted off step-level snapshots.
+    pub resumed_from_snapshot: bool,
+    /// Probe shards computed by thief workers (times `steal` events).
+    pub stolen_shards: u64,
+    /// Best validation accuracy from the manifest row (done runs).
+    pub best_val: Option<f64>,
+    /// The live `/runs` row federated from the holder's probe.
+    pub live: Option<Json>,
+}
+
+/// One worker's holdings, grouped from the lease table.
+#[derive(Clone, Debug)]
+pub struct WorkerView {
+    pub worker: String,
+    /// Runs whose current (unreleased) lease this worker holds.
+    pub held: Vec<String>,
+    /// Highest renewal seq seen from this worker — the logical
+    /// liveness signal: compare across two `/fleet` fetches to see a
+    /// holder making progress regardless of clock skew.
+    pub max_seq: u64,
+    /// Freshest held-lease expiry minus `now` (negative = overdue).
+    pub freshest_expires_in_ms: Option<i64>,
+    pub probe: Option<String>,
+    /// Set by federation: `None` until attempted or no probe address.
+    pub reachable: Option<bool>,
+}
+
+/// The reconstructed fleet: per-run, per-worker, and total views.
+#[derive(Debug)]
+pub struct FleetView {
+    pub manifest_path: PathBuf,
+    pub now_ms: u64,
+    pub skew_margin_ms: u64,
+    pub runs: Vec<RunView>,
+    pub workers: Vec<WorkerView>,
+    pub done: usize,
+    pub active: usize,
+    pub expired: usize,
+    /// Non-done runs a worker could claim right now (released, expired,
+    /// or never leased).
+    pub claimable: usize,
+    /// Zombie rows the manifest load fenced off.
+    pub fenced_rows: usize,
+    /// `fenced` lifecycle events in the times file (zombie appends
+    /// rejected at commit time).
+    pub fenced_events: u64,
+    pub reclaims: u64,
+    pub aborts: u64,
+    pub rotations: u64,
+    pub stolen_shards: u64,
+    pub corrupt_manifest_lines: usize,
+    pub corrupt_lease_lines: usize,
+}
+
+/// Lifecycle counters parsed out of `manifest.times.jsonl`. Torn lines,
+/// an empty file, and an absent file all yield the zero value — the
+/// times file is telemetry and must never block a fleet view.
+#[derive(Debug, Default)]
+struct TimesEvents {
+    reclaims: BTreeMap<String, u64>,
+    steals: BTreeMap<String, u64>,
+    resumed: BTreeSet<String>,
+    rotations: u64,
+    fenced_events: u64,
+    aborts: u64,
+    run_ids: BTreeSet<String>,
+}
+
+fn load_times_events(manifest: &Path) -> TimesEvents {
+    let mut ev = TimesEvents::default();
+    let Ok(lines) = ioutil::read_lossy_lines(&SweepManifest::times_path(manifest)) else {
+        return ev;
+    };
+    for line in &lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let Ok(v) = Json::parse(line) else { continue };
+        let run = v.opt("run_id").and_then(|j| j.as_str().ok()).unwrap_or("-").to_string();
+        let drain_scoped = run == "-"; // e.g. the drain-time ledger rotation
+        if !drain_scoped {
+            ev.run_ids.insert(run.clone());
+        }
+        let Some(event) = v.opt("event").and_then(|j| j.as_str().ok()) else {
+            // A timing row; the resumed marker is the only state it adds.
+            if v.opt("resumed_from_step").is_some() && !drain_scoped {
+                ev.resumed.insert(run);
+            }
+            continue;
+        };
+        match event {
+            "reclaim" => *ev.reclaims.entry(run).or_insert(0) += 1,
+            "rotate" => ev.rotations += 1,
+            "fenced" => ev.fenced_events += 1,
+            "abort" => ev.aborts += 1,
+            "steal" => {
+                // Note shape: "<n> probe shard(s) computed by a thief
+                // worker" — fall back to 1 shard if the count moved.
+                let n = v
+                    .opt("note")
+                    .and_then(|j| j.as_str().ok())
+                    .and_then(|n| n.split_whitespace().next())
+                    .and_then(|w| w.parse::<u64>().ok())
+                    .unwrap_or(1);
+                *ev.steals.entry(run).or_insert(0) += n;
+            }
+            _ => {} // unknown future events are not ours to reject
+        }
+    }
+    ev
+}
+
+/// Run ids with a `steal/<run_id>/` side dir (the work-stealing
+/// rendezvous the workers publish next to the manifest).
+fn steal_dir_runs(manifest: &Path) -> BTreeSet<String> {
+    let dir = match manifest.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => PathBuf::from("."),
+    }
+    .join("steal");
+    let mut out = BTreeSet::new();
+    let Ok(rd) = std::fs::read_dir(&dir) else { return out };
+    for e in rd.flatten() {
+        if e.file_type().map(|t| t.is_dir()).unwrap_or(false) {
+            out.insert(e.file_name().to_string_lossy().into_owned());
+        }
+    }
+    out
+}
+
+/// Reconstruct the fleet, read-only, from the manifest and its side
+/// files. `now_ms`/`skew_margin_ms` gate the active-vs-expired split
+/// with exactly the padding workers use ([`LeaseTable::claimable`]).
+pub fn load_fleet(manifest: &Path, now_ms: u64, skew_margin_ms: u64) -> Result<FleetView> {
+    let m = SweepManifest::load(manifest)
+        .with_context(|| format!("loading manifest {}", manifest.display()))?;
+    let leases = LeaseTable::load(&lease::leases_path(manifest))
+        .with_context(|| format!("loading lease ledger beside {}", manifest.display()))?;
+    let ev = load_times_events(manifest);
+    let stealing = steal_dir_runs(manifest);
+
+    // The observable universe: a run exists for this view once any side
+    // file mentions it. (The sweep *spec* is deliberately not consulted
+    // — the aggregator works from ledgers alone, so it can watch a
+    // fleet whose spec file it cannot read.)
+    let mut ids: BTreeSet<String> = BTreeSet::new();
+    ids.extend(m.rows().map(|r| r.run_id.clone()));
+    ids.extend(leases.iter().map(|(id, _)| id.to_string()));
+    ids.extend(ev.run_ids.iter().cloned());
+    ids.extend(stealing.iter().cloned());
+
+    let mut runs = Vec::new();
+    let mut workers: BTreeMap<String, WorkerView> = BTreeMap::new();
+    let (mut done, mut active, mut expired, mut claimable) = (0usize, 0usize, 0usize, 0usize);
+    for id in &ids {
+        let row = m.get(id);
+        let ls = leases.state(id);
+        let live_lease = ls
+            .is_some_and(|s| !s.released && now_ms < s.expires_ms.saturating_add(skew_margin_ms));
+        let state = if row.is_some() {
+            done += 1;
+            "done"
+        } else if let Some(s) = ls {
+            if s.released {
+                claimable += 1;
+                "released"
+            } else if live_lease {
+                active += 1;
+                "active"
+            } else {
+                expired += 1;
+                claimable += 1;
+                "expired"
+            }
+        } else {
+            claimable += 1;
+            "pending"
+        };
+        if let Some(s) = ls {
+            let w = workers.entry(s.worker.clone()).or_insert_with(|| WorkerView {
+                worker: s.worker.clone(),
+                held: Vec::new(),
+                max_seq: 0,
+                freshest_expires_in_ms: None,
+                probe: None,
+                reachable: None,
+            });
+            w.max_seq = w.max_seq.max(s.seq);
+            if !s.released {
+                w.held.push(id.clone());
+                let delta = s.expires_ms as i64 - now_ms as i64;
+                w.freshest_expires_in_ms =
+                    Some(w.freshest_expires_in_ms.map_or(delta, |c| c.max(delta)));
+                if w.probe.is_none() {
+                    w.probe = s.probe.clone();
+                }
+            }
+        }
+        runs.push(RunView {
+            run_id: id.clone(),
+            state,
+            worker: ls.map(|s| s.worker.clone()),
+            token: ls.map_or(0, |s| s.token),
+            seq: ls.map_or(0, |s| s.seq),
+            expires_in_ms: ls
+                .filter(|s| !s.released)
+                .map(|s| s.expires_ms as i64 - now_ms as i64),
+            probe: ls.and_then(|s| s.probe.clone()),
+            resumes: ev.reclaims.get(id).copied().unwrap_or(0),
+            resumed_from_snapshot: ev.resumed.contains(id),
+            stolen_shards: ev.steals.get(id).copied().unwrap_or(0),
+            best_val: row.map(|r| r.outcome.best_val_acc),
+            live: None,
+        });
+    }
+    Ok(FleetView {
+        manifest_path: manifest.to_path_buf(),
+        now_ms,
+        skew_margin_ms,
+        runs,
+        workers: workers.into_values().collect(),
+        done,
+        active,
+        expired,
+        claimable,
+        fenced_rows: m.fenced_rows,
+        fenced_events: ev.fenced_events,
+        reclaims: ev.reclaims.values().sum(),
+        aborts: ev.aborts,
+        rotations: ev.rotations,
+        stolen_shards: ev.steals.values().sum(),
+        corrupt_manifest_lines: m.corrupt_lines,
+        corrupt_lease_lines: leases.corrupt_lines,
+    })
+}
+
+/// One-shot HTTP GET against `host:port`, returning the parsed JSON
+/// body on a 200 — `None` on connect/read timeout, non-200, or a
+/// malformed body. The degraded path IS the contract: federation must
+/// never make a fleet view worse than ledger-only.
+pub fn http_get_json(addr: &str, path: &str, timeout: Duration) -> Option<Json> {
+    let sock: SocketAddr = addr.parse().ok()?;
+    let mut s = TcpStream::connect_timeout(&sock, timeout).ok()?;
+    s.set_read_timeout(Some(timeout)).ok()?;
+    s.set_write_timeout(Some(timeout)).ok()?;
+    write!(s, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").ok()?;
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).ok()?;
+    let (head, body) = resp.split_once("\r\n\r\n")?;
+    if !head.lines().next()?.contains(" 200 ") {
+        return None;
+    }
+    Json::parse(body).ok()
+}
+
+impl FleetView {
+    /// Fan out `GET /runs?summary=1` to every distinct advertised probe
+    /// address, merging live rows into [`RunView::live`] and stamping
+    /// [`WorkerView::reachable`]. Serial on purpose: a fleet has a
+    /// handful of workers, and the per-probe `timeout` bounds the total.
+    pub fn federate(&mut self, timeout: Duration) {
+        let addrs: BTreeSet<String> =
+            self.workers.iter().filter_map(|w| w.probe.clone()).collect();
+        let mut reach: BTreeMap<String, bool> = BTreeMap::new();
+        let mut live_rows: BTreeMap<String, Json> = BTreeMap::new();
+        for addr in &addrs {
+            match http_get_json(addr, "/runs?summary=1", timeout) {
+                Some(body) => {
+                    reach.insert(addr.clone(), true);
+                    if let Ok(rows) = body.get("runs").and_then(|r| r.as_arr()) {
+                        for row in rows {
+                            if let Some(id) = row.opt("run_id").and_then(|j| j.as_str().ok()) {
+                                live_rows.insert(id.to_string(), row.clone());
+                            }
+                        }
+                    }
+                }
+                None => {
+                    reach.insert(addr.clone(), false);
+                }
+            }
+        }
+        for w in &mut self.workers {
+            w.reachable = w.probe.as_ref().map(|a| reach.get(a).copied().unwrap_or(false));
+        }
+        for r in &mut self.runs {
+            r.live = live_rows.get(&r.run_id).cloned();
+        }
+    }
+
+    /// The `GET /fleet` payload (also `addax fleet-status`'s stdout).
+    pub fn to_json(&self) -> Json {
+        let opt_str = |v: &Option<String>| {
+            v.as_ref().map(|s| Json::from(s.clone())).unwrap_or(Json::Null)
+        };
+        let runs = self
+            .runs
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("run_id", Json::from(r.run_id.clone())),
+                    ("state", Json::from(r.state)),
+                    ("worker", opt_str(&r.worker)),
+                    ("token", Json::from(r.token as usize)),
+                    ("seq", Json::from(r.seq as usize)),
+                    (
+                        "expires_in_ms",
+                        r.expires_in_ms.map(|d| Json::from(d as f64)).unwrap_or(Json::Null),
+                    ),
+                    ("probe", opt_str(&r.probe)),
+                    ("resumes", Json::from(r.resumes as usize)),
+                    ("resumed_from_snapshot", Json::from(r.resumed_from_snapshot)),
+                    ("stolen_shards", Json::from(r.stolen_shards as usize)),
+                    ("best_val", r.best_val.map(Json::from).unwrap_or(Json::Null)),
+                    ("live", r.live.clone().unwrap_or(Json::Null)),
+                ])
+            })
+            .collect();
+        let workers = self
+            .workers
+            .iter()
+            .map(|w| {
+                obj(vec![
+                    ("worker", Json::from(w.worker.clone())),
+                    (
+                        "held",
+                        Json::Arr(w.held.iter().map(|h| Json::from(h.clone())).collect()),
+                    ),
+                    ("max_seq", Json::from(w.max_seq as usize)),
+                    (
+                        "freshest_expires_in_ms",
+                        w.freshest_expires_in_ms
+                            .map(|d| Json::from(d as f64))
+                            .unwrap_or(Json::Null),
+                    ),
+                    ("probe", opt_str(&w.probe)),
+                    (
+                        "reachable",
+                        w.reachable.map(Json::from).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("manifest", Json::from(self.manifest_path.display().to_string())),
+            ("now_ms", Json::from(self.now_ms as usize)),
+            ("skew_margin_ms", Json::from(self.skew_margin_ms as usize)),
+            (
+                "totals",
+                obj(vec![
+                    ("runs", Json::from(self.runs.len())),
+                    ("done", Json::from(self.done)),
+                    ("active", Json::from(self.active)),
+                    ("expired", Json::from(self.expired)),
+                    ("claimable", Json::from(self.claimable)),
+                    ("fenced_rows", Json::from(self.fenced_rows)),
+                    ("fenced_events", Json::from(self.fenced_events as usize)),
+                    ("reclaims", Json::from(self.reclaims as usize)),
+                    ("aborts", Json::from(self.aborts as usize)),
+                    ("rotations", Json::from(self.rotations as usize)),
+                    ("stolen_shards", Json::from(self.stolen_shards as usize)),
+                    (
+                        "corrupt_manifest_lines",
+                        Json::from(self.corrupt_manifest_lines),
+                    ),
+                    ("corrupt_lease_lines", Json::from(self.corrupt_lease_lines)),
+                ]),
+            ),
+            ("workers", Json::Arr(workers)),
+            ("runs", Json::Arr(runs)),
+        ])
+    }
+}
+
+/// The aggregator's `GET /metrics`: fleet-wide Prometheus series. Live
+/// per-run gauges come from federation and are omitted (never zeroed)
+/// for runs whose probe was unreachable; ledger counters — including
+/// `addax_fenced_rows_total`, which no single worker can know — come
+/// from the view itself.
+pub fn render_fleet(view: &FleetView) -> String {
+    let mut p = PromText::new();
+    let live_num = |r: &RunView, key: &str| {
+        r.live.as_ref().and_then(|l| l.opt(key)).and_then(|j| j.as_f64().ok())
+    };
+    p.header("addax_run_step", "gauge", "Latest step, federated from the holder's probe.");
+    for r in &view.runs {
+        if let Some(step) = live_num(r, "step") {
+            p.sample("addax_run_step", &[("run_id", &r.run_id)], step);
+        }
+    }
+    p.header("addax_run_loss", "gauge", "Latest loss, federated from the holder's probe.");
+    for r in &view.runs {
+        if let Some(loss) = live_num(r, "loss") {
+            p.sample("addax_run_loss", &[("run_id", &r.run_id)], loss);
+        }
+    }
+    p.header(
+        "addax_run_best_val",
+        "gauge",
+        "Best validation accuracy (manifest row, else the live probe).",
+    );
+    for r in &view.runs {
+        if let Some(best) = r.best_val.or_else(|| live_num(r, "best_val")) {
+            p.sample("addax_run_best_val", &[("run_id", &r.run_id)], best);
+        }
+    }
+    p.header("addax_lease_active", "gauge", "Live (unreleased, unexpired) leases per worker.");
+    let mut active_by: BTreeMap<&str, f64> =
+        view.workers.iter().map(|w| (w.worker.as_str(), 0.0)).collect();
+    for r in &view.runs {
+        if r.state == "active" {
+            if let Some(w) = &r.worker {
+                *active_by.entry(w.as_str()).or_insert(0.0) += 1.0;
+            }
+        }
+    }
+    for (w, n) in &active_by {
+        p.sample("addax_lease_active", &[("worker", w)], *n);
+    }
+    p.header(
+        "addax_fenced_rows_total",
+        "counter",
+        "Zombie manifest rows fenced on load plus fenced commit events.",
+    );
+    p.sample(
+        "addax_fenced_rows_total",
+        &[],
+        view.fenced_rows as f64 + view.fenced_events as f64,
+    );
+    p.header("addax_stolen_shards_total", "counter", "Probe shards computed by thief workers.");
+    p.sample("addax_stolen_shards_total", &[], view.stolen_shards as f64);
+    p.header(
+        "addax_footprint_bytes",
+        "gauge",
+        "Sum of analytic footprints reported by reachable worker probes.",
+    );
+    let footprints: Vec<f64> =
+        view.runs.iter().filter_map(|r| live_num(r, "footprint_bytes")).collect();
+    if !footprints.is_empty() {
+        p.sample("addax_footprint_bytes", &[], footprints.iter().sum());
+    }
+    p.header("addax_rss_bytes", "gauge", "Resident set size of the aggregator process.");
+    if let Some(rss) = mem::rss_bytes() {
+        p.sample("addax_rss_bytes", &[], rss as f64);
+    }
+    p.finish()
+}
+
+/// The aggregator server: `GET /fleet`, `GET /metrics`, `GET /healthz`
+/// on loopback, rebuilding the view from the side files on every
+/// request (the ledgers ARE the state — there is nothing to cache or
+/// invalidate). Same tiny HTTP subset and lifecycle as
+/// [`ProbeServer`](super::ProbeServer).
+pub struct FleetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl FleetServer {
+    pub fn start(
+        manifest: PathBuf,
+        port: u16,
+        skew_margin_ms: u64,
+        federate_timeout: Duration,
+    ) -> Result<FleetServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("fleet-status: cannot bind 127.0.0.1:{port}"))?;
+        let addr = listener.local_addr().context("fleet-status: local_addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if let Ok(mut stream) = stream {
+                        let _ =
+                            Self::handle(&mut stream, &manifest, skew_margin_ms, federate_timeout);
+                    }
+                }
+            })
+        };
+        Ok(FleetServer { addr, stop, accept: Some(accept) })
+    }
+
+    fn handle(
+        stream: &mut TcpStream,
+        manifest: &Path,
+        skew_margin_ms: u64,
+        federate_timeout: Duration,
+    ) -> std::io::Result<()> {
+        let err = |msg: &str| Payload::Json(obj(vec![("error", Json::from(msg))]));
+        let (status, payload) = match read_request(stream)? {
+            Some((method, path, _query)) if method == "GET" => {
+                match path.trim_end_matches('/') {
+                    "" | "/healthz" => {
+                        (200, Payload::Json(obj(vec![("ok", Json::from(true))])))
+                    }
+                    endpoint @ ("/fleet" | "/metrics") => {
+                        match load_fleet(manifest, lease::now_ms(), skew_margin_ms) {
+                            Ok(mut view) => {
+                                view.federate(federate_timeout);
+                                if endpoint == "/fleet" {
+                                    (200, Payload::Json(view.to_json()))
+                                } else {
+                                    (200, Payload::Text(render_fleet(&view)))
+                                }
+                            }
+                            Err(e) => (500, err(&format!("{e:#}"))),
+                        }
+                    }
+                    _ => (404, err("not found")),
+                }
+            }
+            Some(_) => (405, err("method not allowed")),
+            None => (400, err("malformed request line")),
+        };
+        write_payload(stream, status, &payload)
+    }
+
+    pub fn port(&self) -> u16 {
+        self.addr.port()
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for FleetServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Curve;
+    use crate::obs::{ProbeServer, StatusBoard};
+    use crate::optim::OptSpec;
+    use crate::sched::lease::{append, LeaseAction, LeaseRecord};
+    use crate::sched::manifest::{ManifestRow, Outcome};
+    use crate::sched::spec::{Backend, RunSpec};
+
+    fn tmp_manifest(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("addax_fleet_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("manifest.jsonl")
+    }
+
+    fn done_row(seed: u64) -> ManifestRow {
+        let spec = RunSpec::new(Backend::Mock, "sst2", OptSpec::named("mezo"), 10, seed);
+        let mut loss_curve = Curve::default();
+        loss_curve.push(0, 2.5);
+        ManifestRow {
+            run_id: spec.run_id.clone(),
+            spec: spec.to_json(),
+            outcome: Outcome {
+                kind: "train".to_string(),
+                best_val_acc: 0.75,
+                best_val_step: 5,
+                test_acc: 0.7,
+                test_f1: 0.65,
+                final_train_loss: 0.5,
+                steps: 10,
+                loss_curve,
+                val_curve: Curve::default(),
+            },
+        }
+    }
+
+    fn rec(run: &str, worker: &str, token: u64, action: LeaseAction, expires: u64) -> LeaseRecord {
+        LeaseRecord {
+            run_id: run.to_string(),
+            worker: worker.to_string(),
+            token,
+            seq: 0,
+            action,
+            expires_ms: expires,
+            probe: None,
+        }
+    }
+
+    fn run_of<'a>(view: &'a FleetView, id: &str) -> &'a RunView {
+        view.runs.iter().find(|r| r.run_id == id).unwrap_or_else(|| panic!("no run {id}"))
+    }
+
+    #[test]
+    fn ledger_reconstruction_counts_the_state_machine() {
+        let manifest = tmp_manifest("recon");
+        let mut m = SweepManifest::load(&manifest).unwrap();
+        let row = done_row(0);
+        let done_id = row.run_id.clone();
+        m.append(row).unwrap();
+        let leases = lease::leases_path(&manifest);
+        // done run: released lease; plus one active, one expired holder
+        append(&leases, &rec(&done_id, "w0", 1, LeaseAction::Claim, 5_000)).unwrap();
+        append(&leases, &rec(&done_id, "w0", 1, LeaseAction::Release, 5_000)).unwrap();
+        let mut active = rec("run-active", "w1", 2, LeaseAction::Claim, 1_000_000);
+        active.probe = Some("127.0.0.1:9".to_string());
+        active.seq = 4;
+        append(&leases, &active).unwrap();
+        append(&leases, &rec("run-dead", "w2", 3, LeaseAction::Claim, 1_000)).unwrap();
+        SweepManifest::append_event(&manifest, "run-active", "reclaim", "w1 reclaimed").unwrap();
+        SweepManifest::append_event(
+            &manifest,
+            "run-active",
+            "steal",
+            "3 probe shard(s) computed by a thief worker",
+        )
+        .unwrap();
+        SweepManifest::append_event(&manifest, "-", "rotate", "ledger rotated").unwrap();
+
+        let view = load_fleet(&manifest, 10_000, 500).unwrap();
+        assert_eq!((view.done, view.active, view.expired, view.claimable), (1, 1, 1, 1));
+        assert_eq!(run_of(&view, &done_id).state, "done");
+        assert_eq!(run_of(&view, &done_id).best_val, Some(0.75));
+        let a = run_of(&view, "run-active");
+        assert_eq!((a.state, a.token, a.seq), ("active", 2, 4));
+        assert_eq!(a.probe.as_deref(), Some("127.0.0.1:9"));
+        assert_eq!(a.resumes, 1);
+        assert_eq!(a.stolen_shards, 3);
+        assert_eq!(run_of(&view, "run-dead").state, "expired");
+        assert_eq!(view.rotations, 1);
+        assert_eq!(view.stolen_shards, 3);
+        // per-worker grouping: w1 holds the active run and advertises
+        let w1 = view.workers.iter().find(|w| w.worker == "w1").unwrap();
+        assert_eq!(w1.held, vec!["run-active".to_string()]);
+        assert_eq!(w1.max_seq, 4);
+        assert!(w1.freshest_expires_in_ms.unwrap() > 0);
+        let w2 = view.workers.iter().find(|w| w.worker == "w2").unwrap();
+        assert!(w2.freshest_expires_in_ms.unwrap() < 0, "overdue shows negative");
+        // the JSON shape carries the totals
+        let j = view.to_json();
+        assert_eq!(j.get("totals").unwrap().get("done").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("workers").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn torn_trailing_lines_in_every_side_file_never_panic() {
+        let manifest = tmp_manifest("torn");
+        let mut m = SweepManifest::load(&manifest).unwrap();
+        m.append(done_row(1)).unwrap();
+        let leases = lease::leases_path(&manifest);
+        append(&leases, &rec("r-live", "w0", 1, LeaseAction::Claim, u64::MAX / 2)).unwrap();
+        // tear all three files mid-line, ending inside a multi-byte char
+        for p in [&manifest, &leases, &SweepManifest::times_path(&manifest)] {
+            let mut bytes = std::fs::read(p).unwrap_or_default();
+            bytes.extend_from_slice(b"{\"run_id\":\"caf");
+            bytes.push(0xC3);
+            std::fs::write(p, &bytes).unwrap();
+        }
+        let view = load_fleet(&manifest, 1_000, 0).unwrap();
+        assert_eq!(view.done, 1);
+        assert_eq!(view.active, 1);
+        assert_eq!(view.corrupt_manifest_lines, 1);
+        assert_eq!(view.corrupt_lease_lines, 1);
+    }
+
+    #[test]
+    fn mid_rotation_snapshot_beside_the_ledger_is_ignored() {
+        let manifest = tmp_manifest("midrot");
+        let leases = lease::leases_path(&manifest);
+        append(&leases, &rec("a", "w0", 2, LeaseAction::Claim, 9_000)).unwrap();
+        append(&leases, &rec("a", "w0", 2, LeaseAction::Release, 9_000)).unwrap();
+        // a crashed rotation leaves its pre-rename tmp file behind; the
+        // aggregator must read the ledger path only, never the tmp
+        let tmp = leases.with_extension("jsonl.rot.99999.0");
+        std::fs::write(&tmp, "{\"action\":\"release\",\"run_id\":\"ghost\",").unwrap();
+        let view = load_fleet(&manifest, 1_000, 0).unwrap();
+        assert_eq!(view.runs.len(), 1, "the tmp file's ghost run must not appear");
+        assert_eq!(run_of(&view, "a").state, "released");
+        assert_eq!(view.corrupt_lease_lines, 0);
+    }
+
+    #[test]
+    fn pre_probe_era_lease_lines_read_as_probe_absent() {
+        let manifest = tmp_manifest("preprobe");
+        let leases = lease::leases_path(&manifest);
+        // raw ledger lines from before the probe (and seq) fields existed
+        std::fs::write(
+            &leases,
+            "{\"action\":\"claim\",\"expires_ms\":900000000000000,\"run_id\":\"old\",\
+             \"token\":1,\"worker\":\"w0\"}\n",
+        )
+        .unwrap();
+        let view = load_fleet(&manifest, 1_000, 0).unwrap();
+        let r = run_of(&view, "old");
+        assert_eq!((r.state, r.probe.as_deref(), r.seq), ("active", None, 0));
+        let w0 = view.workers.iter().find(|w| w.worker == "w0").unwrap();
+        assert_eq!(w0.probe, None);
+        assert_eq!(w0.reachable, None, "no probe address: federation never attempted");
+    }
+
+    #[test]
+    fn empty_and_absent_times_files_yield_a_clean_view() {
+        let manifest = tmp_manifest("notimes");
+        let leases = lease::leases_path(&manifest);
+        append(&leases, &rec("r", "w0", 1, LeaseAction::Claim, u64::MAX / 2)).unwrap();
+        // absent times file
+        let view = load_fleet(&manifest, 1_000, 0).unwrap();
+        assert_eq!((view.reclaims, view.rotations, view.stolen_shards), (0, 0, 0));
+        // empty times file
+        std::fs::write(SweepManifest::times_path(&manifest), "").unwrap();
+        let view = load_fleet(&manifest, 1_000, 0).unwrap();
+        assert_eq!(view.active, 1);
+        assert_eq!((view.fenced_events, view.aborts), (0, 0));
+    }
+
+    #[test]
+    fn federation_merges_live_rows_and_degrades_when_unreachable() {
+        let manifest = tmp_manifest("fed");
+        let leases = lease::leases_path(&manifest);
+        // a real worker probe with one live run
+        let board = StatusBoard::new();
+        let probe = board.register("run-live", 10);
+        probe.set_running(10);
+        probe.record_step(
+            7,
+            0.125,
+            0.0,
+            obj(vec![("step", Json::from(7usize)), ("loss", Json::from(0.125))]),
+        );
+        let server = ProbeServer::start(board, 0).unwrap();
+        let live_addr = format!("127.0.0.1:{}", server.port());
+        // an address that refuses connections: bind, learn, drop
+        let dead_addr = {
+            let l = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            format!("127.0.0.1:{}", l.local_addr().unwrap().port())
+        };
+        let mut claim = rec("run-live", "w0", 1, LeaseAction::Claim, u64::MAX / 2);
+        claim.probe = Some(live_addr);
+        append(&leases, &claim).unwrap();
+        let mut claim = rec("run-gone", "w1", 1, LeaseAction::Claim, u64::MAX / 2);
+        claim.probe = Some(dead_addr);
+        append(&leases, &claim).unwrap();
+
+        let mut view = load_fleet(&manifest, 1_000, 0).unwrap();
+        view.federate(Duration::from_millis(300));
+        let live = run_of(&view, "run-live").live.as_ref().expect("live row merged");
+        assert_eq!(live.get("step").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(live.get("loss").unwrap().as_f64().unwrap(), 0.125);
+        assert!(live.opt("loss_tail").is_none(), "federation uses the summary view");
+        assert!(run_of(&view, "run-gone").live.is_none(), "unreachable degrades to ledger-only");
+        let reach = |w: &str| {
+            view.workers.iter().find(|x| x.worker == w).unwrap().reachable
+        };
+        assert_eq!(reach("w0"), Some(true));
+        assert_eq!(reach("w1"), Some(false));
+        // the fleet exposition carries the federated gauges + ledger counters
+        let text = render_fleet(&view);
+        assert!(text.contains("addax_run_step{run_id=\"run-live\"} 7"), "{text}");
+        assert!(text.contains("addax_run_loss{run_id=\"run-live\"} 0.125"), "{text}");
+        assert!(text.contains("addax_fenced_rows_total 0"), "{text}");
+        assert!(text.contains("addax_lease_active{worker=\"w0\"} 1"), "{text}");
+        assert!(!text.contains("addax_run_step{run_id=\"run-gone\"}"), "{text}");
+    }
+
+    #[test]
+    fn fleet_server_serves_fleet_json_and_prometheus_text() {
+        let manifest = tmp_manifest("server");
+        let mut m = SweepManifest::load(&manifest).unwrap();
+        m.append(done_row(2)).unwrap();
+        let leases = lease::leases_path(&manifest);
+        append(&leases, &rec("r-open", "w0", 1, LeaseAction::Claim, u64::MAX / 2)).unwrap();
+        let server = FleetServer::start(
+            manifest.clone(),
+            0,
+            0,
+            Duration::from_millis(100),
+        )
+        .unwrap();
+        let fetch = |path: &str| -> (String, String) {
+            let mut s = TcpStream::connect(server.addr()).unwrap();
+            write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+            let mut resp = String::new();
+            s.read_to_string(&mut resp).unwrap();
+            let (head, body) = resp.split_once("\r\n\r\n").expect("header/body split");
+            (head.to_string(), body.to_string())
+        };
+        let (head, body) = fetch("/fleet");
+        assert!(head.contains("200"), "{head}");
+        let v = Json::parse(&body).unwrap();
+        assert_eq!(v.get("totals").unwrap().get("done").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(v.get("totals").unwrap().get("active").unwrap().as_usize().unwrap(), 1);
+        let (head, body) = fetch("/metrics");
+        assert!(head.contains("text/plain; version=0.0.4"), "{head}");
+        assert!(body.contains("# TYPE addax_fenced_rows_total counter"), "{body}");
+        let (head, _) = fetch("/nope");
+        assert!(head.contains("404"), "{head}");
+        let (head, _) = fetch("/healthz");
+        assert!(head.contains("200"), "{head}");
+        drop(server); // must join cleanly
+    }
+}

@@ -12,12 +12,20 @@
 //!
 //! | verb | path | meaning |
 //! |------|------|---------|
-//! | GET  | `/runs` | every registered run's live status |
-//! | GET  | `/runs/<id>` | one run's status |
-//! | GET  | `/runs/<id>/metrics?fields=a,b&last=N` | recent telemetry rows, projected |
+//! | GET  | `/runs?last=N&summary=1` | every registered run's live status |
+//! | GET  | `/runs/<id>?last=N&summary=1` | one run's status |
+//! | GET  | `/runs/<id>/metrics?fields=a,b&last=N&where=…&agg=…` | recent telemetry rows, filtered/projected/aggregated |
 //! | GET  | `/mem?slope=S` | analytic footprint vs. RSS + leak verdict |
+//! | GET  | `/metrics` | Prometheus text exposition ([`prom`](super::prom)) |
 //! | GET  | `/healthz` | liveness |
 //! | POST | `/runs/<id>/checkpoint\|pause\|resume\|abort` | arm a control flag |
+//!
+//! `/runs` scrape-size knobs: `last=N` caps each run's loss/val tails
+//! (default 5), `summary=1` omits the tails entirely. `/runs/<id>/metrics`
+//! query predicates: `where=loss<2.0,step>=100` filters the ring window
+//! (clauses ANDed; ops `< <= > >= = !=`), `agg=mean:loss,max:step,count`
+//! returns aggregates instead of rows. Grammar in EXPERIMENTS.md
+//! §Observability.
 //!
 //! Control verbs return `202 Accepted`: they arm a flag the training
 //! loop consumes at its next step boundary — nothing happens inline
@@ -34,14 +42,25 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::mem::{self, MemSamples, DEFAULT_LEAK_SLOPE};
-use super::StatusBoard;
+use super::{prom, StatusBoard, DEFAULT_TAIL};
 use crate::jsonlite::{obj, Json};
+use crate::metrics::{AggSpec, Predicate};
 
 /// Default row count for `/runs/<id>/metrics` when `last` is absent.
 pub const DEFAULT_LAST: usize = 50;
 
 /// RSS sampling cadence of the background sampler thread.
 const SAMPLE_EVERY: Duration = Duration::from_millis(250);
+
+/// Default `/mem` leak-detector window in seconds
+/// (`--mem-window-secs`); at the 250 ms cadence this is 512 samples.
+pub const DEFAULT_MEM_WINDOW_SECS: f64 = 128.0;
+
+/// Sample capacity of a leak-detector window of `secs` seconds at the
+/// fixed [`SAMPLE_EVERY`] cadence.
+pub fn mem_window_cap(secs: f64) -> usize {
+    (secs / SAMPLE_EVERY.as_secs_f64()).ceil().max(2.0) as usize
+}
 
 /// Decode `%XX` escapes and `+`-as-space. Invalid escapes pass through
 /// verbatim — a probe server should answer 404, not panic, on junk.
@@ -137,8 +156,16 @@ fn mem_report(board: &StatusBoard, samples: &MemSamples, threshold: f64) -> Json
     ])
 }
 
+/// The `?summary=` flag: present with no value, `1` or `true` all mean
+/// "omit the tails"; an explicit `0`/`false` means the default view.
+fn summary_flag(v: Option<&str>) -> bool {
+    matches!(v, Some("") | Some("1") | Some("true"))
+}
+
 /// Pure router: `(method, path, query)` → `(status, JSON body)`.
-/// Everything observable about the probe API is decided here.
+/// Everything observable about the probe API is decided here — except
+/// `GET /metrics`, whose body is Prometheus *text*, handled by
+/// [`route_request`] above this JSON layer.
 pub fn route(
     board: &StatusBoard,
     samples: &MemSamples,
@@ -148,14 +175,32 @@ pub fn route(
 ) -> (u16, Json) {
     let parts: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
     let q = |k: &str| query.iter().find(|(key, _)| key == k).map(|(_, v)| v.as_str());
+    let tail = |default: usize| match q("last").map(str::parse::<usize>) {
+        Some(Ok(n)) => Ok(n),
+        Some(Err(_)) => Err(()),
+        None => Ok(default),
+    };
     match (method, parts.as_slice()) {
         ("GET", []) | ("GET", ["healthz"]) => (200, obj(vec![("ok", Json::from(true))])),
-        ("GET", ["runs"]) => (
-            200,
-            obj(vec![("n", Json::from(board.len())), ("runs", board.runs_json())]),
-        ),
+        ("GET", ["runs"]) => {
+            let Ok(rows) = tail(DEFAULT_TAIL) else {
+                return (400, err_json("last must be a non-negative integer"));
+            };
+            (
+                200,
+                obj(vec![
+                    ("n", Json::from(board.len())),
+                    ("runs", board.runs_json_opts(rows, summary_flag(q("summary")))),
+                ]),
+            )
+        }
         ("GET", ["runs", id]) => match board.get(id) {
-            Some(p) => (200, p.to_json()),
+            Some(p) => {
+                let Ok(rows) = tail(DEFAULT_TAIL) else {
+                    return (400, err_json("last must be a non-negative integer"));
+                };
+                (200, p.to_json_opts(rows, summary_flag(q("summary"))))
+            }
             None => not_found(),
         },
         ("GET", ["runs", id, "metrics"]) => match board.get(id) {
@@ -163,16 +208,31 @@ pub fn route(
                 let fields: Option<Vec<String>> = q("fields").map(|f| {
                     f.split(',').filter(|s| !s.is_empty()).map(str::to_string).collect()
                 });
-                let last = match q("last").map(str::parse::<usize>) {
-                    Some(Ok(n)) => n,
-                    Some(Err(_)) => return (400, err_json("last must be a non-negative integer")),
-                    None => DEFAULT_LAST,
+                let Ok(last) = tail(DEFAULT_LAST) else {
+                    return (400, err_json("last must be a non-negative integer"));
                 };
+                let preds = match q("where").map(Predicate::parse_list) {
+                    Some(Ok(p)) => p,
+                    Some(Err(e)) => return (400, err_json(&format!("bad where clause: {e}"))),
+                    None => Vec::new(),
+                };
+                if let Some(spec) = q("agg") {
+                    return match AggSpec::parse_list(spec) {
+                        Ok(aggs) => (
+                            200,
+                            obj(vec![
+                                ("run_id", Json::from(*id)),
+                                ("agg", p.metrics_agg_json(last, &preds, &aggs)),
+                            ]),
+                        ),
+                        Err(e) => (400, err_json(&format!("bad agg clause: {e}"))),
+                    };
+                }
                 (
                     200,
                     obj(vec![
                         ("run_id", Json::from(*id)),
-                        ("rows", p.metrics_json(fields.as_deref(), last)),
+                        ("rows", p.metrics_json_where(fields.as_deref(), last, &preds)),
                     ]),
                 )
             }
@@ -218,16 +278,51 @@ fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        500 => "Internal Server Error",
         _ => "OK",
     }
 }
 
-fn write_response(stream: &mut TcpStream, status: u16, body: &Json) -> std::io::Result<()> {
-    let text = body.dump();
+/// A routed response body: JSON for the API endpoints, plain text for
+/// the Prometheus exposition.
+pub enum Payload {
+    Json(Json),
+    Text(String),
+}
+
+/// Full router including the non-JSON endpoint: `GET /metrics` renders
+/// the Prometheus text exposition; everything else is [`route`].
+pub fn route_request(
+    board: &StatusBoard,
+    samples: &MemSamples,
+    method: &str,
+    path: &str,
+    query: &[(String, String)],
+) -> (u16, Payload) {
+    if method == "GET" && path.trim_end_matches('/') == "/metrics" {
+        return (200, Payload::Text(prom::render_worker(board, samples)));
+    }
+    let (status, body) = route(board, samples, method, path, query);
+    (status, Payload::Json(body))
+}
+
+/// Serialize one HTTP/1.1 response. Shared with the fleet aggregator's
+/// server ([`super::fleet`]), which speaks the same tiny subset.
+pub(crate) fn write_payload(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &Payload,
+) -> std::io::Result<()> {
+    let (ctype, text) = match body {
+        Payload::Json(v) => ("application/json", v.dump()),
+        // The exposition-format content type Prometheus scrapers expect.
+        Payload::Text(t) => ("text/plain; version=0.0.4; charset=utf-8", t.clone()),
+    };
     let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
         status,
         reason(status),
+        ctype,
         text.len()
     );
     stream.write_all(head.as_bytes())?;
@@ -235,11 +330,11 @@ fn write_response(stream: &mut TcpStream, status: u16, body: &Json) -> std::io::
     stream.flush()
 }
 
-fn handle_conn(
-    mut stream: TcpStream,
-    board: &StatusBoard,
-    samples: &Mutex<MemSamples>,
-) -> std::io::Result<()> {
+/// Read a request until end-of-headers (2 s timeout, 16 KiB cap) and
+/// parse its request line. Shared with the fleet server.
+pub(crate) fn read_request(
+    stream: &mut TcpStream,
+) -> std::io::Result<Option<(String, String, Vec<(String, String)>)>> {
     stream.set_read_timeout(Some(Duration::from_secs(2)))?;
     let mut buf: Vec<u8> = Vec::new();
     let mut chunk = [0u8; 1024];
@@ -253,14 +348,22 @@ fn handle_conn(
         buf.extend_from_slice(&chunk[..n]);
     }
     let text = String::from_utf8_lossy(&buf);
-    let (status, body) = match text.lines().next().and_then(parse_request_line) {
+    Ok(text.lines().next().and_then(parse_request_line))
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    board: &StatusBoard,
+    samples: &Mutex<MemSamples>,
+) -> std::io::Result<()> {
+    let (status, body) = match read_request(&mut stream)? {
         Some((method, path, query)) => {
             let snap = samples.lock().unwrap_or_else(|p| p.into_inner()).clone();
-            route(board, &snap, &method, &path, &query)
+            route_request(board, &snap, &method, &path, &query)
         }
-        None => (400, err_json("malformed request line")),
+        None => (400, Payload::Json(err_json("malformed request line"))),
     };
-    write_response(&mut stream, status, &body)
+    write_payload(&mut stream, status, &body)
 }
 
 /// The running probe server: an accept-loop thread plus a background
@@ -276,13 +379,26 @@ pub struct ProbeServer {
 
 impl ProbeServer {
     /// Bind `127.0.0.1:port` (`0` = kernel-assigned ephemeral port;
-    /// read it back with [`ProbeServer::port`]) and start serving.
+    /// read it back with [`ProbeServer::port`]) and start serving, with
+    /// the default [`DEFAULT_MEM_WINDOW_SECS`] leak-detector window.
     pub fn start(board: StatusBoard, port: u16) -> Result<ProbeServer> {
+        Self::start_with_window(board, port, DEFAULT_MEM_WINDOW_SECS)
+    }
+
+    /// [`ProbeServer::start`] with an explicit `/mem` leak-detector
+    /// window (`--mem-window-secs` / `sweep.mem_window_secs`): the RSS
+    /// sampler keeps `window_secs` of history at its fixed 250 ms
+    /// cadence, and the slope/r² fit runs over exactly that window.
+    pub fn start_with_window(
+        board: StatusBoard,
+        port: u16,
+        window_secs: f64,
+    ) -> Result<ProbeServer> {
         let listener = TcpListener::bind(("127.0.0.1", port))
             .with_context(|| format!("probe: cannot bind 127.0.0.1:{port}"))?;
         let addr = listener.local_addr().context("probe: local_addr")?;
         let stop = Arc::new(AtomicBool::new(false));
-        let samples = Arc::new(Mutex::new(MemSamples::default()));
+        let samples = Arc::new(Mutex::new(MemSamples::new(mem_window_cap(window_secs))));
 
         let sampler = {
             let stop = Arc::clone(&stop);
@@ -462,6 +578,99 @@ mod tests {
     }
 
     #[test]
+    fn runs_scrape_knobs_cap_and_summarize() {
+        let board = StatusBoard::new();
+        let probe = board.register("r", 10);
+        for i in 0..8usize {
+            probe.record_step(
+                i,
+                i as f64,
+                0.0,
+                obj(vec![("step", Json::from(i)), ("loss", Json::from(i as f64))]),
+            );
+        }
+        let (code, body) = get(&board, "/runs?last=2");
+        assert_eq!(code, 200);
+        let run = &body.get("runs").unwrap().as_arr().unwrap()[0];
+        assert_eq!(run.get("loss_tail").unwrap().as_arr().unwrap().len(), 2);
+        let (code, body) = get(&board, "/runs?summary=1");
+        assert_eq!(code, 200);
+        let run = &body.get("runs").unwrap().as_arr().unwrap()[0];
+        assert!(run.opt("loss_tail").is_none(), "summary omits the tails");
+        assert_eq!(run.get("step").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(get(&board, "/runs?last=zebra").0, 400);
+        // the single-run view takes the same knobs (bare ?summary works)
+        let (code, body) = get(&board, "/runs/r?summary&last=1");
+        assert_eq!(code, 200);
+        assert!(body.opt("loss_tail").is_none());
+        let (_, body) = get(&board, "/runs/r?last=3");
+        assert_eq!(body.get("loss_tail").unwrap().as_arr().unwrap().len(), 3);
+        // an explicit summary=0 keeps the default view
+        let (_, body) = get(&board, "/runs/r?summary=0");
+        assert!(body.opt("loss_tail").is_some());
+    }
+
+    #[test]
+    fn metrics_where_filters_and_agg_aggregates() {
+        let board = StatusBoard::new();
+        let probe = board.register("r", 10);
+        for i in 0..6usize {
+            probe.record_step(
+                i,
+                (5 - i) as f64,
+                0.0,
+                obj(vec![
+                    ("step", Json::from(i * 10)),
+                    ("loss", Json::from((5 - i) as f64)),
+                ]),
+            );
+        }
+        let (code, body) = get(&board, "/runs/r/metrics?where=loss%3C2.0,step%3E=30");
+        assert_eq!(code, 200);
+        let rows = body.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2, "loss<2 ∧ step>=30 keeps steps 40 and 50");
+        let (code, body) = get(&board, "/runs/r/metrics?where=loss%3C2.0&agg=mean:loss,count");
+        assert_eq!(code, 200);
+        let agg = body.get("agg").unwrap();
+        assert_eq!(agg.get("mean:loss").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(agg.get("count").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(get(&board, "/runs/r/metrics?where=loss").0, 400, "no operator");
+        assert_eq!(get(&board, "/runs/r/metrics?agg=median:loss").0, 400, "unknown fn");
+    }
+
+    #[test]
+    fn metrics_endpoint_is_prometheus_text() {
+        let board = StatusBoard::new();
+        board.register("r", 10);
+        let (m, p, q) = parse_request_line("GET /metrics HTTP/1.1").unwrap();
+        let (code, payload) = route_request(&board, &MemSamples::default(), &m, &p, &q);
+        assert_eq!(code, 200);
+        match payload {
+            Payload::Text(t) => {
+                assert!(t.contains("# TYPE addax_run_step gauge"), "{t}");
+                assert!(t.contains("addax_run_step{run_id=\"r\"} 0"), "{t}");
+            }
+            Payload::Json(_) => panic!("/metrics must be text, not JSON"),
+        }
+        // everything else still routes to JSON
+        let (_, payload) = route_request(
+            &board,
+            &MemSamples::default(),
+            "GET",
+            "/runs",
+            &[],
+        );
+        assert!(matches!(payload, Payload::Json(_)));
+    }
+
+    #[test]
+    fn mem_window_cap_follows_the_sampler_cadence() {
+        assert_eq!(mem_window_cap(DEFAULT_MEM_WINDOW_SECS), 512);
+        assert_eq!(mem_window_cap(1.0), 4);
+        assert_eq!(mem_window_cap(0.0), 2, "floor at a fittable window");
+    }
+
+    #[test]
     fn mem_endpoint_reports_threshold_override() {
         let board = StatusBoard::new();
         board.register("r", 10).set_footprint_bytes(123.0);
@@ -511,6 +720,15 @@ mod tests {
 
         let (status, _) = fetch("BOGUS-LINE\r\n\r\n");
         assert!(status.contains("400"), "{status}");
+
+        // the exposition endpoint serves text with the scrape content type
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
+        assert!(resp.contains("# TYPE addax_run_loss gauge"), "{resp}");
+        assert!(resp.contains("addax_run_loss{run_id=\"live-run\"} 0.25"), "{resp}");
 
         drop(server); // must join cleanly, not hang
     }

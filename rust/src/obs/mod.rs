@@ -14,11 +14,19 @@
 //!   three control flags (`checkpoint` / `pause` / `abort`) the HTTP
 //!   control verbs set.
 //! * [`http::ProbeServer`] — a tiny std-`TcpListener` HTTP/1.1 server
-//!   (`--probe-port`; no new dependencies) serving `GET /runs`,
-//!   `GET /runs/<id>/metrics`, `GET /mem` and
+//!   (`--probe-port`; no new dependencies) serving `GET /runs`
+//!   (`?last=N`, `?summary=1`), `GET /runs/<id>/metrics`
+//!   (`?fields`/`?last`/`?where`/`?agg`), `GET /mem`, `GET /metrics`
+//!   (Prometheus text exposition, [`prom`]) and
 //!   `POST /runs/<id>/checkpoint|pause|resume|abort`.
 //! * [`mem`] — actual RSS from `/proc/self/statm` vs. the analytic
-//!   `memory::footprint` pricing, with a least-squares leak detector.
+//!   `memory::footprint` pricing, with a least-squares leak detector
+//!   over a configurable window (`--mem-window-secs`).
+//! * [`fleet`] — the read-only fleet aggregator behind
+//!   `addax fleet-status`: reconstructs cross-worker state from the
+//!   manifest/lease/times side files alone, federates live `/runs`
+//!   tails from worker probes advertised in lease records, and serves
+//!   `GET /fleet` + `GET /metrics` for the whole fleet.
 //!
 //! ## Invariant: probes cannot move a deterministic byte
 //!
@@ -43,15 +51,19 @@
 //! [`Halted`]: crate::coordinator::Halted
 //! [`MetricsRing`]: crate::metrics::MetricsRing
 
+pub mod fleet;
 pub mod http;
 pub mod mem;
+pub mod prom;
 
+pub use fleet::{FleetServer, FleetView};
 pub use http::ProbeServer;
 pub use mem::{rss_bytes, MemSamples};
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::jsonlite::{obj, Json};
 use crate::metrics::MetricsRing;
@@ -97,6 +109,13 @@ struct RunState {
     footprint_bytes: Option<f64>,
     /// Fleet lease identity: `(worker, fencing token)`.
     lease: Option<(String, u64)>,
+    /// When `record_step`/`record_eval` last touched this probe, plus
+    /// the first touch and the touch count — enough to derive both the
+    /// `last_update_ms` age and the observed mean update cadence the
+    /// `stale` flag compares against.
+    last_update: Option<Instant>,
+    first_update: Option<Instant>,
+    updates: u64,
 }
 
 /// One run's live status + control flags. Shared as an `Arc` between
@@ -119,6 +138,13 @@ pub struct RunProbe {
 /// cadences of the smoke grids, small enough to be memory-noise.
 const RING_CAP: usize = 256;
 
+/// Default loss/val tail length in `/runs` rows (`?last=` overrides).
+pub const DEFAULT_TAIL: usize = 5;
+
+/// Minimum quiet time before the `stale` flag can fire, regardless of
+/// how fast the run's observed cadence is.
+const STALE_FLOOR_MS: f64 = 1_000.0;
+
 impl RunProbe {
     fn new(run_id: &str, steps_total: usize) -> Self {
         Self {
@@ -135,6 +161,9 @@ impl RunProbe {
                 stolen: 0,
                 footprint_bytes: None,
                 lease: None,
+                last_update: None,
+                first_update: None,
+                updates: 0,
             }),
             ring: Mutex::new(MetricsRing::new(RING_CAP)),
             lease_seq: AtomicU64::new(0),
@@ -206,6 +235,7 @@ impl RunProbe {
             s.step = step;
             s.loss = Some(loss);
             s.zo_loss = Some(zo_loss);
+            Self::touch(&mut s);
         }
         self.ring.lock().unwrap_or_else(|p| p.into_inner()).push(row);
     }
@@ -216,8 +246,16 @@ impl RunProbe {
             s.step = step;
             s.val_acc = Some(val_acc);
             s.best_val = Some(best_val);
+            Self::touch(&mut s);
         }
         self.ring.lock().unwrap_or_else(|p| p.into_inner()).push(row);
+    }
+
+    fn touch(s: &mut RunState) {
+        let now = Instant::now();
+        s.last_update = Some(now);
+        s.first_update.get_or_insert(now);
+        s.updates += 1;
     }
 
     // ---- control plane (HTTP side sets, training loop consumes) --------
@@ -262,6 +300,14 @@ impl RunProbe {
     /// (no step yet, no eval yet, no lease) are `null`, never zero —
     /// an operator must be able to tell "not measured" from "0.0".
     pub fn to_json(&self) -> Json {
+        self.to_json_opts(DEFAULT_TAIL, false)
+    }
+
+    /// [`RunProbe::to_json`] with the scrape-size knobs: `tail_rows`
+    /// caps the loss/val tails (`?last=N`), and `summary` omits them
+    /// entirely (`?summary=1`) — so a thousand-run grid can't make one
+    /// scrape allocate the whole board.
+    pub fn to_json_opts(&self, tail_rows: usize, summary: bool) -> Json {
         let s = self.lock();
         let opt_num = |v: Option<f64>| v.map(Json::from).unwrap_or(Json::Null);
         let lease = match &s.lease {
@@ -277,21 +323,37 @@ impl RunProbe {
                 .ring
                 .lock()
                 .unwrap_or_else(|p| p.into_inner())
-                .query(Some(&[key.to_string()]), 5);
+                .query(Some(&[key.to_string()]), tail_rows);
             Json::Arr(
                 rows.into_iter().filter_map(|r| r.opt(key).cloned()).collect(),
             )
         };
-        obj(vec![
+        // Age of the most recent record_step/record_eval, plus the
+        // wedged-worker flag: running, updated at least twice (so a
+        // cadence exists), and quiet past 3× the observed mean
+        // inter-update gap. The floor keeps microsecond-cadence mock
+        // runs from flapping the flag between scrape and step.
+        let (age_ms, stale) = match (s.last_update, s.first_update) {
+            (Some(last), Some(first)) => {
+                let age = last.elapsed().as_secs_f64() * 1e3;
+                let running = s.phase == RunPhase::Running && !self.paused();
+                let stale = running && s.updates >= 2 && {
+                    let mean_gap_ms =
+                        (last - first).as_secs_f64() * 1e3 / (s.updates - 1) as f64;
+                    age > (3.0 * mean_gap_ms).max(STALE_FLOOR_MS)
+                };
+                (Json::from(age as usize), stale)
+            }
+            _ => (Json::Null, false),
+        };
+        let mut pairs = vec![
             ("run_id", Json::from(self.run_id.clone())),
             ("phase", Json::from(self.lock_free_phase_label(&s))),
             ("step", Json::from(s.step)),
             ("steps_total", Json::from(s.steps_total)),
             ("loss", opt_num(s.loss)),
-            ("loss_tail", tail("loss")),
             ("zo_loss", opt_num(s.zo_loss)),
             ("val_acc", opt_num(s.val_acc)),
-            ("val_tail", tail("val_acc")),
             ("best_val", opt_num(s.best_val)),
             (
                 "resumed_from_step",
@@ -300,7 +362,14 @@ impl RunProbe {
             ("stolen", Json::from(s.stolen as usize)),
             ("footprint_bytes", opt_num(s.footprint_bytes)),
             ("lease", lease),
-        ])
+            ("last_update_ms", age_ms),
+            ("stale", Json::from(stale)),
+        ];
+        if !summary {
+            pairs.push(("loss_tail", tail("loss")));
+            pairs.push(("val_tail", tail("val_acc")));
+        }
+        obj(pairs)
     }
 
     fn lock_free_phase_label(&self, s: &RunState) -> &'static str {
@@ -317,10 +386,66 @@ impl RunProbe {
         Json::Arr(self.ring.lock().unwrap_or_else(|p| p.into_inner()).query(fields, last))
     }
 
+    /// `GET /runs/<id>/metrics?where=…` — the filtered window, projected.
+    pub fn metrics_json_where(
+        &self,
+        fields: Option<&[String]>,
+        last: usize,
+        preds: &[crate::metrics::Predicate],
+    ) -> Json {
+        Json::Arr(
+            self.ring
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .query_where(fields, last, preds),
+        )
+    }
+
+    /// `GET /runs/<id>/metrics?agg=…` — aggregates over the filtered
+    /// window, keyed by clause (`"mean:loss"`, `"count"`, …).
+    pub fn metrics_agg_json(
+        &self,
+        last: usize,
+        preds: &[crate::metrics::Predicate],
+        aggs: &[crate::metrics::AggSpec],
+    ) -> Json {
+        self.ring.lock().unwrap_or_else(|p| p.into_inner()).aggregate(last, preds, aggs)
+    }
+
     /// Analytic footprint in bytes, if the scheduler priced this run.
     pub fn footprint_bytes(&self) -> Option<f64> {
         self.lock().footprint_bytes
     }
+
+    /// Snapshot of the scalars the Prometheus exposition renders —
+    /// one lock, no JSON round-trip.
+    pub fn prom_sample(&self) -> PromSample {
+        let s = self.lock();
+        PromSample {
+            run_id: self.run_id.clone(),
+            step: s.step,
+            loss: s.loss,
+            best_val: s.best_val,
+            lease_active: s.lease.is_some()
+                && matches!(s.phase, RunPhase::Pending | RunPhase::Running),
+            stolen: s.stolen,
+            footprint_bytes: s.footprint_bytes,
+        }
+    }
+}
+
+/// One run's scalar snapshot for `GET /metrics` (see [`prom`]).
+#[derive(Clone, Debug)]
+pub struct PromSample {
+    pub run_id: String,
+    pub step: usize,
+    pub loss: Option<f64>,
+    pub best_val: Option<f64>,
+    /// The run currently holds (or awaits execution under) a lease in
+    /// this process — done/halted runs have retired theirs.
+    pub lease_active: bool,
+    pub stolen: u64,
+    pub footprint_bytes: Option<f64>,
 }
 
 /// The shared run registry: cheap to clone (an `Arc`), safe to share
@@ -365,8 +490,19 @@ impl StatusBoard {
 
     /// The `GET /runs` payload: every registered run, in run-id order.
     pub fn runs_json(&self) -> Json {
+        self.runs_json_opts(DEFAULT_TAIL, false)
+    }
+
+    /// [`StatusBoard::runs_json`] with the `?last=N` tail cap and the
+    /// `?summary=1` tail-omitting mode.
+    pub fn runs_json_opts(&self, tail_rows: usize, summary: bool) -> Json {
         let probes: Vec<Arc<RunProbe>> = self.lock().values().cloned().collect();
-        Json::Arr(probes.iter().map(|p| p.to_json()).collect())
+        Json::Arr(probes.iter().map(|p| p.to_json_opts(tail_rows, summary)).collect())
+    }
+
+    /// Every registered probe, in run-id order (the `/metrics` walk).
+    pub fn probes(&self) -> Vec<Arc<RunProbe>> {
+        self.lock().values().cloned().collect()
     }
 
     /// Sum of the analytic footprints of registered runs (for `/mem`).
@@ -418,6 +554,56 @@ mod tests {
         assert_eq!(lease.get("token").unwrap().as_usize().unwrap(), 2);
         assert_eq!(lease.get("seq").unwrap().as_usize().unwrap(), 7);
         assert_eq!(v.get("loss_tail").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn last_update_age_and_stale_flag() {
+        let p = StatusBoard::new().register("r", 10);
+        // never updated: age is null, stale is false
+        let v = p.to_json();
+        assert_eq!(v.get("last_update_ms").unwrap(), &Json::Null);
+        assert!(!v.get("stale").unwrap().as_bool().unwrap());
+        // one update: an age exists, but no cadence yet → not stale
+        p.record_step(1, 0.9, 0.0, obj(vec![("step", Json::from(1usize))]));
+        let v = p.to_json();
+        assert!(v.get("last_update_ms").unwrap().as_usize().unwrap() < 10_000);
+        assert!(!v.get("stale").unwrap().as_bool().unwrap(), "one update has no cadence");
+        // a second update still isn't stale (quiet time under the floor)
+        p.record_step(2, 0.8, 0.0, obj(vec![("step", Json::from(2usize))]));
+        assert!(!p.to_json().get("stale").unwrap().as_bool().unwrap());
+        // done runs are never stale, however long quiet
+        p.set_done();
+        assert!(!p.to_json().get("stale").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn summary_and_tail_cap_bound_the_scrape() {
+        let p = StatusBoard::new().register("r", 10);
+        for i in 0..8usize {
+            p.record_step(
+                i,
+                1.0,
+                0.0,
+                obj(vec![("step", Json::from(i)), ("loss", Json::from(1.0))]),
+            );
+        }
+        // default tail is 5
+        assert_eq!(p.to_json().get("loss_tail").unwrap().as_arr().unwrap().len(), 5);
+        // ?last=2 caps it
+        assert_eq!(
+            p.to_json_opts(2, false).get("loss_tail").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        // ?summary=1 omits the tails entirely but keeps the scalars
+        let v = p.to_json_opts(5, true);
+        assert!(v.opt("loss_tail").is_none());
+        assert!(v.opt("val_tail").is_none());
+        assert_eq!(v.get("step").unwrap().as_usize().unwrap(), 7);
+        // the board-level variant threads the knobs through
+        let board = StatusBoard::new();
+        board.register("a", 1);
+        let rows = board.runs_json_opts(3, true);
+        assert!(rows.as_arr().unwrap()[0].opt("loss_tail").is_none());
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! Prometheus text exposition (format 0.0.4) for the probe plane.
+//!
+//! Both observability servers answer `GET /metrics` through here: the
+//! per-worker [`ProbeServer`](super::ProbeServer) renders its
+//! [`StatusBoard`] (live in-process runs + the RSS/leak detector), and
+//! the fleet aggregator renders its ledger-reconstructed
+//! [`FleetView`](super::FleetView). One scrape config covers both — see
+//! OPERATIONS.md for the recipe.
+//!
+//! Format rules kept here (and checked by CI's python validator):
+//!
+//! * every metric gets exactly one `# HELP` and one `# TYPE` line,
+//!   immediately followed by all of its samples (series grouped);
+//! * metric names match `[a-zA-Z_:][a-zA-Z0-9_:]*`, label values are
+//!   escaped (`\\`, `\"`, `\n`);
+//! * absent measurements are *omitted*, never emitted as 0 or NaN — the
+//!   same "null is not zero" rule the JSON endpoints follow;
+//! * no duplicate series: one writer walks each metric once.
+
+use std::fmt::Write as _;
+
+use super::{mem, MemSamples, StatusBoard};
+
+/// Escape a label value per the exposition format: backslash, double
+/// quote and newline.
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render an f64 the exposition format accepts (`NaN`, `+Inf`, `-Inf`
+/// spellings — Rust's `Display` would print `inf`).
+pub fn format_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() }
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Incremental exposition writer: `header` once per metric, then its
+/// samples — the call order is the grouping guarantee.
+#[derive(Debug, Default)]
+pub struct PromText {
+    out: String,
+}
+
+impl PromText {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Emit the `# HELP` / `# TYPE` pair for `name` (`typ` is `gauge`
+    /// or `counter`). Call exactly once per metric, before its samples.
+    pub fn header(&mut self, name: &str, typ: &str, help: &str) {
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {typ}");
+    }
+
+    /// Emit one sample line, with optional labels.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        if labels.is_empty() {
+            let _ = writeln!(self.out, "{name} {}", format_value(value));
+        } else {
+            let rendered: Vec<String> = labels
+                .iter()
+                .map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v)))
+                .collect();
+            let _ = writeln!(self.out, "{name}{{{}}} {}", rendered.join(","), format_value(value));
+        }
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// The per-worker probe server's `GET /metrics`: per-run gauges off the
+/// status board plus the process-level memory series. Fleet-wide
+/// counters that only the ledger knows (fenced rows) live on the
+/// aggregator's exposition ([`fleet`](super::fleet)), not here — a
+/// worker never fabricates a 0 for a number it doesn't track.
+pub fn render_worker(board: &StatusBoard, samples: &MemSamples) -> String {
+    let mut p = PromText::new();
+    let runs: Vec<_> = board.probes().iter().map(|r| r.prom_sample()).collect();
+
+    p.header("addax_run_step", "gauge", "Latest training step of a probed run.");
+    for r in &runs {
+        p.sample("addax_run_step", &[("run_id", &r.run_id)], r.step as f64);
+    }
+    p.header("addax_run_loss", "gauge", "Latest training loss of a probed run.");
+    for r in &runs {
+        if let Some(loss) = r.loss {
+            p.sample("addax_run_loss", &[("run_id", &r.run_id)], loss);
+        }
+    }
+    p.header("addax_run_best_val", "gauge", "Best validation accuracy so far.");
+    for r in &runs {
+        if let Some(best) = r.best_val {
+            p.sample("addax_run_best_val", &[("run_id", &r.run_id)], best);
+        }
+    }
+    p.header(
+        "addax_lease_active",
+        "gauge",
+        "1 while this process holds (or awaits execution under) the run's lease.",
+    );
+    for r in &runs {
+        p.sample(
+            "addax_lease_active",
+            &[("run_id", &r.run_id)],
+            if r.lease_active { 1.0 } else { 0.0 },
+        );
+    }
+    p.header(
+        "addax_stolen_shards_total",
+        "counter",
+        "Probe shards of this worker's runs computed by thief workers.",
+    );
+    p.sample(
+        "addax_stolen_shards_total",
+        &[],
+        runs.iter().map(|r| r.stolen).sum::<u64>() as f64,
+    );
+    p.header(
+        "addax_footprint_bytes",
+        "gauge",
+        "Analytic memory-model footprint of the registered runs.",
+    );
+    p.sample("addax_footprint_bytes", &[], board.analytic_bytes());
+    p.header("addax_rss_bytes", "gauge", "Resident set size of this worker process.");
+    if let Some(rss) = mem::rss_bytes() {
+        p.sample("addax_rss_bytes", &[], rss as f64);
+    }
+    // The /mem leak detector's regression, as scrapeable gauges: slope
+    // of RSS over the sampling window and the fit's r² (omitted until
+    // enough samples exist for a fit, like /mem reports null).
+    if let Some((slope, r2)) = samples.fit() {
+        p.header(
+            "addax_mem_slope_bytes_per_sec",
+            "gauge",
+            "RSS growth slope over the leak-detector window.",
+        );
+        p.sample("addax_mem_slope_bytes_per_sec", &[], slope);
+        p.header("addax_mem_r2", "gauge", "Fit quality (r-squared) of the RSS slope.");
+        p.sample("addax_mem_r2", &[], r2);
+    }
+    p.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonlite::{obj, Json};
+
+    #[test]
+    fn label_escaping_covers_the_format_rules() {
+        assert_eq!(escape_label_value("plain"), "plain");
+        assert_eq!(escape_label_value("a\"b"), "a\\\"b");
+        assert_eq!(escape_label_value("a\\b"), "a\\\\b");
+        assert_eq!(escape_label_value("a\nb"), "a\\nb");
+        assert_eq!(format_value(2.5), "2.5");
+        assert_eq!(format_value(f64::NAN), "NaN");
+        assert_eq!(format_value(f64::INFINITY), "+Inf");
+        assert_eq!(format_value(f64::NEG_INFINITY), "-Inf");
+    }
+
+    #[test]
+    fn worker_exposition_is_well_formed() {
+        let board = StatusBoard::new();
+        let p = board.register("run-a", 10);
+        p.set_running(10);
+        p.record_step(
+            3,
+            0.5,
+            0.25,
+            obj(vec![("step", Json::from(3usize)), ("loss", Json::from(0.5))]),
+        );
+        p.record_eval(4, 0.7, 0.7, obj(vec![("val_acc", Json::from(0.7))]));
+        p.set_lease("w0", 2);
+        board.register("run-b", 5); // pending, no loss yet
+        let text = render_worker(&board, &MemSamples::default());
+
+        // every metric has its HELP/TYPE pair, and series are unique
+        let mut seen_series = std::collections::BTreeSet::new();
+        let mut helped = std::collections::BTreeSet::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let name = rest.split_whitespace().next().unwrap();
+                assert!(helped.insert(name.to_string()), "duplicate HELP for {name}");
+                continue;
+            }
+            if line.starts_with('#') {
+                continue;
+            }
+            let series = line.rsplit_once(' ').unwrap().0;
+            assert!(seen_series.insert(series.to_string()), "duplicate series {series}");
+            let metric = series.split('{').next().unwrap();
+            assert!(helped.contains(metric), "sample before HELP for {metric}");
+            assert!(
+                metric.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad metric name {metric}"
+            );
+        }
+        // the advertised series are present with the right values
+        assert!(text.contains("addax_run_step{run_id=\"run-a\"} 4"), "{text}");
+        assert!(text.contains("addax_run_loss{run_id=\"run-a\"} 0.5"), "{text}");
+        assert!(text.contains("addax_run_best_val{run_id=\"run-a\"} 0.7"), "{text}");
+        assert!(text.contains("addax_lease_active{run_id=\"run-a\"} 1"), "{text}");
+        assert!(text.contains("addax_lease_active{run_id=\"run-b\"} 0"), "{text}");
+        assert!(text.contains("addax_stolen_shards_total 0"), "{text}");
+        assert!(text.contains("addax_footprint_bytes"), "{text}");
+        // absent measurements are omitted, not zeroed
+        assert!(!text.contains("addax_run_loss{run_id=\"run-b\"}"), "{text}");
+        // too few mem samples: the detector gauges are absent entirely
+        assert!(!text.contains("addax_mem_slope_bytes_per_sec"), "{text}");
+    }
+}

@@ -160,19 +160,31 @@ pub struct LeaseRecord {
     /// Lease expiry, ms since epoch (claim/reclaim/renew; a release
     /// carries the append time, informational only).
     pub expires_ms: u64,
+    /// The holder's probe-server address (`host:port`), advertised on
+    /// claims/reclaims/renews when the worker runs `--probe-port` so a
+    /// fleet aggregator can federate live `/runs` state. Absent on
+    /// unprobed workers, on releases, and on every pre-probe-era ledger
+    /// line — the key is only emitted when present, keeping old lines
+    /// byte-stable and canonical key order intact.
+    pub probe: Option<String>,
 }
 
 impl LeaseRecord {
     pub fn to_line(&self) -> String {
-        obj(vec![
+        let mut pairs = vec![
             ("action", Json::from(self.action.label())),
             ("expires_ms", Json::from(self.expires_ms as usize)),
             ("run_id", Json::from(self.run_id.clone())),
             ("seq", Json::from(self.seq as usize)),
             ("token", Json::from(self.token as usize)),
             ("worker", Json::from(self.worker.clone())),
-        ])
-        .dump()
+        ];
+        if let Some(p) = &self.probe {
+            // obj() sorts keys: "probe" lands between expires_ms and
+            // run_id regardless of push order.
+            pairs.push(("probe", Json::from(p.clone())));
+        }
+        obj(pairs).dump()
     }
 
     pub fn from_line(line: &str) -> Result<Self> {
@@ -186,6 +198,8 @@ impl LeaseRecord {
             seq: v.opt("seq").and_then(|s| s.as_u64().ok()).unwrap_or(0),
             action: LeaseAction::parse(v.get("action")?.as_str()?)?,
             expires_ms: v.get("expires_ms")?.as_u64()?,
+            // Absent on pre-probe-era ledgers and unprobed workers.
+            probe: v.opt("probe").and_then(|p| p.as_str().ok()).map(str::to_string),
         })
     }
 }
@@ -223,6 +237,11 @@ pub struct LeaseState {
     /// Highest renewal `seq` seen from the current holder.
     pub seq: u64,
     pub released: bool,
+    /// The holder's advertised probe address, if it runs a probe server.
+    /// Cleared on release (a retired lease has no live probe to call)
+    /// so a rotated ledger — whose release lines carry no probe —
+    /// replays to the same table as the file it replaced.
+    pub probe: Option<String>,
 }
 
 /// All leases, replayed from the file in append order.
@@ -266,6 +285,7 @@ impl LeaseTable {
                     expires_ms: rec.expires_ms,
                     seq: rec.seq,
                     released: false,
+                    probe: rec.probe,
                 };
                 match entry {
                     std::collections::btree_map::Entry::Vacant(v) => {
@@ -286,6 +306,9 @@ impl LeaseTable {
                     if s.token == rec.token && s.worker == rec.worker && !s.released {
                         s.expires_ms = s.expires_ms.max(rec.expires_ms);
                         s.seq = s.seq.max(rec.seq);
+                        if rec.probe.is_some() {
+                            s.probe = rec.probe;
+                        }
                     }
                 }
             }
@@ -296,6 +319,7 @@ impl LeaseTable {
                         if s.token == rec.token {
                             s.released = true;
                             s.seq = s.seq.max(rec.seq);
+                            s.probe = None;
                         }
                     }
                     // A release with no prior record is the compacted
@@ -310,6 +334,7 @@ impl LeaseTable {
                             expires_ms: rec.expires_ms,
                             seq: rec.seq,
                             released: true,
+                            probe: None,
                         });
                     }
                 }
@@ -382,6 +407,12 @@ impl LeaseTable {
     pub fn run_ids(&self) -> impl Iterator<Item = &str> {
         self.states.keys().map(String::as_str)
     }
+
+    /// Every `(run_id, state)` pair in sorted order — the read-only view
+    /// a fleet aggregator walks to reconstruct per-worker holdings.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &LeaseState)> {
+        self.states.iter().map(|(k, v)| (k.as_str(), v))
+    }
 }
 
 /// Rotate (garbage-collect) the ledger when every recorded lease is
@@ -439,6 +470,8 @@ pub fn rotate(path: &Path, min_lines: usize) -> Result<bool> {
             seq: s.seq,
             action: LeaseAction::Release,
             expires_ms: s.expires_ms,
+            // a compacted (released) line never carries a probe address
+            probe: None,
         };
         out.push_str(&rec.to_line());
         out.push('\n');
@@ -545,6 +578,7 @@ mod tests {
             seq: 0,
             action,
             expires_ms: expires,
+            probe: None,
         }
     }
 
@@ -583,6 +617,76 @@ mod tests {
         let legacy =
             "{\"action\":\"claim\",\"expires_ms\":50,\"run_id\":\"r\",\"token\":1,\"worker\":\"w\"}";
         assert_eq!(LeaseRecord::from_line(legacy).unwrap().seq, 0);
+    }
+
+    #[test]
+    fn probe_field_roundtrips_and_pre_probe_lines_parse_as_absent() {
+        // a probe-less record emits no "probe" key at all
+        let bare = rec("r", "w0", 1, LeaseAction::Claim, 50);
+        assert!(!bare.to_line().contains("probe"), "{}", bare.to_line());
+        assert_eq!(LeaseRecord::from_line(&bare.to_line()).unwrap().probe, None);
+        // a probed record round-trips and stays in canonical key order
+        let probed = LeaseRecord { probe: Some("127.0.0.1:9090".to_string()), ..bare.clone() };
+        let line = probed.to_line();
+        assert_eq!(
+            line,
+            "{\"action\":\"claim\",\"expires_ms\":50,\"probe\":\"127.0.0.1:9090\",\
+             \"run_id\":\"r\",\"seq\":0,\"token\":1,\"worker\":\"w0\"}"
+        );
+        let back = LeaseRecord::from_line(&line).unwrap();
+        assert_eq!(back.probe.as_deref(), Some("127.0.0.1:9090"));
+        assert_eq!(back.to_line(), line, "serialization is canonical");
+        // pre-probe-era ledger lines (no "probe" key) parse as absent
+        let legacy =
+            "{\"action\":\"renew\",\"expires_ms\":50,\"run_id\":\"r\",\"seq\":3,\"token\":1,\
+             \"worker\":\"w\"}";
+        assert_eq!(LeaseRecord::from_line(legacy).unwrap().probe, None);
+    }
+
+    #[test]
+    fn probe_address_follows_the_lease_lifecycle() {
+        let probed = |r: LeaseRecord, p: &str| LeaseRecord { probe: Some(p.to_string()), ..r };
+        // installed on claim, refreshed by a probe-carrying renew
+        let t = table(&[
+            probed(rec("r", "w0", 1, LeaseAction::Claim, 100), "127.0.0.1:1111"),
+            probed(rec_seq("r", "w0", 1, 1, LeaseAction::Renew, 200), "127.0.0.1:2222"),
+        ]);
+        assert_eq!(t.state("r").unwrap().probe.as_deref(), Some("127.0.0.1:2222"));
+        // a probe-less renew keeps the advertised address
+        let t = table(&[
+            probed(rec("r", "w0", 1, LeaseAction::Claim, 100), "127.0.0.1:1111"),
+            rec_seq("r", "w0", 1, 1, LeaseAction::Renew, 200),
+        ]);
+        assert_eq!(t.state("r").unwrap().probe.as_deref(), Some("127.0.0.1:1111"));
+        // a zombie's renew cannot repoint the probe
+        let t = table(&[
+            probed(rec("r", "w0", 2, LeaseAction::Claim, 100), "127.0.0.1:1111"),
+            probed(rec_seq("r", "w1", 1, 9, LeaseAction::Renew, 900), "127.0.0.1:6666"),
+        ]);
+        assert_eq!(t.state("r").unwrap().probe.as_deref(), Some("127.0.0.1:1111"));
+        // release clears it: a retired lease has no live probe, matching
+        // the rotated (release-on-vacant) form byte for byte
+        let t = table(&[
+            probed(rec("r", "w0", 1, LeaseAction::Claim, 100), "127.0.0.1:1111"),
+            rec("r", "w0", 1, LeaseAction::Release, 100),
+        ]);
+        assert_eq!(t.state("r").unwrap().probe, None);
+    }
+
+    #[test]
+    fn rotation_drops_probe_addresses_with_the_release_lines() {
+        let path = tmp_ledger("rot_probe");
+        let mut claim = rec("a", "w0", 1, LeaseAction::Claim, 100);
+        claim.probe = Some("127.0.0.1:1234".to_string());
+        append(&path, &claim).unwrap();
+        append(&path, &rec("a", "w0", 1, LeaseAction::Release, 100)).unwrap();
+        assert!(rotate(&path, 1).unwrap());
+        let raw = std::fs::read_to_string(&path).unwrap();
+        assert!(!raw.contains("probe"), "compacted lines carry no probe: {raw}");
+        let t = LeaseTable::load(&path).unwrap();
+        assert_eq!(t.state("a").unwrap().probe, None);
+        assert_eq!(t.max_token("a"), 1);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -306,6 +306,12 @@ pub struct SweepSpec {
     /// off; `Some(0)` binds an ephemeral port. Pure telemetry — like
     /// the TTL, never part of run identity.
     pub probe_port: Option<u16>,
+    /// Leak-detector regression window in seconds (`[sweep]
+    /// mem_window_secs`; `--mem-window-secs` overrides). The probe's
+    /// `/mem` endpoint fits an RSS slope over this much history — widen
+    /// it to catch slow creep across a long sweep, narrow it to react
+    /// to a fast leak. Telemetry only, never part of run identity.
+    pub mem_window_secs: f64,
 }
 
 impl SweepSpec {
@@ -342,6 +348,13 @@ impl SweepSpec {
                 p if p < 0.0 => None,
                 p if p <= u16::MAX as f32 => Some(p as u16),
                 p => bail!("sweep.probe_port {p} out of range (0-65535)"),
+            },
+            mem_window_secs: match cfg.f32_or(
+                "sweep.mem_window_secs",
+                crate::obs::http::DEFAULT_MEM_WINDOW_SECS as f32,
+            )? {
+                w if w > 0.0 => w as f64,
+                w => bail!("sweep.mem_window_secs {w} must be positive"),
             },
         };
         // Fail early on anything the executor would reject mid-sweep.
@@ -492,6 +505,18 @@ mod tests {
         assert_eq!(on("probe_port = 0").unwrap().probe_port, Some(0), "0 = ephemeral");
         assert_eq!(on("probe_port = 8791").unwrap().probe_port, Some(8791));
         assert!(on("probe_port = 70000").is_err(), "beyond u16 must fail early");
+    }
+
+    #[test]
+    fn mem_window_knob_defaults_to_the_probe_window_and_rejects_nonpositive() {
+        assert_eq!(smoke().mem_window_secs, crate::obs::http::DEFAULT_MEM_WINDOW_SECS);
+        let on = |line: &str| {
+            Config::parse(&format!("[sweep]\nbackend = \"mock\"\n{line}"))
+                .and_then(|c| SweepSpec::from_config(&c))
+        };
+        assert_eq!(on("mem_window_secs = 30").unwrap().mem_window_secs, 30.0);
+        assert!(on("mem_window_secs = 0").is_err(), "zero-width window is meaningless");
+        assert!(on("mem_window_secs = -5").is_err());
     }
 
     #[test]

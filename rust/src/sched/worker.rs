@@ -455,6 +455,12 @@ pub struct FleetOptions {
     /// probe (`--steal-wait-ms`). 0 = shard opportunistically; CI sets it
     /// high to *guarantee* a stolen probe in the determinism proof.
     pub steal_wait_ms: u64,
+    /// This worker's probe-server address (`host:port`), embedded in its
+    /// lease claim/reclaim/renew records so a fleet aggregator
+    /// (`addax fleet-status`) can federate live `/runs` state. `None`
+    /// (unprobed worker) emits no `probe` key — ledger bytes are
+    /// unchanged from the pre-probe era.
+    pub probe_addr: Option<String>,
 }
 
 impl FleetOptions {
@@ -470,6 +476,7 @@ impl FleetOptions {
             rotate_after_lines: 512,
             no_steal: false,
             steal_wait_ms: 0,
+            probe_addr: None,
         }
     }
 
@@ -515,6 +522,7 @@ impl Heartbeat {
         clock: LeaseClock,
         stalled: bool,
         probe: Option<Arc<crate::obs::RunProbe>>,
+        probe_addr: Option<String>,
     ) -> Self {
         let stop = Arc::new(AtomicBool::new(false));
         if stalled {
@@ -560,6 +568,10 @@ impl Heartbeat {
                         seq,
                         action: LeaseAction::Renew,
                         expires_ms: clock.now_ms() + ttl_ms,
+                        // Re-advertised on every beat: an aggregator that
+                        // only sees a rotated ledger tail still learns
+                        // where this holder's probe lives.
+                        probe: probe_addr.clone(),
                     },
                 )
                 .ok();
@@ -629,6 +641,7 @@ pub fn fleet_commit(
             seq: 0, // replay maxes seq, so 0 preserves the renewal count
             action: LeaseAction::Release,
             expires_ms: lease::now_ms(),
+            probe: None,
         },
     )?;
     Ok(true)
@@ -853,6 +866,7 @@ pub fn run_sweep_fleet(
                 seq: 0,
                 action: if is_reclaim { LeaseAction::Reclaim } else { LeaseAction::Claim },
                 expires_ms: clock.now_ms() + ttl,
+                probe: fleet.probe_addr.clone(),
             },
         )?;
         // Confirm the claim won (equal tokens: first appender wins).
@@ -873,6 +887,7 @@ pub fn run_sweep_fleet(
                     seq: 0,
                     action: LeaseAction::Release,
                     expires_ms: clock.now_ms(),
+                    probe: None,
                 },
             )?;
             continue;
@@ -916,6 +931,7 @@ pub fn run_sweep_fleet(
             clock,
             stalled,
             probe.clone(),
+            fleet.probe_addr.clone(),
         );
         let ctx = RunCtx {
             ckpt_dir: Some(spec.ckpt_dir(&ckpt_root)),
@@ -988,6 +1004,7 @@ pub fn run_sweep_fleet(
                         seq: 0,
                         action: LeaseAction::Release,
                         expires_ms: clock.now_ms(),
+                        probe: None,
                     },
                 )?;
                 aborted.insert(spec.run_id.clone());

@@ -13,11 +13,12 @@ use std::path::PathBuf;
 
 use addax::config::Config;
 use addax::jsonlite::Json;
+use addax::obs::fleet::load_fleet;
 use addax::obs::{ProbeServer, StatusBoard};
 use addax::optim::OptSpec;
 use addax::sched::{
-    execute_run, execute_run_with, run_sweep, run_sweep_fleet, Backend, FleetOptions, RunCtx,
-    RunSpec, SweepManifest, SweepOptions, SweepSpec,
+    execute_run, execute_run_with, lease, leases_path, run_sweep, run_sweep_fleet, Backend,
+    FleetOptions, LeaseTable, RunCtx, RunSpec, SweepManifest, SweepOptions, SweepSpec,
 };
 
 fn fresh_dir(tag: &str) -> PathBuf {
@@ -293,6 +294,56 @@ fn probe_abort_releases_the_lease_and_a_second_worker_finishes_byte_identically(
     let bytes = std::fs::read_to_string(&o.manifest_path).unwrap();
     assert_eq!(bytes, control_bytes, "an aborted+resumed fleet must match the control bytes");
     assert!(!bytes.contains("abort"));
+    std::fs::remove_dir_all(&ctrl).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fleet_status_reconstructs_a_finished_probed_fleet_consistently() {
+    let ctrl = fresh_dir("fs_ctrl");
+    run_sweep(fleet_grid(), &opts(&ctrl)).unwrap();
+    let control_bytes = std::fs::read_to_string(opts(&ctrl).manifest_path).unwrap();
+
+    // Worker 0 runs the whole grid with a probe server, advertising its
+    // address in every lease record; worker 1 joins after the drain and
+    // finds nothing claimable.
+    let dir = fresh_dir("fs");
+    let o = opts(&dir);
+    let board = StatusBoard::new();
+    let server = ProbeServer::start(board.clone(), 0).unwrap();
+    let mut o0 = o.clone();
+    o0.probe = Some(board);
+    let mut f0 = FleetOptions::new("w0", 2_000);
+    f0.probe_addr = Some(server.addr().to_string());
+    let exit = run_sweep_fleet(fleet_grid(), &o0, &f0).unwrap();
+    assert!(exit.crashed.is_none());
+    assert_eq!(exit.summary.executed, fleet_grid().len());
+    let exit2 = run_sweep_fleet(fleet_grid(), &o, &FleetOptions::new("w1", 2_000)).unwrap();
+    assert_eq!(exit2.summary.executed, 0, "{}", exit2.summary.line());
+
+    // The aggregator's consistency bar over a drained fleet: every run
+    // it can see is exactly one done manifest row, zero live leases.
+    let mut view = load_fleet(&o.manifest_path, lease::now_ms(), 250).unwrap();
+    view.federate(std::time::Duration::from_millis(200));
+    let manifest = SweepManifest::load(&o.manifest_path).unwrap();
+    assert_eq!(view.done, manifest.len(), "every manifest row must read back as done");
+    assert_eq!(view.runs.len(), manifest.len(), "no phantom runs beyond the manifest");
+    assert_eq!((view.active, view.expired), (0, 0), "a drained fleet holds no live lease");
+    for r in &view.runs {
+        assert_eq!(r.state, "done", "{}", r.run_id);
+        assert!(r.best_val.is_some(), "{} must carry the row's best_val", r.run_id);
+    }
+    for w in &view.workers {
+        assert!(w.held.is_empty(), "{} still holds {:?}", w.worker, w.held);
+    }
+    // The ledger agrees with the reconstruction...
+    let leases = LeaseTable::load(&leases_path(&o.manifest_path)).unwrap();
+    assert!(leases.all_released());
+    // ...and the probed, advertised, aggregated fleet still compacts to
+    // the unprobed control's bytes: observability moved nothing.
+    let bytes = std::fs::read_to_string(&o.manifest_path).unwrap();
+    assert_eq!(bytes, control_bytes, "a probed fleet must match the control bytes");
+    drop(server);
     std::fs::remove_dir_all(&ctrl).ok();
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -240,6 +240,7 @@ fn zombie_commit_is_fenced_rejected_and_logged_never_merged() {
         seq: 0,
         action,
         expires_ms: lease::now_ms().saturating_sub(10_000),
+        probe: None,
     };
     lease::append(&lease_path, &stale(LeaseAction::Claim)).unwrap();
     let table = LeaseTable::load(&lease_path).unwrap();
@@ -258,6 +259,7 @@ fn zombie_commit_is_fenced_rejected_and_logged_never_merged() {
             seq: 0,
             action: LeaseAction::Reclaim,
             expires_ms: lease::now_ms() + 60_000,
+            probe: None,
         },
     )
     .unwrap();
@@ -381,6 +383,7 @@ fn racing_claims_grant_exactly_one_winner_per_run() {
                             seq: 0,
                             action: LeaseAction::Claim,
                             expires_ms: lease::now_ms() + 60_000,
+                            probe: None,
                         },
                     )
                     .unwrap();
@@ -489,6 +492,7 @@ fn rotation_under_racing_appenders_keeps_tokens_monotonic() {
                                     seq: 0,
                                     action: LeaseAction::Claim,
                                     expires_ms: lease::now_ms() + 60_000,
+                                    probe: None,
                                 },
                             )
                             .unwrap();
@@ -523,6 +527,7 @@ fn rotation_under_racing_appenders_keeps_tokens_monotonic() {
                                     seq: 0,
                                     action: LeaseAction::Release,
                                     expires_ms: lease::now_ms(),
+                                    probe: None,
                                 },
                             )
                             .unwrap();
